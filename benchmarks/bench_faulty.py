@@ -1,0 +1,62 @@
+"""Paper §III-G analogue: an apparently-faulty node (lac-417) — extreme QoS
+degradation in its clique, but stable global medians (claim C4)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+from repro.core.modes import AsyncMode
+from repro.runtime.faults import faulty_node
+from repro.runtime.simulator import SimConfig, Simulator
+
+from benchmarks.common import emit, save_json
+
+FIELDS = ("simstep_period", "simstep_latency", "walltime_latency",
+          "delivery_failure_rate", "delivery_clumpiness")
+
+
+def _stats(res, exclude=()):
+    out = {}
+    pids = [p for p in res.qos_by_process if p not in exclude]
+    for f in FIELDS:
+        vals = [getattr(q, f) for p in pids for q in res.qos_by_process[p]]
+        out[f] = {"mean": float(np.mean(vals)), "median": float(np.median(vals))}
+    return out
+
+
+def run(n=256, faulty_pid=17):
+    app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1))
+    topo = app.topology()
+    cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.12,
+                    base_compute=15e-6, base_latency=550e-6,
+                    snapshot_warmup=0.03, snapshot_interval=0.02)
+
+    res_with = Simulator(app, cfg,
+                         faulty_node(faulty_pid, topo[faulty_pid],
+                                     compute_factor=30.0, link_factor=30.0)).run()
+    app2 = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1))
+    res_wo = Simulator(app2, cfg).run()
+
+    rows = {
+        "with_faulty": _stats(res_with),
+        "without_faulty": _stats(res_wo),
+        "faulty_node_itself": {
+            f: {"median": float(np.median(
+                [getattr(q, f) for q in res_with.qos_by_process[faulty_pid]] or [0]))}
+            for f in FIELDS},
+        "updates_faulty": res_with.updates[faulty_pid],
+        "updates_median": float(np.median(res_with.updates)),
+    }
+    for label, s in (("with", rows["with_faulty"]), ("without", rows["without_faulty"])):
+        emit(f"faulty/{label}", s["simstep_period"]["median"] * 1e6,
+             f"median_lat_steps={s['simstep_latency']['median']:.1f} "
+             f"mean_lat_steps={s['simstep_latency']['mean']:.1f}")
+    emit("faulty/node_itself",
+         rows["faulty_node_itself"]["simstep_period"]["median"] * 1e6,
+         f"updates={rows['updates_faulty']} vs median {rows['updates_median']:.0f}")
+    save_json("bench_faulty", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

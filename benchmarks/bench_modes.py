@@ -1,0 +1,103 @@
+"""Paper Figs 2/3 analogue: update rate + solution quality across
+asynchronicity modes and CPU counts (claims C1/C2).
+
+Weak scaling: problem size per process held constant.  Graph coloring =
+communication-intensive; digital evolution = computation-intensive.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.evo import EvoApp, EvoConfig
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+from repro.core.modes import AsyncMode
+from repro.runtime.simulator import SimConfig, Simulator
+
+from benchmarks.common import emit, save_json
+
+PROC_COUNTS = (1, 4, 16, 64)
+MODES = tuple(AsyncMode)
+REPLICATES = 2
+
+
+def run_graphcolor(replicates=REPLICATES, proc_counts=PROC_COUNTS):
+    rows = []
+    for n in proc_counts:
+        for mode in MODES:
+            rates, quals = [], []
+            for rep in range(replicates):
+                app = GraphColorApp(GraphColorConfig(
+                    n_processes=n, nodes_per_process=256, seed=rep))
+                cfg = SimConfig(mode=mode, duration=0.03, seed=rep,
+                                base_compute=15e-6, base_latency=100e-6,
+                                rolling_quantum=0.01, fixed_interval=0.01)
+                res = Simulator(app, cfg).run()
+                rates.append(res.update_rate_per_cpu)
+                quals.append(res.quality)
+            row = dict(bench="graphcolor", n=n, mode=int(mode),
+                       rate_per_cpu=float(np.mean(rates)),
+                       conflicts=float(np.mean(quals)))
+            rows.append(row)
+            emit(f"modes/graphcolor/n{n}/mode{int(mode)}",
+                 1e6 / row["rate_per_cpu"],
+                 f"rate={row['rate_per_cpu']:.0f}/s conflicts={row['conflicts']:.0f}")
+    return rows
+
+
+def run_evo(replicates=REPLICATES, proc_counts=PROC_COUNTS):
+    rows = []
+    for n in proc_counts:
+        for mode in MODES:
+            rates, quals = [], []
+            for rep in range(replicates):
+                app = EvoApp(EvoConfig(n_processes=n, cells_per_process=400,
+                                       exec_rounds=4, seed=rep))
+                cfg = SimConfig(mode=mode, duration=0.1, seed=rep,
+                                base_compute=1e-3, base_latency=100e-6,
+                                rolling_quantum=0.1, fixed_interval=0.05,
+                                stall_prob=0.02, stall_factor=6.0)
+                res = Simulator(app, cfg).run()
+                rates.append(res.update_rate_per_cpu)
+                quals.append(res.quality)
+            row = dict(bench="evo", n=n, mode=int(mode),
+                       rate_per_cpu=float(np.mean(rates)),
+                       fitness=float(np.mean(quals)))
+            rows.append(row)
+            emit(f"modes/evo/n{n}/mode{int(mode)}",
+                 1e6 / row["rate_per_cpu"],
+                 f"rate={row['rate_per_cpu']:.1f}/s fitness={row['fitness']:.3f}")
+    return rows
+
+
+def summarize(rows):
+    """Paper headline numbers: speedup mode3/mode0 and retention vs n=1."""
+    out = {}
+    for bench in ("graphcolor", "evo"):
+        sub = [r for r in rows if r["bench"] == bench]
+        if not sub:
+            continue
+        nmax = max(r["n"] for r in sub)
+        r0 = next(r for r in sub if r["n"] == nmax and r["mode"] == 0)
+        r3 = next(r for r in sub if r["n"] == nmax and r["mode"] == 3)
+        r1p = next(r for r in sub if r["n"] == 1 and r["mode"] == 3)
+        out[bench] = {
+            "n": nmax,
+            "speedup_mode3_vs_mode0": r3["rate_per_cpu"] / r0["rate_per_cpu"],
+            "retention_vs_single": r3["rate_per_cpu"] / r1p["rate_per_cpu"],
+        }
+    return out
+
+
+def run():
+    rows = run_graphcolor() + run_evo()
+    summary = summarize(rows)
+    save_json("bench_modes", {"rows": rows, "summary": summary})
+    for bench, s in summary.items():
+        emit(f"modes/{bench}/summary", 0.0,
+             f"speedup_x={s['speedup_mode3_vs_mode0']:.1f} "
+             f"retention={s['retention_vs_single']:.2f} at n={s['n']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Paper §III-C/D/E analogue: QoS vs compute intensity, intranode vs
+internode placement, and buffer sizing (threading-vs-processing analogue).
+
+Graph coloring with ONE simulation element per CPU — maximal communication
+intensity — so QoS is maximally sensitive to the manipulations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+from repro.core.modes import AsyncMode
+from repro.runtime.simulator import SimConfig, Simulator
+
+from benchmarks.common import emit, save_json
+
+WORK_UNITS = (0, 64, 4096, 262144, 16777216)
+
+
+def _qos_stats(res):
+    stats = {}
+    for field in ("simstep_period", "simstep_latency", "walltime_latency",
+                  "delivery_failure_rate", "delivery_clumpiness"):
+        vals = [getattr(q, field) for q in res.qos]
+        stats[field] = {"mean": float(np.mean(vals)) if vals else None,
+                        "median": float(np.median(vals)) if vals else None}
+    return stats
+
+
+def _run(work_units=0, latency=550e-6, buffer_capacity=64, duration=None,
+         n=2, seed=0):
+    app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1,
+                                         seed=seed))
+    step = 15e-6 + work_units * 35e-9
+    duration = duration or max(0.3, 300 * step)
+    cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=duration,
+                    base_compute=15e-6, work_units=work_units,
+                    base_latency=latency, buffer_capacity=buffer_capacity,
+                    snapshot_warmup=duration * 0.2,
+                    snapshot_interval=duration * 0.15, seed=seed)
+    return Simulator(app, cfg).run()
+
+
+def run_compute_sweep():
+    """More compute per update -> longer period, fewer simsteps of latency,
+    lower clumpiness (paper §III-C)."""
+    rows = []
+    for w in WORK_UNITS:
+        res = _run(work_units=w)
+        s = _qos_stats(res)
+        rows.append(dict(treatment="work_units", value=w, **s))
+        emit(f"qos/work{w}", s["simstep_period"]["median"] * 1e6,
+             f"lat_steps={s['simstep_latency']['median']:.1f} "
+             f"clump={s['delivery_clumpiness']['median']:.2f} "
+             f"fail={s['delivery_failure_rate']['median']:.3f}")
+    return rows
+
+
+def run_placement():
+    """Intranode (~7us link) vs internode (~550us link), paper §III-D."""
+    rows = []
+    for name, lat in (("intranode", 7e-6), ("internode", 550e-6)):
+        res = _run(latency=lat)
+        s = _qos_stats(res)
+        rows.append(dict(treatment="placement", value=name, **s))
+        emit(f"qos/{name}", s["simstep_period"]["median"] * 1e6,
+             f"wall_lat_us={s['walltime_latency']['median']*1e6:.1f} "
+             f"lat_steps={s['simstep_latency']['median']:.2f} "
+             f"clump={s['delivery_clumpiness']['median']:.2f}")
+    return rows
+
+
+def run_buffer_sizing():
+    """Small send buffers drop messages under pressure (the paper's
+    threading-vs-processing / buffer-stability observation)."""
+    rows = []
+    for cap in (2, 64):
+        res = _run(buffer_capacity=cap, latency=550e-6)
+        s = _qos_stats(res)
+        s["total_drop_rate"] = res.delivery_failure_rate
+        rows.append(dict(treatment="buffer", value=cap, **s))
+        emit(f"qos/buffer{cap}", s["simstep_period"]["median"] * 1e6,
+             f"fail={res.delivery_failure_rate:.3f}")
+    return rows
+
+
+def run():
+    rows = run_compute_sweep() + run_placement() + run_buffer_sizing()
+    save_json("bench_qos", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

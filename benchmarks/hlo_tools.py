@@ -1,0 +1,144 @@
+"""HLO inspection helpers for the perf hillclimb: attribute collective bytes
+to model components via op metadata, and diff before/after changes.
+
+Run: PYTHONPATH=src python -m benchmarks.hlo_tools --arch X --shape Y
+(sets XLA_FLAGS itself; run as its own process).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import re
+from collections import defaultdict
+
+_COLL_LINE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\((?P<operands>[^)]*)\)")
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([0-9,]*)\]")
+_META_RE = re.compile(r'op_name="([^"]+)"')
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2,
+                "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _bytes(segment):
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_IOTA = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9,{} ]+)\}\}")
+
+
+def group_spans_pods(line: str, pod_stride: int = 256) -> bool:
+    """True if the collective's replica groups contain devices from more
+    than one pod (device id // pod_stride differs within a group).
+
+    Reconstructs groups from the HLO iota notation
+    ``[G,S]<=[dims]T(perm)`` (or an explicit group list).
+    """
+    import numpy as np
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(g, s)
+        pods = groups // pod_stride
+        return bool((pods != pods[:, :1]).any())
+    m = _GROUPS_LIST.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "").split(",")
+                   if x.strip()]
+            if len({i // pod_stride for i in ids}) > 1:
+                return True
+        return False
+    return False
+
+
+def _bucket(op_name: str) -> str:
+    for key in ("moe", "router", "mamba", "mlstm", "slstm", "attention",
+                "bkgqs", "bqkgd", "bskd", "flash", "unembed", "logsumexp",
+                "embed", "rms", "adamw", "mul", "transpose", "checkpoint"):
+        if key in op_name.lower():
+            return key
+    parts = op_name.split("/")
+    return parts[-1][:30] if parts else "?"
+
+
+def attribute_collectives(hlo_text: str, top: int = 25):
+    """(kind, source-bucket) -> bytes, sorted desc."""
+    agg = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE.search(line)
+        if not m:
+            continue
+        payload = max(_bytes(m.group("result")), _bytes(m.group("operands")))
+        meta = _META_RE.search(line)
+        src = _bucket(meta.group(1)) if meta else "?"
+        full = (_META_RE.search(line).group(1)[-80:] if meta else "?")
+        agg[(m.group("kind"), src, full)] += payload
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", type=int, default=0)
+    ap.add_argument("--compressor", default=None)
+    ap.add_argument("--periods", type=int, default=1,
+                    help="scan periods to compile (small = fast)")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--extra", default="",
+                    help="cfg overrides k=v,k=v (ints/floats/bools)")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch import dryrun as dr
+    from repro.models.transformer import block_specs
+
+    cfg = get_config(args.arch)
+    period = len(block_specs(cfg))
+    extra = {"num_layers": period * args.periods}
+    for kv in filter(None, args.extra.split(",")):
+        k, v = kv.split("=")
+        extra[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.lstrip("-").isdigit() else v)
+
+    lowered, skip = dr.build_lowered(args.arch, args.shape, args.multi_pod,
+                                     args.mode, args.compressor,
+                                     extra_cfg=extra)
+    if skip:
+        print("skip:", skip)
+        return
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    total = 0.0
+    print(f"# {args.arch}/{args.shape} periods={args.periods} "
+          f"mode={args.mode} — top collective sources (per-chip bytes)")
+    for (kind, src, full), b in attribute_collectives(text, args.top):
+        total += b
+        print(f"{b/1e6:10.1f} MB  {kind:20s} {src:12s} {full}")
+    print(f"{total/1e6:10.1f} MB  TOTAL (top {args.top})")
+
+
+if __name__ == "__main__":
+    main()

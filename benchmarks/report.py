@@ -1,0 +1,94 @@
+"""Generate markdown tables for EXPERIMENTS.md from dry-run / roofline
+artifacts.
+
+Run: PYTHONPATH=src python -m benchmarks.report [--section dryrun|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _load(dirname):
+    d = os.path.join(HERE, "results", dirname)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            out.append(json.load(open(os.path.join(d, f))))
+    return out
+
+
+def _fmt(x, unit=""):
+    if x is None:
+        return "—"
+    if x >= 1e12:
+        return f"{x/1e12:.2f}T{unit}"
+    if x >= 1e9:
+        return f"{x/1e9:.2f}G{unit}"
+    if x >= 1e6:
+        return f"{x/1e6:.2f}M{unit}"
+    if x >= 1e3:
+        return f"{x/1e3:.2f}k{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def dryrun_table():
+    rows = _load("dryrun")
+    base = [r for r in rows if not r.get("tag")]
+    print("| arch | shape | mesh | status | HLO GFLOP/chip* | coll bytes/chip | args GB/chip | lower+compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in base:
+        if r["status"] == "ok":
+            coll = sum(r.get("collectives", {}).values())
+            args_b = (r.get("memory") or {}).get("argument_bytes")
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{r['flops']/1e9:.1f} | {_fmt(coll, 'B')} | "
+                  f"{args_b/1e9 if args_b else float('nan'):.2f} | "
+                  f"{r.get('lower_s', 0)}+{r.get('compile_s', 0)} |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:40]
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{r['status']} ({reason}) | — | — | — | — |")
+    ok = sum(r["status"] == "ok" for r in base)
+    sk = sum(r["status"] == "skipped" for r in base)
+    er = sum(r["status"] == "error" for r in base)
+    print(f"\n**{ok} compiled, {sk} skipped (documented), {er} errors.** "
+          "*HLO flops count scanned loop bodies once (see roofline "
+          "two-point probe for exact per-step totals).")
+
+
+def roofline_table(tag=None):
+    rows = [r for r in _load("roofline")
+            if (r.get("tag") or None) == tag or (tag is None and not r.get("tag"))]
+    rows = _load("roofline")
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "roofline frac | useful-FLOPs ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+              f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+              f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+              f"{(r['useful_flops_ratio'] or 0):.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["dryrun", "roofline", "all"])
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        print("### Dry-run table\n")
+        dryrun_table()
+        print()
+    if args.section in ("roofline", "all"):
+        print("### Roofline table\n")
+        roofline_table()
+
+
+if __name__ == "__main__":
+    main()

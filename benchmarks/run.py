@@ -1,0 +1,132 @@
+"""Benchmark harness — one section per paper table/figure + roofline summary.
+
+  modes         — paper Figs 2/3 (update rate + solution quality vs mode/scale)
+  qos           — paper §III-C/D (QoS vs compute intensity, placement, buffers)
+  weak_scaling  — paper §III-F (QoS stability 16->64->256 procs)
+  faulty        — paper §III-G (faulty node, stable medians)
+  kernels       — Pallas kernel oracle microbench (CPU wall time)
+  roofline      — summary table from dry-run artifacts (if generated)
+
+CSV convention: ``name,us_per_call,derived``.
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def bench_kernels():
+    import jax
+    from repro.kernels.decode_attention import decode_attention_ref
+    from repro.kernels.flash_attention import flash_attention_ref
+    from repro.kernels.quantize import quantize_ref
+    from repro.kernels.topk_compress import topk_compress_ref
+    from benchmarks.common import emit
+
+    key = jax.random.PRNGKey(0)
+
+    def timeit(fn, *args, n=5):
+        jax.tree.flatten(fn(*args))[0][0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = fn(*args)
+            jax.tree.flatten(r)[0][0].block_until_ready()
+        return (time.perf_counter() - t0) / n * 1e6
+
+    q = jax.random.normal(key, (4, 2, 512, 64))
+    k = jax.random.normal(key, (4, 512, 64))
+    fa = jax.jit(lambda q, k: flash_attention_ref(q, k, k))
+    emit("kernels/flash_attention_ref/cpu", timeit(fa, q, k),
+         "S=512 hd=64 (oracle wall time; TPU kernel validated in tests)")
+
+    qd = jax.random.normal(key, (8, 4, 64))
+    kd = jax.random.normal(key, (8, 4096, 64))
+    da = jax.jit(lambda q, k: decode_attention_ref(q, k, k))
+    emit("kernels/decode_attention_ref/cpu", timeit(da, qd, kd), "S=4096")
+
+    x = jax.random.normal(key, (64, 1024))
+    tk = jax.jit(lambda x: topk_compress_ref(x, 16))
+    emit("kernels/topk_ref/cpu", timeit(tk, x), "64x1024 k=16")
+    qz = jax.jit(quantize_ref)
+    emit("kernels/quantize_ref/cpu", timeit(qz, x), "64x1024 int8")
+
+    from repro.kernels.mlstm_attention import mlstm_attention_ref
+    from repro.kernels.mamba_scan import mamba_scan_ref
+    import jax.numpy as jnp
+    qm = jax.random.normal(key, (4, 256, 64))
+    F = jnp.cumsum(jax.nn.log_sigmoid(jax.random.normal(key, (4, 256)) + 3), 1)
+    I = jax.random.normal(key, (4, 256)) * 0.5
+    ml = jax.jit(lambda q, F, I: mlstm_attention_ref(q, q * 0.125, q, F, I))
+    emit("kernels/mlstm_ref/cpu", timeit(ml, qm, F, I), "S=256 hd=64")
+    xs = jax.random.normal(key, (2, 128, 64)) * 0.5
+    dts = jax.nn.softplus(jax.random.normal(key, (2, 128, 64)) - 1)
+    Bs = jax.random.normal(key, (2, 128, 8)) * 0.5
+    A = -jnp.exp(jax.random.normal(key, (64, 8)) * 0.3)
+    ms = jax.jit(lambda x, dt, B, A: mamba_scan_ref(x, dt, B, B, A))
+    emit("kernels/mamba_scan_ref/cpu", timeit(ms, xs, dts, Bs, A),
+         "S=128 di=64 N=8")
+    return []
+
+
+def bench_roofline_summary():
+    from benchmarks.common import emit
+    rdir = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "results", "roofline")
+    if not os.path.isdir(rdir):
+        print("# roofline artifacts not found — run benchmarks/roofline.py")
+        return []
+    rows = []
+    for f in sorted(os.listdir(rdir)):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(rdir, f)))
+        rows.append(r)
+        tag = f"/{r['tag']}" if r.get("tag") else ""
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dominant={r['dominant']} frac={r['roofline_fraction']:.2f} "
+             f"c/m/x_ms={r['compute_s']*1e3:.1f}/{r['memory_s']*1e3:.1f}/"
+             f"{r['collective_s']*1e3:.1f}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller proc counts / fewer replicates")
+    ap.add_argument("--only", default=None,
+                    help="modes|qos|weak|faulty|kernels|roofline")
+    args = ap.parse_args()
+
+    sections = {}
+    if args.only in (None, "modes"):
+        from benchmarks import bench_modes
+        if args.quick:
+            rows = (bench_modes.run_graphcolor(replicates=1, proc_counts=(1, 16))
+                    + bench_modes.run_evo(replicates=1, proc_counts=(1, 16)))
+            sections["modes"] = {"rows": rows,
+                                 "summary": bench_modes.summarize(rows)}
+        else:
+            sections["modes"] = bench_modes.run()
+    if args.only in (None, "qos"):
+        from benchmarks import bench_qos
+        sections["qos"] = bench_qos.run()
+    if args.only in (None, "weak"):
+        from benchmarks import bench_weak_scaling
+        counts = (16, 64) if args.quick else (16, 64, 256)
+        sections["weak"] = bench_weak_scaling.run(proc_counts=counts)
+    if args.only in (None, "faulty"):
+        from benchmarks import bench_faulty
+        sections["faulty"] = bench_faulty.run(n=64 if args.quick else 256)
+    if args.only in (None, "kernels"):
+        sections["kernels"] = bench_kernels()
+    if args.only in (None, "roofline"):
+        sections["roofline"] = bench_roofline_summary()
+    print("# benchmark harness complete:", ", ".join(sections))
+
+
+if __name__ == "__main__":
+    main()

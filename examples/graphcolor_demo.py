@@ -1,0 +1,47 @@
+"""Paper reproduction demo: distributed graph coloring across all five
+asynchronicity modes (Table I), with the QoS metric suite.
+
+Run: PYTHONPATH=src python examples/graphcolor_demo.py
+"""
+import numpy as np
+
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+from repro.core.modes import AsyncMode
+from repro.runtime.faults import faulty_node
+from repro.runtime.simulator import SimConfig, Simulator
+
+
+def mode_comparison(n=16):
+    print(f"=== asynchronicity modes, {n} processes (weak scaling) ===")
+    print(f"{'mode':40s} {'rate/cpu':>10s} {'conflicts':>10s}")
+    for mode in AsyncMode:
+        app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=256))
+        res = Simulator(app, SimConfig(mode=mode, duration=0.03,
+                                       base_latency=100e-6,
+                                       rolling_quantum=0.01,
+                                       fixed_interval=0.01)).run()
+        print(f"{int(mode)}: {mode.description:37s} "
+              f"{res.update_rate_per_cpu:10.0f} {res.quality:10.0f}")
+
+
+def qos_with_faulty_node(n=16):
+    print(f"\n=== QoS with a faulty node (pid 5), {n} processes ===")
+    app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=64))
+    faults = faulty_node(5, app.topology()[5], 30.0, 30.0)
+    cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.6,
+                    snapshot_warmup=0.1, snapshot_interval=0.1,
+                    base_latency=100e-6)
+    res = Simulator(app, cfg, faults).run()
+    med = np.median([q.simstep_period for q in res.qos]) * 1e6
+    faulty = np.median([q.simstep_period
+                        for q in res.qos_by_process[5]]) * 1e6
+    print(f"  global median simstep period: {med:8.1f} us")
+    print(f"  faulty node simstep period:   {faulty:8.1f} us "
+          f"({faulty/med:.0f}x worse — yet the median holds)")
+    print(f"  updates: faulty={res.updates[5]}, "
+          f"median={np.median(res.updates):.0f}")
+
+
+if __name__ == "__main__":
+    mode_comparison()
+    qos_with_faulty_node()

@@ -1,0 +1,1 @@
+from repro.apps import evo, graphcolor  # noqa: F401

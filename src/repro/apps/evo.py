@@ -1,0 +1,162 @@
+"""Digital-evolution benchmark analogue (paper §II-A, DISHTINY-flavored).
+
+A compute-heavy artificial-life workload: each fragment hosts a toroidal
+grid of cells with genomes (fixed-length integer programs), resource levels,
+and neighbor interactions.  Per update every cell "executes" its genome for
+several rounds (vectorized integer arithmetic standing in for SignalGP
+interpretation — the compute-heavy part), collects resource, shares resource
+across fragment boundaries via best-effort channels, and reproduces into the
+weakest neighboring cell when its resource exceeds a threshold.
+
+Quality (the paper leaves open-ended-evolution quality undefined) is the mean
+genome fitness toward a fixed target pattern — monotone-improving, so
+fixed-time-budget comparisons across asynchronicity modes are meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.apps.graphcolor import _OPP, block_shape, proc_grid
+
+
+@dataclasses.dataclass(frozen=True)
+class EvoConfig:
+    n_processes: int = 4
+    cells_per_process: int = 3600      # paper: 3600 cells per process
+    genome_len: int = 16
+    exec_rounds: int = 8               # genome interpretation rounds/update
+    resource_inflow: float = 0.25
+    spawn_threshold: float = 1.0
+    share_frac: float = 0.1            # resource shared to each neighbor side
+    mutation_rate: float = 0.05
+    seed: int = 0
+
+
+class _Fragment:
+    def __init__(self, pid, cfg: EvoConfig, grid, block, self_wrap):
+        self.pid = pid
+        self.cfg = cfg
+        self.grid = grid
+        self.self_wrap = self_wrap
+        H, W = block
+        self.rng = np.random.default_rng((cfg.seed, pid))
+        self.genomes = self.rng.integers(0, 256, size=(H, W, cfg.genome_len),
+                                         dtype=np.int64)
+        self.resource = np.zeros((H, W))
+        self.target = np.arange(cfg.genome_len, dtype=np.int64) * 16 % 256
+        self.halo_res = {"n": np.zeros(W), "s": np.zeros(W),
+                         "w": np.zeros(H), "e": np.zeros(H)}
+
+    def neighbors(self) -> Dict[str, int]:
+        gh, gw = self.grid
+        r, c = divmod(self.pid, gw)
+        out = {}
+        if not self.self_wrap["ns"]:
+            out["n"] = ((r - 1) % gh) * gw + c
+            out["s"] = ((r + 1) % gh) * gw + c
+        if not self.self_wrap["ew"]:
+            out["w"] = r * gw + (c - 1) % gw
+            out["e"] = r * gw + (c + 1) % gw
+        return out
+
+    # -- the compute-heavy part ---------------------------------------------
+    def _execute_genomes(self):
+        """Vectorized 'interpretation': repeated integer mixing rounds."""
+        g = self.genomes
+        acc = np.zeros(g.shape[:2], dtype=np.int64)
+        state = g.sum(axis=-1)
+        for r in range(self.cfg.exec_rounds):
+            instr = g[..., r % self.cfg.genome_len]
+            state = (state * 6364136223846793005 + instr * 1442695040888963407
+                     ) & 0x7FFFFFFFFFFFFFFF
+            acc ^= state >> 17
+        return acc
+
+    def fitness(self) -> np.ndarray:
+        """Per-cell fitness in [0,1]: genome proximity to the target."""
+        diff = np.abs(self.genomes - self.target[None, None, :])
+        return 1.0 - diff.mean(axis=-1) / 128.0
+
+    def update(self, inbox: Dict[int, Optional[dict]]):
+        cfg = self.cfg
+        nbs = self.neighbors()
+        for d, nb in nbs.items():
+            payload = inbox.get(nb)
+            if payload is not None:
+                self.halo_res[d] = payload[_OPP[d]]
+
+        self._execute_genomes()  # compute-heavy interpretation step
+
+        fit = self.fitness()
+        self.resource += cfg.resource_inflow * fit
+
+        # resource sharing: diffuse with 4 neighbors (internal + halo)
+        r = self.resource
+        up = np.vstack([self.halo_res["n"][None], r[:-1]]) if not self.self_wrap["ns"] \
+            else np.vstack([r[-1:], r[:-1]])
+        down = np.vstack([r[1:], self.halo_res["s"][None]]) if not self.self_wrap["ns"] \
+            else np.vstack([r[1:], r[:1]])
+        left = np.hstack([self.halo_res["w"][:, None], r[:, :-1]]) if not self.self_wrap["ew"] \
+            else np.hstack([r[:, -1:], r[:, :-1]])
+        right = np.hstack([r[:, 1:], self.halo_res["e"][:, None]]) if not self.self_wrap["ew"] \
+            else np.hstack([r[:, 1:], r[:, :1]])
+        mean_nb = (up + down + left + right) / 4.0
+        self.resource = (1 - cfg.share_frac) * r + cfg.share_frac * mean_nb
+
+        # reproduction: spawners overwrite their weakest rolled neighbor
+        spawners = self.resource > cfg.spawn_threshold
+        if spawners.any():
+            fit_rolled = np.stack([np.roll(fit, s, axis=a)
+                                   for s, a in ((1, 0), (-1, 0), (1, 1), (-1, 1))])
+            weakest_dir = fit_rolled.argmin(axis=0)
+            shifts = [(1, 0), (-1, 0), (1, 1), (-1, 1)]
+            new_genomes = self.genomes.copy()
+            new_resource = self.resource.copy()
+            ys, xs = np.where(spawners)
+            H, W = fit.shape
+            for y, x in zip(ys, xs):
+                s, a = shifts[weakest_dir[y, x]]
+                # np.roll(fit, s, a)[y, x] == fit[y-s, x] — the weakest
+                # neighbor sits at the NEGATIVE offset
+                ty = (y - (s if a == 0 else 0)) % H
+                tx = (x - (s if a == 1 else 0)) % W
+                child = self.genomes[y, x].copy()
+                mut = self.rng.random(cfg.genome_len) < cfg.mutation_rate
+                child[mut] = np.clip(
+                    child[mut] + self.rng.integers(-16, 17, mut.sum()), 0, 255)
+                # nudge toward target occasionally (selection pressure proxy)
+                new_genomes[ty, tx] = child
+                new_resource[y, x] *= 0.5
+            self.genomes = new_genomes
+            self.resource = new_resource
+
+        edges = {"n": self.resource[0].copy(), "s": self.resource[-1].copy(),
+                 "w": self.resource[:, 0].copy(), "e": self.resource[:, -1].copy()}
+        return {nb: edges for nb in set(nbs.values())}
+
+
+class EvoApp:
+    def __init__(self, cfg: EvoConfig):
+        self.cfg = cfg
+        self.n_processes = cfg.n_processes
+        self.grid = proc_grid(cfg.n_processes)
+        self.block = block_shape(cfg.cells_per_process)
+        self.self_wrap = {"ns": self.grid[0] == 1, "ew": self.grid[1] == 1}
+
+    def make_fragments(self) -> List[_Fragment]:
+        return [_Fragment(i, self.cfg, self.grid, self.block, self.self_wrap)
+                for i in range(self.cfg.n_processes)]
+
+    def topology(self) -> Dict[int, List[int]]:
+        out = {}
+        for i in range(self.cfg.n_processes):
+            f = _Fragment.__new__(_Fragment)
+            f.pid, f.grid, f.self_wrap = i, self.grid, self.self_wrap
+            out[i] = sorted(set(f.neighbors().values()) - {i})
+        return out
+
+    def quality(self, fragments) -> float:
+        return float(np.mean([f.fitness().mean() for f in fragments]))

@@ -1,0 +1,228 @@
+"""Distributed graph coloring (Leith et al. 2012 WLAN channel selection) —
+the paper's communication-intensive benchmark (§II-B).
+
+Nodes live on a global toroidal grid, 4 neighbors, C colors.  Each update a
+node in conflict with any neighbor multiplicatively decays the probability of
+its current color (factor b), renormalizes, and resamples; conflict-free
+nodes keep their color.  Colors are exchanged with neighboring fragments via
+best-effort channels (halo rows/cols) — stale halos are simply used as-is.
+
+Two implementations share the same math:
+  - numpy fragments for the discrete-event runtime (fast on CPU);
+  - a jnp/shard_map SPMD step (``spmd_step``) using core.conduit — the
+    in-graph TPU form (used by tests and examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def proc_grid(n: int):
+    """Near-square factorization of the process count."""
+    a = int(math.sqrt(n))
+    while n % a:
+        a -= 1
+    return a, n // a
+
+
+def block_shape(nodes_per_proc: int):
+    a = int(math.sqrt(nodes_per_proc))
+    while nodes_per_proc % a:
+        a -= 1
+    return a, nodes_per_proc // a
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphColorConfig:
+    n_processes: int = 4
+    nodes_per_process: int = 2048
+    n_colors: int = 3
+    b: float = 0.1
+    seed: int = 0
+
+
+def _update_block(colors, probs, halo, b, rng):
+    """One CFL update (Leith et al.) on a (H,W) block given halo arrays.
+
+    Success (no conflicting neighbor): probability concentrates on the
+    current color.  Failure: the current color's probability decays and a
+    b-fraction of mass is redistributed over the other colors, then the node
+    resamples.  halo: {"n": (W,), "s": (W,), "w": (H,), "e": (H,)}.
+    Returns (colors, probs, conflict_mask).
+    """
+    C = probs.shape[-1]
+    up = np.vstack([halo["n"][None, :], colors[:-1]])
+    down = np.vstack([colors[1:], halo["s"][None, :]])
+    left = np.hstack([halo["w"][:, None], colors[:, :-1]])
+    right = np.hstack([colors[:, 1:], halo["e"][:, None]])
+    conflict = ((colors == up) | (colors == down)
+                | (colors == left) | (colors == right))
+
+    ok = ~conflict
+    probs[ok] = 0.0
+    probs[ok, colors[ok]] = 1.0
+
+    if conflict.any():
+        idx = np.where(conflict)
+        cur = colors[idx]
+        p = probs[idx]  # (k, C)
+        onehot = np.zeros_like(p)
+        onehot[np.arange(len(cur)), cur] = 1.0
+        p = (1 - b) * p + b * (1 - onehot) / (C - 1)
+        probs[idx] = p
+        # resample
+        u = rng.random(len(cur))
+        cdf = np.cumsum(p, axis=1)
+        new = (u[:, None] > cdf).sum(axis=1)
+        colors[idx] = new
+    return colors, probs, conflict
+
+
+class _Fragment:
+    def __init__(self, pid, cfg: GraphColorConfig, grid, block, self_wrap):
+        self.pid = pid
+        self.cfg = cfg
+        self.grid = grid
+        H, W = block
+        self.rng = np.random.default_rng((cfg.seed, pid))
+        self.colors = self.rng.integers(0, cfg.n_colors, size=(H, W))
+        self.probs = np.full((H, W, cfg.n_colors), 1.0 / cfg.n_colors)
+        self.self_wrap = self_wrap  # {"ns": bool, "ew": bool}
+        # last-known halos (best-effort: start with own edges)
+        self.halo = {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
+                     "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
+
+    def neighbors(self) -> Dict[str, int]:
+        gh, gw = self.grid
+        r, c = divmod(self.pid, gw)
+        out = {}
+        if not self.self_wrap["ns"]:
+            out["n"] = ((r - 1) % gh) * gw + c
+            out["s"] = ((r + 1) % gh) * gw + c
+        if not self.self_wrap["ew"]:
+            out["w"] = r * gw + (c - 1) % gw
+            out["e"] = r * gw + (c + 1) % gw
+        return out
+
+    def update(self, inbox: Dict[int, Optional[np.ndarray]]):
+        nbs = self.neighbors()
+        # refresh halos from any fresh messages (stale otherwise)
+        for d, nb in nbs.items():
+            payload = inbox.get(nb)
+            if payload is not None:
+                self.halo[d] = payload[_OPP[d]]
+        if self.self_wrap["ns"]:
+            self.halo["n"] = self.colors[-1]
+            self.halo["s"] = self.colors[0]
+        if self.self_wrap["ew"]:
+            self.halo["w"] = self.colors[:, -1]
+            self.halo["e"] = self.colors[:, 0]
+
+        self.colors, self.probs, _ = _update_block(
+            self.colors, self.probs, self.halo, self.cfg.b, self.rng)
+
+        edges = {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
+                 "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
+        return {nb: edges for nb in set(nbs.values())}
+
+
+_OPP = {"n": "s", "s": "n", "w": "e", "e": "w"}
+
+
+class GraphColorApp:
+    def __init__(self, cfg: GraphColorConfig):
+        self.cfg = cfg
+        self.n_processes = cfg.n_processes
+        self.grid = proc_grid(cfg.n_processes)
+        self.block = block_shape(cfg.nodes_per_process)
+        self.self_wrap = {"ns": self.grid[0] == 1, "ew": self.grid[1] == 1}
+
+    def make_fragments(self) -> List[_Fragment]:
+        return [_Fragment(i, self.cfg, self.grid, self.block, self.self_wrap)
+                for i in range(self.cfg.n_processes)]
+
+    def topology(self) -> Dict[int, List[int]]:
+        out = {}
+        for i in range(self.cfg.n_processes):
+            f = _Fragment.__new__(_Fragment)
+            f.pid, f.grid, f.self_wrap = i, self.grid, self.self_wrap
+            out[i] = sorted(set(f.neighbors().values()) - {i})
+        return out
+
+    def quality(self, fragments) -> float:
+        """Exact remaining conflict count on the assembled global grid."""
+        gh, gw = self.grid
+        H, W = self.block
+        full = np.zeros((gh * H, gw * W), dtype=int)
+        for f in fragments:
+            r, c = divmod(f.pid, gw)
+            full[r * H:(r + 1) * H, c * W:(c + 1) * W] = f.colors
+        conflicts = ((full == np.roll(full, 1, 0)).sum()
+                     + (full == np.roll(full, 1, 1)).sum())
+        return float(conflicts)
+
+
+# ---------------------------------------------------------------------------
+# SPMD in-graph version (shard_map + Conduit) — the TPU-native form
+# ---------------------------------------------------------------------------
+def jnp_update_block(colors, probs, halo, b, key):
+    """jnp twin of ``_update_block`` (same math, vectorized full-block)."""
+    import jax
+    import jax.numpy as jnp
+
+    H, W = colors.shape
+    up = jnp.concatenate([halo["n"][None, :], colors[:-1]], 0)
+    down = jnp.concatenate([colors[1:], halo["s"][None, :]], 0)
+    left = jnp.concatenate([halo["w"][:, None], colors[:, :-1]], 1)
+    right = jnp.concatenate([colors[:, 1:], halo["e"][:, None]], 1)
+    conflict = ((colors == up) | (colors == down)
+                | (colors == left) | (colors == right))
+
+    C = probs.shape[-1]
+    onehot = jax.nn.one_hot(colors, C)
+    # success: concentrate on current color
+    success_p = onehot
+    # failure: decay + redistribute a b-fraction over the other colors
+    fail_p = (1 - b) * probs + b * (1 - onehot) / (C - 1)
+    new_probs = jnp.where(conflict[..., None], fail_p, success_p)
+
+    u = jax.random.uniform(key, (H, W, 1))
+    cdf = jnp.cumsum(new_probs, axis=-1)
+    sampled = (u > cdf).sum(-1)
+    new_colors = jnp.where(conflict, sampled, colors)
+    return new_colors, new_probs, conflict
+
+
+def spmd_step(state, row_conduit, col_conduit, b, flush=None):
+    """One best-effort SPMD update for use inside shard_map over a 2-D mesh.
+
+    state: {"colors","probs","bufs_row","bufs_col","key","step"} — each
+    device holds one (H,W) block; halos travel over mesh-axis conduits with
+    the conduit's asynchronicity-mode semantics.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    colors, probs = state["colors"], state["probs"]
+    # publish edges; conduits deliver per their mode (fresh/stale/never)
+    row_payload = jnp.stack([colors[0], colors[-1]])       # my n/s edges
+    col_payload = jnp.stack([colors[:, 0], colors[:, -1]])  # my w/e edges
+    rec_row, bufs_row = row_conduit.exchange(row_payload, state["bufs_row"], flush=flush)
+    rec_col, bufs_col = col_conduit.exchange(col_payload, state["bufs_col"], flush=flush)
+    halo = {
+        "n": rec_row["north"][1],  # north neighbor's south edge
+        "s": rec_row["south"][0],
+        "w": rec_col["west"][1],
+        "e": rec_col["east"][0],
+    }
+    key, sub = jax.random.split(state["key"])
+    new_colors, new_probs, conflict = jnp_update_block(colors, probs, halo, b, sub)
+    return {
+        "colors": new_colors, "probs": new_probs,
+        "bufs_row": bufs_row, "bufs_col": bufs_col,
+        "key": key, "step": state["step"] + 1,
+    }, conflict.sum()

@@ -1,0 +1,121 @@
+"""Sharded checkpointing with elastic restore.
+
+Local-failure/local-recovery-friendly design (paper §I discussion):
+  - atomic directory commit (write to tmp, rename) — a crash mid-save never
+    corrupts the latest checkpoint;
+  - the manifest stores the flattened param paths + shapes, so restore can
+    target a DIFFERENT mesh: leaves are device_put with the *new* sharding
+    (elastic scaling across pod counts);
+  - background-thread saves keep the train loop running (best-effort
+    persistence off the critical path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16/float8 numpy dtypes)
+import numpy as np
+
+
+def _np_dtype(name: str):
+    """Resolve a dtype string, including ml_dtypes extension types."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, state, step: int, blocking: bool = True):
+    """Serialize a pytree to ``ckpt_dir/step_<k>`` atomically."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    # snapshot to host memory synchronously (cheap), write in background
+    flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+
+    def _write():
+        os.makedirs(tmp, exist_ok=True)
+        # npz can't serialize ml_dtypes (bf16/fp8): store raw byte views and
+        # record true dtypes in the manifest
+        raw = {k: np.atleast_1d(v).view(np.uint8).reshape(-1)
+               for k, v in flat.items()}
+        np.savez(os.path.join(tmp, "arrays.npz"), **raw)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree or eval_shape tree).
+
+    ``shardings``: optional matching pytree of NamedShardings for the TARGET
+    mesh — this is the elastic-rescale path (checkpoint written on one mesh,
+    restored onto another).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {}
+        for k in z.files:
+            meta = manifest["leaves"][k]
+            arrays[k] = z[k].view(_np_dtype(meta["dtype"])).reshape(meta["shape"])
+
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(flat_like))
+    out = []
+    for (pth, leaf), shard in zip(flat_like, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+        arr = arrays[key]
+        expect = tuple(leaf.shape)
+        assert tuple(arr.shape) == expect, (key, arr.shape, expect)
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None else
+                   jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    steps = sorted(s for s in (latest_step(ckpt_dir),) if s is not None)
+    if not os.path.isdir(ckpt_dir):
+        return
+    all_steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in all_steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,26 @@
+"""Architecture registry — importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_configs,
+    register,
+    shape_applicable,
+)
+
+# importing each module registers its CONFIG
+from repro.configs import (  # noqa: F401
+    dbrx_132b,
+    deepseek_moe_16b,
+    jamba_v0p1_52b,
+    llava_next_mistral_7b,
+    minitron_8b,
+    musicgen_large,
+    qwen2_1p5b,
+    qwen25_3b,
+    qwen3_0p6b,
+    xlstm_125m,
+)
+
+ARCHS = list_configs()

@@ -1,0 +1,5 @@
+# The paper's primary contribution: best-effort communication as a
+# first-class JAX feature — asynchronicity modes, staleness-buffered
+# conduits, best-effort gradient collectives, and the QoS metric suite.
+from repro.core import collectives, conduit, modes, qos  # noqa: F401
+from repro.core.modes import AsyncMode  # noqa: F401

@@ -1,0 +1,95 @@
+"""Quality-of-service metric suite (paper §II-D), computed from counter
+snapshots taken before/after an unimpeded observation window.
+
+Counters mirror the paper's Inlet/Outlet instrumentation:
+  update_count           simulation updates completed
+  touch_count            round-trip touch counter (+2 per completed round trip)
+  attempted_send_count   messages pushed toward a duct
+  successful_send_count  messages accepted by the duct (buffer not full)
+  laden_pull_count       pull attempts that retrieved >= 1 fresh message
+  message_count          messages received
+  pull_attempt_count     pull attempts
+  wall_time              seconds
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Counters:
+    update_count: int = 0
+    touch_count: int = 0
+    attempted_send_count: int = 0
+    successful_send_count: int = 0
+    laden_pull_count: int = 0
+    message_count: int = 0
+    pull_attempt_count: int = 0
+    wall_time: float = 0.0
+
+    def copy(self) -> "Counters":
+        return dataclasses.replace(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class QosReport:
+    simstep_period: float          # seconds per update (lower is better)
+    simstep_latency: float         # updates per one-way delivery
+    walltime_latency: float        # seconds per one-way delivery
+    delivery_failure_rate: float   # fraction of sends dropped
+    delivery_clumpiness: float     # 1 - steadiness
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def simstep_period(before: Counters, after: Counters) -> float:
+    updates = after.update_count - before.update_count
+    wall = after.wall_time - before.wall_time
+    return wall / max(updates, 1)
+
+
+def simstep_latency(before: Counters, after: Counters) -> float:
+    """Updates elapsed per one-way message delivery.
+
+    The touch counter increments by two per completed round trip; if no
+    touches elapsed we make the paper's best-case assumption of one.
+    """
+    updates = after.update_count - before.update_count
+    touches = after.touch_count - before.touch_count
+    return updates / max(touches, 1)
+
+
+def walltime_latency(before: Counters, after: Counters) -> float:
+    return simstep_latency(before, after) * simstep_period(before, after)
+
+
+def delivery_failure_rate(before: Counters, after: Counters) -> float:
+    attempted = after.attempted_send_count - before.attempted_send_count
+    successful = after.successful_send_count - before.successful_send_count
+    if attempted <= 0:
+        return 0.0
+    return 1.0 - successful / attempted
+
+
+def delivery_clumpiness(before: Counters, after: Counters) -> float:
+    """1 - steadiness.  Zero when messages arrive as an even stream (every
+    arrival in its own pull, or every pull laden once pigeonholed)."""
+    laden = after.laden_pull_count - before.laden_pull_count
+    messages = after.message_count - before.message_count
+    pulls = after.pull_attempt_count - before.pull_attempt_count
+    opportunities = min(messages, pulls)
+    if opportunities <= 0:
+        return 0.0
+    steadiness = laden / opportunities
+    return 1.0 - min(steadiness, 1.0)
+
+
+def report(before: Counters, after: Counters) -> QosReport:
+    return QosReport(
+        simstep_period=simstep_period(before, after),
+        simstep_latency=simstep_latency(before, after),
+        walltime_latency=walltime_latency(before, after),
+        delivery_failure_rate=delivery_failure_rate(before, after),
+        delivery_clumpiness=delivery_clumpiness(before, after),
+    )

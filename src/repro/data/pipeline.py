@@ -1,0 +1,59 @@
+"""Data pipeline: background prefetch + device placement with shardings.
+
+The generator thread stays one step ahead of the training loop (host compute
+overlaps device compute) — the data-side analogue of taking communication off
+the critical path.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Optional
+
+import jax
+
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import modality
+
+
+class Pipeline:
+    def __init__(self, data_cfg: DataConfig, model_cfg, start_step: int = 0,
+                 shardings: Optional[dict] = None, prefetch: int = 2):
+        self.source = SyntheticLM(data_cfg)
+        self.model_cfg = model_cfg
+        self.shardings = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _make_batch(self, step: int) -> dict:
+        batch = self.source.batch_for_step(step)
+        cfg = self.model_cfg
+        if cfg.frontend:
+            batch[modality.frontend_input_name(cfg)] = \
+                self.source.frontend_for_step(step, cfg.frontend_len, cfg.d_model)
+        if self.shardings:
+            batch = {k: jax.device_put(v, self.shardings.get(k))
+                     for k, v in batch.items()}
+        return batch
+
+    def _producer(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put(( step, self._make_batch(step)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+Each kernel subpackage has: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd public wrapper; interpret-mode on CPU), and
+``ref.py`` (pure-jnp oracle used by tests and the GSPMD dry-run path).
+
+Kernels: flash_attention (train/prefill hot spot), decode_attention
+(flash-decoding for 32k/500k KV), mlstm_attention (fused xLSTM sequence mix
+— the §Perf cell-A identified fix), mamba_scan (VMEM-resident selective
+scan — the cell-B identified fix), topk_compress + quantize (the
+best-effort gradient-compression encode path).
+"""
+from repro.kernels import (  # noqa: F401
+    decode_attention,
+    flash_attention,
+    mamba_scan,
+    mlstm_attention,
+    quantize,
+    topk_compress,
+)

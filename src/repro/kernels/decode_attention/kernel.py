@@ -1,0 +1,67 @@
+"""Flash-decoding attention — Pallas TPU kernel (phase 1 of 2).
+
+Decode attends one query token against a long KV cache.  The cache is split
+into chunks; each grid step computes a partial softmax (m, l, acc) for one
+chunk, fully parallel across chunks (this is what lets a 500k-token cache be
+sharded across devices/cores).  Phase 2 (ops.py) merges the per-chunk
+partials with the standard log-sum-exp combine — O(nc · hd), negligible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *, scale):
+    q = q_ref[0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0].astype(jnp.float32)          # (bc, hd)
+    v = v_ref[0].astype(jnp.float32)          # (bc, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, bc)
+    m = s.max(axis=-1, keepdims=True)          # (G, 1)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    acc = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (G, hd)
+    acc_ref[0, :, 0, :] = acc
+    m_ref[0, :, 0] = m[:, 0]
+    l_ref[0, :, 0] = l[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "interpret"))
+def decode_attention_partials(q, k, v, *, bc: int = 512, interpret: bool = False):
+    """q: (BK, G, hd); k, v: (BK, S, hd).
+    Returns partial (acc (BK,G,nc,hd), m (BK,G,nc), l (BK,G,nc))."""
+    BK, G, hd = q.shape
+    S = k.shape[1]
+    bc = min(bc, S)
+    assert S % bc == 0, (S, bc)
+    nc = S // bc
+    scale = hd ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(BK, nc),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, bc, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, bc, hd), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, 1, hd), lambda b, c: (b, 0, c, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((1, G, 1), lambda b, c: (b, 0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BK, G, nc, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BK, G, nc), jnp.float32),
+            jax.ShapeDtypeStruct((BK, G, nc), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q, k, v)

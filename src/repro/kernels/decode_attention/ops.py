@@ -1,0 +1,27 @@
+"""Flash-decoding wrapper: kernel partials + log-sum-exp combine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_partials
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def decode_attention(q, k, v, *, bc: int = 512, interpret=None):
+    """Single-token attention over a chunked KV cache.
+
+    q: (BK, G, hd); k, v: (BK, S, hd).  Returns (BK, G, hd).
+    """
+    acc, m, l = decode_attention_partials(
+        q, k, v, bc=bc, interpret=_auto_interpret(interpret))
+    m_g = m.max(axis=-1, keepdims=True)                      # (BK, G, 1)
+    w = jnp.exp(m - m_g)                                     # (BK, G, nc)
+    num = (acc * w[..., None]).sum(axis=2)                   # (BK, G, hd)
+    den = (l * w).sum(axis=-1, keepdims=True)                # (BK, G, 1)
+    return (num / jnp.maximum(den, 1e-30)).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for single-token (decode) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, *, scale=None):
+    """q: (BK, G, hd); k, v: (BK, S, hd).  Returns (BK, G, hd)."""
+    BK, G, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Causal GQA flash attention forward — Pallas TPU kernel.
+
+Online-softmax accumulation over key blocks.  Grid: (BK, G, nq, nk) with the
+key-block dim innermost; VMEM scratch carries the running (acc, m, l) across
+key blocks of one query block.  Block shapes are MXU-aligned (multiples of
+128 on the matmul dims; hd is the lane dim).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, bq: int, bk: int, scale: float, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: key block strictly above the diagonal contributes nothing
+    block_live = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(block_live if isinstance(block_live, bool) else block_live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)               # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
+    """q: (BK, G, S, hd); k, v: (BK, S, hd) -> (BK, G, S, hd)."""
+    BK, G, S, hd = q.shape
+    scale = hd ** -0.5
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+
+    grid = (BK, G, nq, nk)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, g, qi, ki: (b, g, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, g, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, g, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, g, qi, ki: (b, g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

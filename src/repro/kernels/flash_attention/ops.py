@@ -1,0 +1,27 @@
+"""Public wrapper: GQA layout handling + CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret=None):
+    """Flash attention in model layout.
+
+    q: (B, S, KH, G, hd); k, v: (B, S, KH, hd).  Returns (B, S, KH, G, hd).
+    """
+    B, S, KH, G, hd = q.shape
+    qk = q.transpose(0, 2, 3, 1, 4).reshape(B * KH, G, S, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * KH, S, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * KH, S, hd)
+    o = flash_attention_kernel(qk, kk, vk, causal=causal, bq=bq, bk=bk,
+                               interpret=_auto_interpret(interpret))
+    return o.reshape(B, KH, G, S, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (BK, G, S, hd); k, v: (BK, S, hd).  BK = batch * kv_heads;
+    G = query heads per kv head.  Returns (BK, G, S, hd)."""
+    BK, G, S, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bgqd,bkd->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32)).astype(q.dtype)

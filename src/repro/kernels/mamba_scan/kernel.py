@@ -1,0 +1,87 @@
+"""Selective SSM scan (Mamba-1) — Pallas TPU kernel.
+
+The §Perf cell-B analysis showed the jnp chunked scan is HBM-bound on its
+fp32 (B, L, di, N) discretization tensors.  This kernel never materializes
+them: the recurrence runs time-sequentially INSIDE the kernel on
+VMEM-resident operands (x/dt/B/C chunk blocks + the carried state h), so
+HBM traffic collapses to the projected inputs and y out — the state (di
+tile × N) lives in VMEM scratch across sequence chunks.
+
+Grid: (batch, di-tiles, seq-chunks) with the chunk dim innermost and
+"arbitrary" (sequential — it carries h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, hout_ref,
+                  h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)              # (bdi, N)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)       # (bdi,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)     # (bdi,)
+        B_t = b_ref[0, t].astype(jnp.float32)       # (N,)
+        C_t = c_ref[0, t].astype(jnp.float32)       # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)             # (bdi, N)
+        h = dA * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y_ref[0, t] = (h @ C_t).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bdi", "chunk", "interpret"))
+def mamba_scan_kernel(x, dt, B, C, A, *, bdi: int = 256, chunk: int = 128,
+                      interpret: bool = False):
+    """x, dt: (Bb, S, di); B, C: (Bb, S, N); A: (di, N).
+    Returns (y (Bb, S, di), h_final (Bb, di, N))."""
+    Bb, S, di = x.shape
+    N = A.shape[1]
+    bdi = min(bdi, di)
+    chunk = min(chunk, S)
+    assert di % bdi == 0 and S % chunk == 0, (di, bdi, S, chunk)
+    ndi, nc = di // bdi, S // chunk
+
+    y, h_final = pl.pallas_call(
+        functools.partial(_mamba_kernel, chunk=chunk),
+        grid=(Bb, ndi, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bdi), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, bdi), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((bdi, N), lambda b, d, c: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bdi), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, bdi, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, di), x.dtype),
+            jax.ShapeDtypeStruct((Bb, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bdi, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, B, C, A)
+    return y, h_final

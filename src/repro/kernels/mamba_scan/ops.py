@@ -1,0 +1,20 @@
+"""Public wrapper with CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import mamba_scan_kernel
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def mamba_scan(x, dt, B, C, A, *, bdi: int = 256, chunk: int = 128,
+               interpret=None):
+    """Selective scan: x/dt (Bb,S,di), B/C (Bb,S,N), A (di,N) ->
+    (y (Bb,S,di), h_final (Bb,di,N))."""
+    return mamba_scan_kernel(x, dt, B, C, A, bdi=bdi, chunk=chunk,
+                             interpret=_auto_interpret(interpret))

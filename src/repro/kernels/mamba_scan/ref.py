@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective SSM scan (Mamba-1 recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, B, C, A):
+    """Sequential selective scan.
+
+    x, dt: (Bb, S, di); B, C: (Bb, S, N); A: (di, N)  [A < 0].
+    h_t = exp(dt_t A) * h_{t-1} + (dt_t x_t) B_t;  y_t = h_t · C_t.
+    Returns (y (Bb,S,di), h_final (Bb,di,N)).
+    """
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A[None])          # (Bb, di, N)
+        dBx = (dt_t * x_t)[:, :, None] * B_t[:, None, :]  # (Bb, di, N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    Bb, S, di = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((Bb, di, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_final

@@ -1,0 +1,2 @@
+from repro.kernels.mlstm_attention.ops import mlstm_attention  # noqa: F401
+from repro.kernels.mlstm_attention.ref import mlstm_attention_ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""Fused mLSTM sequence mix — Pallas TPU kernel (flash-style).
+
+The §Perf cell-A analysis showed the jnp mLSTM is HBM-bound on its fp32
+(L, S) decay/score tensors.  This kernel keeps them in VMEM: gate cumulants
+F (cumulative log-forget) and I (log input gate) enter as per-position
+VECTORS; the (bq, bk) decay matrix D = F_t - F_s + I_s is built, stabilized,
+and consumed inside the block, with flash-style online accumulation of the
+signed score sum (mLSTM's denominator) and the value accumulator across key
+blocks.  HBM traffic collapses to q/k/v/F/I in + h out.
+
+F is passed twice (query-block-indexed and key-block-indexed views of the
+same vector) so each gets a clean BlockSpec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, fq_ref, fk_ref, i_ref, o_ref,
+                  acc_ref, m_ref, s_ref, *, bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    block_live = ki * bk <= qi * bq + bq - 1  # causal block skip
+
+    @pl.when(block_live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)            # (bk, hd)
+        fq = fq_ref[0].astype(jnp.float32)          # (bq,)
+        fk = fk_ref[0].astype(jnp.float32)          # (bk,)
+        ik = i_ref[0].astype(jnp.float32)           # (bk,)
+
+        # decay matrix within the block, causal-masked
+        D = fq[:, None] - fk[None, :] + ik[None, :]
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        D = jnp.where(q_pos >= k_pos, D, NEG_INF)
+
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_new = jnp.maximum(m_prev, D.max(axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        W = jnp.exp(D - m_new)
+        scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32) * W
+        s_ref[...] = s_ref[...] * corr + scores.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            scores, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        den = jnp.maximum(jnp.abs(s_ref[...]), jnp.exp(-m_ref[...]))
+        o_ref[0] = (acc_ref[...] / den).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def mlstm_attention_kernel(q, k, v, F, I, *, bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q,k,v: (BH, S, hd); F: (BH, S) inclusive cumulative log-forget;
+    I: (BH, S) log input gate.  Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, bq=bq, bk=bk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bq), lambda b, qi, ki: (b, qi)),   # F @ queries
+            pl.BlockSpec((1, bk), lambda b, qi, ki: (b, ki)),   # F @ keys
+            pl.BlockSpec((1, bk), lambda b, qi, ki: (b, ki)),   # I @ keys
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, F, F, I)

@@ -1,0 +1,29 @@
+"""Public wrapper: model-layout handling + CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mlstm_attention.kernel import mlstm_attention_kernel
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def mlstm_attention(q, k, v, log_f_cum, log_i, *, bq: int = 128,
+                    bk: int = 128, interpret=None):
+    """Fused mLSTM mix in model layout.
+
+    q,k,v: (B, S, H, hd) (k pre-scaled by hd**-0.5, as in models/ssm.py);
+    log_f_cum: (B, S, H) inclusive cumulative log-forget; log_i: (B, S, H).
+    Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    to_bh = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    to_bh2 = lambda x: x.transpose(0, 2, 1).reshape(B * H, S)
+    o = mlstm_attention_kernel(
+        to_bh(q), to_bh(k), to_bh(v), to_bh2(log_f_cum), to_bh2(log_i),
+        bq=bq, bk=bk, interpret=_auto_interpret(interpret))
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused mLSTM sequence mix (stabilized parallel
+form, xLSTM matrix-memory cell)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mlstm_attention_ref(q, k, v, F, I):
+    """q,k,v: (BH, S, hd); F: (BH, S) inclusive cumulative log-forget;
+    I: (BH, S) log input gate.  Returns (BH, S, hd).
+
+    h_t = (Σ_{s<=t} exp(D_ts - m_t) (q_t·k_s) v_s)
+          / max(|Σ_s exp(D_ts - m_t) (q_t·k_s)|, exp(-m_t)),
+    D_ts = F_t - F_s + I_s,  m_t = max_s D_ts.
+    """
+    BH, S, hd = q.shape
+    D = (F[:, :, None] - F[:, None, :] + I[:, None, :]).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    D = jnp.where(mask[None], D, -jnp.inf)
+    m = jnp.maximum(D.max(axis=-1, keepdims=True), -1e30)
+    W = jnp.exp(D - m)
+    scores = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * W
+    num = jnp.einsum("bts,bsd->btd", scores, v.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(scores.sum(-1)), jnp.exp(-m[..., 0]))
+    return (num / den[..., None]).astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Blockwise symmetric int8 quantization — Pallas TPU kernel.
+
+Halves (bf16) or quarters (fp32) the bytes of the cross-pod gradient payload.
+Each VMEM block computes its own absmax scale; dequant is a fused multiply.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[0].astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q_ref[0] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[0] = q_ref[0].astype(jnp.float32) * s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_kernel(x, *, interpret: bool = False):
+    """x: (nb, block) -> (q int8 (nb,block), scale fp32 (nb,1))."""
+    nb, block = x.shape
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_kernel(q, scale, *, interpret: bool = False):
+    nb, block = q.shape
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, scale)

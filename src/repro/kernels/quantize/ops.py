@@ -1,0 +1,28 @@
+"""Public wrappers with padding/blocking + interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import dequantize_kernel, quantize_kernel
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def quantize(x, *, block: int = 1024, interpret=None):
+    """Arbitrary tensor -> (q (nb,block) int8, scale (nb,1), orig_size)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    padded = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    q, scale = quantize_kernel(padded, interpret=_auto_interpret(interpret))
+    return q, scale, flat.size
+
+
+def dequantize(q, scale, orig_size: int, shape=None, *, interpret=None):
+    out = dequantize_kernel(q, scale, interpret=_auto_interpret(interpret))
+    flat = out.reshape(-1)[:orig_size]
+    return flat.reshape(shape) if shape is not None else flat

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for blockwise int8 quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x):
+    """x: (nb, block) -> (q int8 (nb,block), scale fp32 (nb,1))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q, scale):
+    return q.astype(jnp.float32) * scale

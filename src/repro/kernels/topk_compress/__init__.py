@@ -1,0 +1,2 @@
+from repro.kernels.topk_compress.ops import topk_compress  # noqa: F401
+from repro.kernels.topk_compress.ref import topk_compress_ref  # noqa: F401

@@ -1,0 +1,44 @@
+"""Blockwise magnitude top-k — Pallas TPU kernel.
+
+The encode hot path of best-effort gradient compression: each VMEM-resident
+block independently selects its k largest-magnitude entries (values +
+block-local indices).  Grid is 1-D over blocks; blocks are lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    x = x_ref[0]                      # (block,)
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    vals_ref[0] = jnp.take(x, idx)
+    idx_ref[0] = idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_compress_kernel(x, *, k: int, interpret: bool = False):
+    """x: (nb, block) -> (values (nb,k), indices (nb,k))."""
+    nb, block = x.shape
+    assert 0 < k <= block, (k, block)
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, k), x.dtype),
+            jax.ShapeDtypeStruct((nb, k), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)

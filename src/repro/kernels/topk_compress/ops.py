@@ -1,0 +1,30 @@
+"""Public wrapper: flat-tensor padding/blocking + interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_compress.kernel import topk_compress_kernel
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def topk_compress(x, *, ratio: float = 0.01, block: int = 1024, interpret=None):
+    """Blockwise top-k of an arbitrary tensor.
+
+    Returns (values (nb,k), global_indices (nb,k) int32, nb) where
+    global_indices address the flattened (padded) tensor.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    padded = jnp.pad(flat, (0, pad))
+    nb = padded.size // block
+    k = max(1, int(block * ratio))
+    vals, idx = topk_compress_kernel(padded.reshape(nb, block), k=k,
+                                     interpret=_auto_interpret(interpret))
+    gidx = idx + (jnp.arange(nb, dtype=jnp.int32) * block)[:, None]
+    return vals, gidx, nb

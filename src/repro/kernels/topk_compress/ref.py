@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for blockwise magnitude top-k compression."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def topk_compress_ref(x, k: int):
+    """x: (nb, block).  Per block, keep the k largest-magnitude entries.
+    Returns (values (nb,k), indices (nb,k) int32) — indices block-local."""
+    _, idx = lax.top_k(jnp.abs(x), k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)

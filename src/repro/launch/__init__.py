@@ -1,0 +1,1 @@
+from repro.launch import mesh, serve, sharding, train  # noqa: F401

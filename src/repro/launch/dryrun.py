@@ -1,0 +1,306 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the process entrypoint (``python -m repro.launch.dryrun``): the
+XLA_FLAGS below force 512 host devices and must be set before jax
+initializes.  Produces per-cell JSON artifacts (memory analysis, HLO
+FLOPs/bytes, per-collective byte counts) consumed by benchmarks/roofline.py
+and EXPERIMENTS.md.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.core.modes import AsyncMode
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+from repro.launch.mesh import make_production_mesh, pod_count, rules_for
+from repro.launch.sharding import (param_specs, shardings_from_specs,
+                                   with_pod_dim)
+from repro.models import lm, modality, partitioning
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), "benchmarks", "results",
+    "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|f8e4m3|f8e5m2)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective per-device payload bytes from post-SPMD HLO."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result_seg, kind = m.group(1), m.group(2)
+        b = _shape_bytes(result_seg)
+        if kind.endswith("-done"):
+            continue
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, shape_name: str, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # dp_only is a training-layout decision; serve shapes keep the 2-D
+    # layout (decode batch typically not divisible by all 256 chips)
+    profile = cfg.sharding_profile if shape.kind == "train" else "2d"
+    rules = rules_for(mesh, long_context=(shape.name == "long_500k"),
+                      pod_stacked=(shape.kind == "train"), profile=profile)
+    n_pods = pod_count(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((n_pods, B // n_pods, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((n_pods, B // n_pods, S), jnp.int32),
+        }
+        if cfg.frontend:
+            out[modality.frontend_input_name(cfg)] = jax.ShapeDtypeStruct(
+                (n_pods, B // n_pods, cfg.frontend_len, cfg.d_model),
+                jnp.bfloat16)
+        return out
+    inputs, _ = serve_mod.serve_input_specs(cfg, shape, rules)
+    return inputs
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  mode: int = 0, compressor=None, grad_accum: int = 1,
+                  remat: bool = True, extra_cfg=None):
+    """Construct and lower the step function for one cell."""
+    cfg = get_config(arch)
+    if grad_accum > 1:
+        cfg = cfg.replace(grad_accum=grad_accum)
+    if not remat:
+        cfg = cfg.replace(remat=False)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        return None, "skip: long_500k needs sub-quadratic mixing"
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # dp_only is a training-layout decision; serve shapes keep the 2-D
+    # layout (decode batch typically not divisible by all 256 chips)
+    profile = cfg.sharding_profile if shape.kind == "train" else "2d"
+    rules = rules_for(mesh, long_context=(shape.name == "long_500k"),
+                      pod_stacked=(shape.kind == "train"), profile=profile)
+    n_pods = pod_count(mesh)
+
+    with partitioning.use_rules(rules):
+        if shape.kind == "train":
+            spec = train_mod.TrainSpec(mode=AsyncMode(mode),
+                                       compressor=compressor)
+            state_like = train_mod.abstract_train_state(cfg, spec, n_pods)
+            pspecs = with_pod_dim(param_specs(lm.abstract_params(cfg), rules))
+            state_specs = {
+                "params": pspecs,
+                "opt": {"m": pspecs, "v": pspecs, "step": P("pod" if multi_pod else None)},
+                "step": P(),
+            }
+            if spec.mode == AsyncMode.BEST_EFFORT:
+                state_specs["others"] = pspecs
+                if compressor:
+                    state_specs["residuals"] = pspecs
+            if spec.mode in (AsyncMode.ROLLING_BARRIER, AsyncMode.FIXED_BARRIER):
+                state_specs["outer"] = {"anchor": pspecs, "momentum": pspecs}
+            if not multi_pod:
+                # no pod axis on this mesh: pod-stacked dims (size 1) unsharded
+                def strip_pod(s):
+                    return P(*(None if a == "pod" else a for a in s))
+                state_specs = jax.tree.map(
+                    strip_pod, state_specs, is_leaf=lambda x: isinstance(x, P))
+
+            B, S = shape.global_batch, shape.seq_len
+            assert B % n_pods == 0
+            batch_like = {
+                "tokens": jax.ShapeDtypeStruct((n_pods, B // n_pods, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((n_pods, B // n_pods, S), jnp.int32),
+            }
+            batch_specs = train_mod.make_batch_specs(cfg, rules, n_pods)
+            if cfg.frontend:
+                batch_like[modality.frontend_input_name(cfg)] = \
+                    jax.ShapeDtypeStruct(
+                        (n_pods, B // n_pods, cfg.frontend_len, cfg.d_model),
+                        jnp.bfloat16)
+
+            step_fn = train_mod.make_train_step(
+                cfg, spec, n_pods,
+                param_specs=param_specs(lm.abstract_params(cfg), rules))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(shardings_from_specs(state_specs, mesh),
+                              shardings_from_specs(batch_specs, mesh)),
+                out_shardings=(shardings_from_specs(state_specs, mesh), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_like, batch_like)
+
+        elif shape.kind == "prefill":
+            params_like = lm.abstract_params(cfg)
+            pspecs = param_specs(params_like, rules)
+            inputs, in_specs = serve_mod.serve_input_specs(cfg, shape, rules)
+            step_fn = serve_mod.make_prefill_step(cfg, param_specs=pspecs)
+            args = [params_like, inputs["tokens"]]
+            arg_specs = [pspecs, in_specs["tokens"]]
+            if cfg.frontend:
+                args.append(inputs[modality.frontend_input_name(cfg)])
+                arg_specs.append(in_specs[modality.frontend_input_name(cfg)])
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=tuple(shardings_from_specs(s, mesh)
+                                   for s in arg_specs))
+            lowered = jitted.lower(*args)
+
+        else:  # decode
+            params_like = lm.abstract_params(cfg)
+            pspecs = param_specs(params_like, rules)
+            inputs, in_specs = serve_mod.serve_input_specs(cfg, shape, rules)
+            step_fn = serve_mod.make_decode_step(cfg, shape.seq_len - 1,
+                                                 param_specs=pspecs)
+            cache_sh = shardings_from_specs(in_specs["caches"], mesh)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(shardings_from_specs(pspecs, mesh),
+                              shardings_from_specs(in_specs["tokens"], mesh),
+                              cache_sh),
+                out_shardings=(None, None, cache_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_like, inputs["tokens"],
+                                   inputs["caches"])
+    return lowered, None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: int = 0,
+             compressor=None, tag: str = "", **kw) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    label = f"{arch}/{shape_name}/{mesh_name}" + (f"/{tag}" if tag else "")
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "mode": mode, "compressor": compressor, "tag": tag}
+    try:
+        lowered, skip = build_lowered(arch, shape_name, multi_pod, mode,
+                                      compressor, **kw)
+        if skip:
+            record["status"] = "skipped"
+            record["reason"] = skip
+            print(f"[dryrun] {label}: SKIP ({skip})", flush=True)
+            return record
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_stats = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception as e:  # noqa: BLE001 — CPU backend may not support
+            mem_stats = {"error": str(e)}
+        coll = collective_bytes(compiled.as_text())
+
+        record.update({
+            "status": "ok",
+            "flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "memory": mem_stats,
+            "collectives": coll,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+        })
+        print(f"[dryrun] {label}: OK flops={cost.get('flops', 0):.3e} "
+              f"coll={sum(coll.values()):.3e}B "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    except Exception as e:  # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[dryrun] {label}: ERROR {type(e).__name__}: {str(e)[:300]}",
+              flush=True)
+    return record
+
+
+def save_record(record: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            + (f"__{record['tag']}" if record.get("tag") else "") + ".json")
+    path = os.path.join(RESULTS_DIR, name)
+    slim = {k: v for k, v in record.items() if k != "traceback"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mode", type=int, default=0,
+                    help="asynchronicity mode for train cells")
+    ap.add_argument("--compressor", default=None)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    ok = err = skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi, args.mode, args.compressor,
+                               tag=args.tag, grad_accum=args.grad_accum)
+                save_record(rec)
+                ok += rec["status"] == "ok"
+                err += rec["status"] == "error"
+                skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {err} errors", flush=True)
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

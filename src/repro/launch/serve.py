@@ -1,0 +1,93 @@
+"""Serve-step factories: prefill and decode (single token vs a KV cache).
+
+Serving params are shared (not pod-stacked): multi-pod serving is
+data-parallel over request batches; the best-effort angle is on the training
+path.  ``decode_32k`` / ``long_500k`` lower the decode step: one new token
+against a pre-filled cache of seq_len (written at index seq_len - 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm, modality, transformer
+
+
+def make_prefill_step(cfg, param_specs=None):
+    def prefill_step(params, tokens, frontend_embeds=None):
+        return lm.prefill_step(params, tokens, cfg, frontend_embeds,
+                               param_specs=param_specs)
+    return prefill_step
+
+
+def make_decode_step(cfg, write_idx: int, param_specs=None):
+    def decode_step(params, tokens, caches):
+        return lm.decode_step(params, tokens, caches, cfg, write_idx,
+                              param_specs=param_specs)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Cache sharding rules
+# ---------------------------------------------------------------------------
+def _cache_rule(name: str, shape) -> tuple:
+    nd = len(shape)
+    if name in ("k", "v") and nd == 5:          # attn KV (P,B,S,KH,hd)
+        return (None, "dp", "sp", None, None)
+    if name == "C" and nd == 5:                  # mlstm matrix memory
+        return (None, "dp", None, None, "tp")
+    if name == "conv" and nd == 4:               # mamba/mlstm conv window
+        return (None, "dp", None, "tp")
+    if name == "h" and nd == 4:
+        # mamba h (P,B,di,N): tiny state dim last; slstm h (P,B,H,hd)
+        if shape[-1] <= 64:
+            return (None, "dp", "tp", None)
+        return (None, "dp", None, "tp")
+    if name in ("c", "n", "h", "m") and nd == 4:  # slstm / mlstm vectors
+        return (None, "dp", None, "tp")
+    if name == "m" and nd == 3:                   # mlstm stabilizer (P,B,H)
+        return (None, "dp", None)
+    return (None,) * nd
+
+
+def cache_specs(cfg, caches_like, rules):
+    from repro.launch.sharding import _divisible
+
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+        rule = _cache_rule(name, leaf.shape)
+        resolved = []
+        for dim, role in zip(leaf.shape, rule):
+            axes = rules.resolve(role)
+            resolved.append(axes if _divisible(dim, axes, rules.mesh) else None)
+        return P(*resolved)
+
+    return jax.tree_util.tree_map_with_path(visit, caches_like)
+
+
+def abstract_caches(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: transformer.init_caches(cfg, batch, seq, dtype))
+
+
+def serve_input_specs(cfg, shape_cfg, rules):
+    """(ShapeDtypeStructs, PartitionSpecs) for the serve path."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if shape_cfg.kind == "prefill":
+        inputs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        specs = {"tokens": P(rules.roles["dp"] or None, None)}
+        if cfg.frontend:
+            inputs[modality.frontend_input_name(cfg)] = \
+                jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.d_model),
+                                     jnp.bfloat16)
+            specs[modality.frontend_input_name(cfg)] = \
+                P(rules.roles["dp"] or None, None, None)
+        return inputs, specs
+    assert shape_cfg.kind == "decode"
+    caches = abstract_caches(cfg, B, S)
+    inputs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+              "caches": caches}
+    dp = rules.roles["dp"] or None
+    specs = {"tokens": P(dp, None), "caches": cache_specs(cfg, caches, rules)}
+    return inputs, specs

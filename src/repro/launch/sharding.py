@@ -1,0 +1,99 @@
+"""Parameter/state PartitionSpec rules: FSDP over data axes × TP/EP over the
+model axis, with automatic replication fallback on indivisible dims.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.partitioning import MeshRules
+
+# rules keyed by parameter name: logical spec for the UNSCANNED shape.
+# "dp" = fsdp axes, "tp" = model axis, None = replicated.
+_RULES = {
+    # embeddings
+    "embed": ("tp", "dp"),
+    "unembed": ("tp", "dp"),
+    "final_norm": (None,),
+    # attention
+    "wq": ("dp", "tp"), "wk": ("dp", "tp"), "wv": ("dp", "tp"),
+    "wo": ("tp", "dp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    "q_norm": (None,), "k_norm": (None,), "out_norm": (None,),
+    "mixer_norm": (None,), "ffn_norm": (None,),
+    # dense mlp / shared expert
+    "gate": ("dp", "tp"), "up": ("dp", "tp"), "down": ("tp", "dp"),
+    # moe (expert-stacked 3-D weights; expert dim -> EP over model axis)
+    "router": ("dp", None),
+    "gate3": ("tp", "dp", None), "up3": ("tp", "dp", None),
+    "down3": ("tp", "dp", None),
+    # mamba
+    "in_proj": ("dp", "tp"), "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "x_proj": ("tp", None), "dt_proj": (None, "tp"), "dt_bias": ("tp",),
+    "A_log": ("tp", None), "D": ("tp",), "out_proj": ("tp", "dp"),
+    # xlstm
+    "up_proj": ("dp", "tp"), "down_proj": ("tp", "dp"),
+    "w_if": ("tp", None), "b_if": (None,),
+    "w": ("dp", "tp"), "r": (None, None, None, "tp"), "b": (None,),
+}
+
+
+def _logical_spec(path_names, shape) -> tuple:
+    name = path_names[-1]
+    if name in ("gate", "up", "down") and len(shape) >= 3 and "ffn" in path_names:
+        # expert-stacked MoE weight (possibly with a leading scan dim)
+        base = _RULES[name + "3"]
+    elif name in _RULES:
+        base = _RULES[name]
+    else:
+        base = (None,) * len(shape)
+    # leading scan (period) dim -> None
+    pad = len(shape) - len(base)
+    assert pad >= 0, (path_names, shape, base)
+    return (None,) * pad + tuple(base)
+
+
+def _divisible(dim_size: int, axes, mesh) -> bool:
+    if axes is None:
+        return True
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim_size % n == 0
+
+
+def param_specs(params_like, rules: MeshRules):
+    """Pytree of PartitionSpec matching ``params_like`` (arrays or
+    ShapeDtypeStructs)."""
+
+    def visit(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        logical = _logical_spec(names, leaf.shape)
+        resolved = []
+        for dim, role in zip(leaf.shape, logical):
+            axes = rules.resolve(role)
+            resolved.append(axes if _divisible(dim, axes, rules.mesh) else None)
+        return P(*resolved)
+
+    return jax.tree_util.tree_map_with_path(visit, params_like)
+
+
+def param_shardings(params_like, rules: MeshRules):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        param_specs(params_like, rules))
+
+
+def with_pod_dim(spec_tree):
+    """Prepend a "pod" axis to every spec (pod-stacked train state)."""
+    return jax.tree.map(
+        lambda s: P("pod", *s) if isinstance(s, P) else s, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings_from_specs(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

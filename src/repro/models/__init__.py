@@ -1,0 +1,10 @@
+from repro.models import (  # noqa: F401
+    attention,
+    layers,
+    lm,
+    modality,
+    moe,
+    partitioning,
+    ssm,
+    transformer,
+)

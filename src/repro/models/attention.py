@@ -1,0 +1,145 @@
+"""Grouped-query attention: training/prefill (chunked causal) and decode.
+
+The jnp implementation here is the GSPMD-lowerable reference path (used by the
+dry-run and CPU tests).  On TPU the Pallas flash kernels in
+``repro.kernels`` plug in via ``use_pallas``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.partitioning import constrain
+
+
+def init_attention(key, cfg, dtype):
+    d, H, KH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, H * hd, dtype),
+        "wk": layers.dense_init(ks[1], d, KH * hd, dtype),
+        "wv": layers.dense_init(ks[2], d, KH * hd, dtype),
+        "wo": layers.dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KH * hd,), dtype)
+        p["bv"] = jnp.zeros((KH * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    """Returns q: (B,S,KH,G,hd), k/v: (B,S,KH,hd)."""
+    B, S, _ = x.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    G = H // KH
+    dt = x.dtype
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    if cfg.qk_norm:
+        q = layers.head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = layers.head_rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, KH, G, hd)
+    return q, k, v
+
+
+def _attend_chunk(q, k, v, q_pos, k_pos, scale):
+    """q: (B,Qc,KH,G,hd); k,v: (B,Sk,KH,hd); causal mask via positions."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    mask = q_pos[:, None] >= k_pos[None, :]  # (Qc, Sk)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def attention_forward(params, x, cfg, positions, q_chunk: int = 1024):
+    """Causal self-attention over the full sequence (train / prefill).
+
+    Memory-bounded: scans over query chunks so the live score tensor is
+    (B, KH, G, q_chunk, S) rather than (..., S, S).
+    Sharding: the query SEQUENCE dim is sharded over the model axis and k/v
+    replicated across it — with small kv-head counts (GQA kv=2..8 < 16-way
+    TP) heads cannot shard, and without this the fp32 probs tensor gets
+    all-gathered (§Perf: 8.6 GB/layer on qwen2.5-3b).  k/v per chip is only
+    B·S·KH·hd bf16, so replication is cheap; every chip computes 1/TP of
+    the query rows — sequence-parallel attention.
+    Returns (y, (k, v)) — k/v reused as the prefill KV cache.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cfg.num_kv_heads <= 4:
+        # measured win for kv<=2 (qwen2/2.5: collective 504->220 ms);
+        # at kv=8 the replicated k/v outweighs the saved prob gathers
+        # (qwen3 regressed 129->589 ms) — gate on kv-head count
+        q = constrain(q, "dp", "tp", None, None, None)
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    scale = cfg.hd ** -0.5
+    k_pos = positions[0] if positions.ndim > 1 else positions
+
+    if S <= q_chunk:
+        out = _attend_chunk(q, k, v, k_pos, k_pos, scale)
+    else:
+        assert S % q_chunk == 0, (S, q_chunk)
+        n = S // q_chunk
+        qs = q.reshape(B, n, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4, 5)
+        pos_chunks = k_pos.reshape(n, q_chunk)
+
+        def body(_, inp):
+            qc, pc = inp
+            return None, _attend_chunk(qc, k, v, pc, k_pos, scale)
+
+        _, outs = jax.lax.scan(body, None, (qs, pos_chunks))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, *q.shape[2:])
+
+    out = out.reshape(B, S, cfg.num_heads * cfg.hd)
+    out = constrain(out, "dp", None, "tp")
+    y = out @ params["wo"].astype(x.dtype)
+    return y, (k, v)
+
+
+def attention_decode(params, x, cache, cfg, write_idx):
+    """Single-token decode against a (pre-allocated) KV cache.
+
+    x: (B, 1, d).  cache: {"k","v"}: (B, S, KH, hd); the new token's k/v is
+    written at ``write_idx`` and attention runs over positions <= write_idx.
+    The cache sequence dim may be sharded (long-context flash-decoding: XLA
+    turns the softmax reductions into tiny all-reduces).
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    positions = jnp.full((B, 1), write_idx, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), write_idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), write_idx, axis=1)
+    k = constrain(k, "dp", "sp", None, None)
+    v = constrain(v, "dp", "sp", None, None)
+
+    scale = cfg.hd ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k.astype(q.dtype)).astype(jnp.float32) * scale
+    valid = (jnp.arange(S) <= write_idx)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(q.dtype))
+    out = out.reshape(B, 1, cfg.num_heads * cfg.hd)
+    y = out @ params["wo"].astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+def init_kv_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    shape = (batch, seq, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

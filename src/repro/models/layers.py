@@ -1,0 +1,87 @@
+"""Basic neural-net layers: RMSNorm, linear init, RoPE, SwiGLU MLP.
+
+Functional style: ``init_*`` returns a params dict; ``apply`` functions are
+pure.  Params are kept in ``cfg.param_dtype`` (fp32 master) and cast to
+``cfg.dtype`` (bf16) for compute by the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        scale = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def head_rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm over the last (head) dim of a (..., heads, head_dim) tensor."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    sin = jnp.sin(angles)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params, x, compute_dtype):
+    gate = x @ params["gate"].astype(compute_dtype)
+    up = x @ params["up"].astype(compute_dtype)
+    return (jax.nn.silu(gate) * up) @ params["down"].astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table, tokens, compute_dtype):
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(table, x):
+    """Logits in fp32 for a numerically stable loss."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))

@@ -1,0 +1,158 @@
+"""Top-level decoder-only LM: init, loss, prefill, decode.
+
+These are the functions the launcher jits: ``loss_fn`` (inside train_step),
+``prefill_step`` and ``decode_step`` (serve path).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, modality, partitioning, transformer
+from repro.models.partitioning import constrain
+
+
+def init_params(key, cfg):
+    k_emb, k_stack, k_out = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": layers.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "stack": transformer.init_stack(k_stack, cfg),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.init_embedding(k_out, cfg.vocab_size, cfg.d_model, dtype)
+    return params
+
+
+def abstract_params(cfg, key=None):
+    """Shape/dtype pytree of params without allocating (for dry-run/sharding)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+def cast_params_for_compute(params, cfg, specs=None):
+    """One bulk fp32->compute-dtype cast at step entry (§Perf cell B).
+
+    Without this, GSPMD all-gathers the fp32 MASTER weights and converts
+    after — 2x the FSDP gather bytes.  The cast output must be PINNED to
+    the param's own sharding (``specs``): otherwise backward sharding
+    propagation marks the convert replicated and the gather moves back in
+    front of it.  Differentiable (grads flow to the fp32 masters); router
+    weights and 1-D params (norm scales, biases) stay fp32.
+    """
+    cd = jnp.dtype(cfg.dtype)
+    if cd == jnp.float32:
+        return params
+    spec_of = {}
+    if specs is not None:
+        from jax.sharding import PartitionSpec as _P
+        flat_s = jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, _P))[0]
+        spec_of = {jax.tree_util.keystr(p): s for p, s in flat_s}
+
+    def visit(path, p):
+        names = [str(getattr(q, "key", "")) for q in path]
+        if (hasattr(p, "dtype") and p.dtype == jnp.float32 and p.ndim >= 2
+                and "router" not in names):
+            out = p.astype(cd)
+            return partitioning.constrain_spec(
+                out, spec_of.get(jax.tree_util.keystr(path)))
+        return p
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def _embed_inputs(params, tokens, cfg, frontend_embeds, compute_dtype):
+    x = layers.embed(params["embed"], tokens, compute_dtype)
+    if cfg.frontend is not None and frontend_embeds is not None:
+        x = modality.splice_frontend(x, frontend_embeds)
+    return x
+
+
+def forward(params, tokens, cfg, frontend_embeds=None, param_specs=None):
+    """tokens: (B, S) -> logits (B, S, V) fp32, aux loss."""
+    cd = jnp.dtype(cfg.dtype)
+    params = cast_params_for_compute(params, cfg, param_specs)
+    B, S = tokens.shape
+    x = _embed_inputs(params, tokens, cfg, frontend_embeds, cd)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, aux = transformer.stack_forward(params["stack"], x, cfg, positions)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(table, x)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg, param_specs=None):
+    """Next-token cross entropy. batch: {"tokens", "labels", ["frame_embeds"...]}"""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          batch.get(modality.frontend_input_name(cfg))
+                          if cfg.frontend else None,
+                          param_specs=param_specs)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    token_loss = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum(token_loss * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def prefill_step(params, tokens, cfg, frontend_embeds=None, param_specs=None):
+    """Prefill: logits for the last position + decode caches."""
+    cd = jnp.dtype(cfg.dtype)
+    params = cast_params_for_compute(params, cfg, param_specs)
+    B, S = tokens.shape
+    x = _embed_inputs(params, tokens, cfg, frontend_embeds, cd)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, _, caches = transformer.stack_prefill(params["stack"], x, cfg, positions)
+    x = layers.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(table, x)
+    return logits, caches
+
+
+def decode_step(params, tokens, caches, cfg, write_idx: int,
+                param_specs=None):
+    """One decode step. tokens: (B, 1) current token; returns
+    (next_token (B,1), logits, new_caches)."""
+    cd = jnp.dtype(cfg.dtype)
+    params = cast_params_for_compute(params, cfg, param_specs)
+    x = layers.embed(params["embed"], tokens, cd)
+    x, new_caches = transformer.stack_decode(params["stack"], x, caches, cfg, write_idx)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(table, x)
+    next_token = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+    return next_token, logits, new_caches
+
+
+def param_count(cfg) -> int:
+    shapes = abstract_params(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg) -> int:
+    """Active params per token (MoE: top-k of routed experts)."""
+    total = param_count(cfg)
+    if cfg.num_experts == 0:
+        return total
+    # subtract inactive routed-expert weights
+    shapes = abstract_params(cfg)
+    inactive = 0
+    moe_frac = 1.0 - cfg.experts_per_tok / cfg.num_experts
+
+    def visit(path, leaf):
+        nonlocal inactive
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        if "ffn" in names and any(n in ("gate", "up", "down") for n in names):
+            # routed expert weights are (E, ...) or, scanned, (P, E, ...)
+            if leaf.ndim >= 3 and cfg.num_experts in leaf.shape[:2]:
+                inactive += math.prod(leaf.shape) * moe_frac
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return int(total - inactive)

@@ -1,0 +1,28 @@
+"""Modality frontend stubs (DESIGN.md §6).
+
+Per the assignment, [audio]/[vlm] entries specify the transformer BACKBONE
+only; the frontend is a stub — ``input_specs()`` provides precomputed
+frame/patch embeddings which occupy the first ``cfg.frontend_len`` positions
+of the sequence (conditioning prefix / image patches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontend_input_name(cfg) -> str:
+    return {"audio": "frame_embeds", "vision": "patch_embeds"}[cfg.frontend]
+
+
+def splice_frontend(x_embed, frontend_embeds):
+    """Replace the first P positions of the token embedding with frontend
+    embeddings. x_embed: (B, S, d); frontend_embeds: (B, P, d)."""
+    P = frontend_embeds.shape[1]
+    return jax.lax.dynamic_update_slice_in_dim(
+        x_embed, frontend_embeds.astype(x_embed.dtype), 0, axis=1)
+
+
+def frontend_spec(cfg, batch: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for the stub frontend input."""
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_len, cfg.d_model), dtype)

@@ -1,0 +1,84 @@
+"""Sharding roles and constraint helpers.
+
+The model code annotates activations with *logical* axis roles ("dp", "tp",
+"sp") rather than mesh axis names.  The launcher activates a
+``MeshRules`` context mapping roles to physical mesh axes; outside such a
+context (unit tests, single-device runs) all constraints are no-ops, so the
+same model code runs everywhere.
+
+Roles:
+  dp  — data-parallel axes (batch dim); ("pod", "data") on the production mesh
+  tp  — tensor-parallel axis (heads / ffn / experts / vocab); "model"
+  sp  — sequence-parallel axis for the residual stream; aliases "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class MeshRules:
+    def __init__(self, mesh: Mesh, dp: Sequence[str], tp: Optional[str],
+                 sp: Optional[str] = None):
+        self.mesh = mesh
+        self.roles = {
+            "dp": tuple(dp),
+            "tp": tp,
+            "sp": sp if sp is not None else tp,
+        }
+
+    def resolve(self, dim) -> Union[None, str, tuple]:
+        if dim is None:
+            return None
+        if isinstance(dim, tuple):  # compound role, e.g. ("dp", "sp")
+            out = []
+            for d in dim:
+                r = self.resolve(d)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        return self.roles.get(dim, dim)
+
+    def spec(self, *dims) -> P:
+        return P(*[self.resolve(d) for d in dims])
+
+    def sharding(self, *dims) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*dims))
+
+
+def active() -> Optional[MeshRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, *dims):
+    """Apply a sharding constraint by logical roles; no-op without rules."""
+    rules = active()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*dims))
+
+
+def constrain_spec(x, spec):
+    """Constrain to an explicit PartitionSpec on the active mesh; no-op
+    without rules."""
+    rules = active()
+    if rules is None or spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,372 @@
+"""Sub-quadratic sequence mixers: Mamba (jamba), mLSTM + sLSTM (xlstm).
+
+All three expose a parallel/chunked training form and an O(1)-state decode
+step — this is what makes the ``long_500k`` shape feasible (DESIGN.md §6).
+Scan math runs in fp32 for stability; projections in the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.partitioning import constrain
+
+
+# ===========================================================================
+# Mamba (selective SSM)
+# ===========================================================================
+def _mamba_dims(cfg):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    dt_rank = max(1, math.ceil(d / 16))
+    return d, di, cfg.mamba_d_state, cfg.mamba_d_conv, dt_rank
+
+
+def init_mamba(key, cfg, dtype):
+    d, di, N, dconv, dt_rank = _mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dconv, di)) * (dconv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": layers.dense_init(ks[2], di, dt_rank + 2 * N, dtype),
+        "dt_proj": layers.dense_init(ks[3], dt_rank, di, dtype, scale=dt_rank ** -0.5),
+        "dt_bias": (jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(ks[4], (di,), minval=math.log(1e-3), maxval=math.log(1e-1))
+        )))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,di); w: (taps,di)."""
+    taps = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (taps - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(taps))
+    return y + b
+
+
+def _ssm_params(params, x, cfg, compute_dtype):
+    """Common projections. x: (B,S,di) conv-ed. Returns dt,B,C fp32."""
+    _, di, N, _, dt_rank = _mamba_dims(cfg)
+    proj = (x @ params["x_proj"].astype(compute_dtype)).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(jnp.float32) + params["dt_bias"])
+    return dt, Bm, Cm  # (B,S,di), (B,S,N), (B,S,N)
+
+
+def mamba_forward(params, x, cfg, chunk: int = 256, return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d).  Chunked parallel selective scan."""
+    B, S, d = x.shape
+    _, di, N, dconv, _ = _mamba_dims(cfg)
+    cd = x.dtype
+    xz = x @ params["in_proj"].astype(cd)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "dp", None, "tp")
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"].astype(cd), params["conv_b"].astype(cd)))
+    dt, Bm, Cm = _ssm_params(params, xc, cfg, cd)
+    A = -jnp.exp(params["A_log"])  # (di,N)
+    xf = xc.astype(jnp.float32)
+
+    # per-step scan elements
+    dtA = dt[..., None] * A  # (B,S,di,N)  log of dA (negative)
+    dBx = (dt * xf)[..., None] * Bm[:, :, None, :]  # (B,S,di,N)
+
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    def chunk_body(h0, inp):
+        dtA_c, dBx_c, C_c = inp  # (B,L,di,N), (B,L,di,N), (B,L,N)
+        # keep di sharded over tp through the scan (§Perf cell B: without
+        # these constraints GSPMD all-gathers the chunk tensors per step)
+        dtA_c = constrain(dtA_c, "dp", None, "tp", None)
+        dBx_c = constrain(dBx_c, "dp", None, "tp", None)
+
+        def comb(a, b):
+            return (a[0] + b[0], jnp.exp(b[0]) * a[1] + b[1])
+        logA_cum, h_within = jax.lax.associative_scan(comb, (dtA_c, dBx_c), axis=1)
+        h = h_within + jnp.exp(logA_cum) * h0[:, None]
+        h = constrain(h, "dp", None, "tp", None)
+        y = jnp.einsum("bldn,bln->bld", h, C_c)
+        return h[:, -1], y
+
+    dtA_c = dtA.reshape(B, nc, L, di, N).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(B, nc, L, di, N).transpose(1, 0, 2, 3, 4)
+    C_c = Cm.reshape(B, nc, L, N).transpose(1, 0, 2, 3)
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0, (dtA_c, dBx_c, C_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+
+    y = y + params["D"] * xf
+    y = (y.astype(cd)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(cd)
+    if return_state:
+        state = {"h": h_final, "conv": xin[:, S - (dconv - 1):, :]}
+        return out, state
+    return out
+
+
+def mamba_decode(params, x, state, cfg):
+    """x: (B,1,d); state: {"h": (B,di,N) fp32, "conv": (B,dconv-1,di)}."""
+    B = x.shape[0]
+    _, di, N, dconv, _ = _mamba_dims(cfg)
+    cd = x.dtype
+    xz = x @ params["in_proj"].astype(cd)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"].astype(cd), xin], axis=1)  # (B,dconv,di)
+    xc = jax.nn.silu(jnp.einsum("btd,td->bd", window, params["conv_w"].astype(cd))
+                     + params["conv_b"].astype(cd))[:, None]
+    new_conv = window[:, 1:].astype(state["conv"].dtype)
+    dt, Bm, Cm = _ssm_params(params, xc, cfg, cd)
+    A = -jnp.exp(params["A_log"])
+    xf = xc.astype(jnp.float32)
+    dA = jnp.exp(dt[..., None] * A)[:, 0]  # (B,di,N)
+    dBx = ((dt * xf)[..., None] * Bm[:, :, None, :])[:, 0]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None] + params["D"] * xf
+    y = y.astype(cd) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(cd), {"h": h, "conv": new_conv}
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.bfloat16):
+    _, di, N, dconv, _ = _mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, di, N), jnp.float32),
+            "conv": jnp.zeros((batch, dconv - 1, di), dtype)}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block, parallel chunked form)
+# ===========================================================================
+def _mlstm_dims(cfg):
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    di -= di % cfg.num_heads
+    return d, di, cfg.num_heads, di // cfg.num_heads
+
+
+def init_mlstm(key, cfg, dtype):
+    d, di, H, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (4, di)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": layers.dense_init(ks[2], di, di, dtype),
+        "wk": layers.dense_init(ks[3], di, di, dtype),
+        "wv": layers.dense_init(ks[4], di, di, dtype),
+        "w_if": layers.dense_init(ks[5], di, 2 * H, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "out_norm": jnp.zeros((hd,), dtype),
+        "down_proj": layers.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_qkv_gates(params, x, cfg):
+    """x: (B,S,d) -> q,k,v (B,S,H,hd); log_i, log_f (B,S,H); z (B,S,di)."""
+    d, di, H, hd = _mlstm_dims(cfg)
+    cd = x.dtype
+    B, S, _ = x.shape
+    up = x @ params["up_proj"].astype(cd)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = constrain(xm, "dp", None, "tp")
+    xc = jax.nn.silu(_causal_conv(xm, params["conv_w"].astype(cd), params["conv_b"].astype(cd)))
+    q = (xc @ params["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (xc @ params["wk"].astype(cd)).reshape(B, S, H, hd) * (hd ** -0.5)
+    v = (xm @ params["wv"].astype(cd)).reshape(B, S, H, hd)
+    gates = xc.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    log_i, f_pre = jnp.split(gates, 2, axis=-1)  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, log_i, log_f, z
+
+
+def _mlstm_chunk(qc, Fc, k, v, log_i, F, t_pos, s_pos):
+    """One query chunk of the stabilized parallel mLSTM.
+
+    qc: (B,L,H,hd); Fc: (B,L,H) cumulative log-forget at query pos;
+    k,v: (B,S,H,hd); log_i,F: (B,S,H); positions for causal masking.
+
+    Stabilizer math runs in fp32.  (§Perf note: storing the big (L,S)
+    tensors in bf16 was tried and REFUTED on the HLO-bytes metric — the
+    conversion ops offset the savings; the real fix is a fused Pallas
+    mLSTM kernel that never materializes them.)
+    """
+    D = (Fc.transpose(0, 2, 1)[..., None]        # (B,H,L,1)
+         - F.transpose(0, 2, 1)[:, :, None, :]   # (B,H,1,S)
+         + log_i.transpose(0, 2, 1)[:, :, None, :])
+    mask = t_pos[:, None] >= s_pos[None, :]
+    D = jnp.where(mask[None, None], D, -jnp.inf)
+    m = jnp.max(D, axis=-1, keepdims=True)  # (B,H,L,1)
+    m = jnp.maximum(m, -1e30)  # guard all-masked rows
+    W = jnp.exp(D - m)
+    scores = jnp.einsum("blhd,bshd->bhls", qc.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores * W
+    num = jnp.einsum("bhls,bshd->blhd", scores, v.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(scores.sum(-1)), jnp.exp(-m[..., 0])).transpose(0, 2, 1)
+    return num / den[..., None]
+
+
+def mlstm_forward(params, x, cfg, q_chunk: int = 1024, return_state: bool = False):
+    d, di, H, hd = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    cd = x.dtype
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(params, x, cfg)
+    # D_ts = F_t - F_s + log_i_s (inclusive cumulative log-forget): the
+    # contribution of step s at time t is (prod_{j=s+1..t} f_j) * i_s, and at
+    # t == s the own forget gate cancels, leaving log_i_s.
+    F = jnp.cumsum(log_f, axis=1)
+
+    pos = jnp.arange(S)
+    if S <= q_chunk:
+        h = _mlstm_chunk(q, F, k, v, log_i, F, pos, pos)
+    else:
+        assert S % q_chunk == 0
+        n = S // q_chunk
+        qs = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+        Fs = F.reshape(B, n, q_chunk, H).transpose(1, 0, 2, 3)
+        ps = pos.reshape(n, q_chunk)
+
+        def body(_, inp):
+            qc, Fc, pc = inp
+            return None, _mlstm_chunk(qc, Fc, k, v, log_i, F, pc, pos)
+
+        _, hs = jax.lax.scan(body, None, (qs, Fs, ps))
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+    h = layers.head_rms_norm(h.astype(cd), params["out_norm"], cfg.norm_eps)
+    h = h.reshape(B, S, di) * jax.nn.silu(z)
+    out = h @ params["down_proj"].astype(cd)
+    if return_state:
+        # Recurrent state equivalent to having consumed the full sequence,
+        # stored with the running stabilizer m = max_s D_Ss.
+        D_end = F[:, -1:, :] - F + log_i  # (B,S,H)
+        m_end = jnp.max(D_end, axis=1)  # (B,H)
+        w = jnp.exp(D_end - m_end[:, None, :]).astype(jnp.float32)
+        kf = k.astype(jnp.float32) * w[..., None]
+        C = jnp.einsum("bshd,bshe->bhde", kf, v.astype(jnp.float32))
+        n = kf.sum(axis=1)
+        # conv window tail (pre-conv activations of the mixer branch)
+        up = x @ params["up_proj"].astype(cd)
+        xm = jnp.split(up, 2, axis=-1)[0]
+        state = {"C": C, "n": n, "m": m_end, "conv": xm[:, S - 3:, :]}
+        return out, state
+    return out
+
+
+def mlstm_decode(params, x, state, cfg):
+    """state: {"C": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)} fp32."""
+    d, di, H, hd = _mlstm_dims(cfg)
+    B = x.shape[0]
+    cd = x.dtype
+    up = x @ params["up_proj"].astype(cd)
+    xm, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([state["conv"].astype(cd), xm], axis=1)
+    xc = jax.nn.silu(jnp.einsum("btd,td->bd", window, params["conv_w"].astype(cd))
+                     + params["conv_b"].astype(cd))
+    new_conv = window[:, 1:].astype(state["conv"].dtype)
+    q = (xc @ params["wq"].astype(cd)).reshape(B, H, hd).astype(jnp.float32)
+    k = ((xc @ params["wk"].astype(cd)).reshape(B, H, hd) * (hd ** -0.5)).astype(jnp.float32)
+    v = (xm[:, 0] @ params["wv"].astype(cd)).reshape(B, H, hd).astype(jnp.float32)
+    gates = xc.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    log_i, f_pre = jnp.split(gates, 2, axis=-1)  # (B,H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    i_sc = jnp.exp(log_i - m_new)[..., None]
+    C = f_sc[..., None] * state["C"] + i_sc[..., None] * (k[..., None] * v[..., None, :])
+    n = f_sc * state["n"] + i_sc * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(cd)
+    h = layers.head_rms_norm(h, params["out_norm"], cfg.norm_eps)
+    h = h.reshape(B, 1, di) * jax.nn.silu(z)
+    return h @ params["down_proj"].astype(cd), {
+        "C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.bfloat16):
+    _, di, H, hd = _mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, 3, di), dtype)}
+
+
+# ===========================================================================
+# sLSTM (scalar-memory recurrent block)
+# ===========================================================================
+def init_slstm(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w": layers.dense_init(ks[0], d, 4 * d, dtype),      # i,f,z,o input weights
+        "r": (jax.random.normal(ks[1], (4, H, hd, hd)) * (hd ** -0.5)).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "out_norm": jnp.zeros((hd,), dtype),
+    }
+
+
+def _slstm_step(params, xw, state, H, hd):
+    """xw: (B, 4d) precomputed x@w + b; state dict of (B,H,hd) fp32."""
+    B = xw.shape[0]
+    h_prev = state["h"]  # (B,H,hd) fp32
+    rec = jnp.einsum("bhd,ghde->gbhe", h_prev, params["r"].astype(jnp.float32))
+    pre = xw.astype(jnp.float32).reshape(B, 4, H, hd).transpose(1, 0, 2, 3) + rec
+    i_pre, f_pre, z_pre, o_pre = pre
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    c = f_sc * state["c"] + i_sc * jnp.tanh(z_pre)
+    n = f_sc * state["n"] + i_sc
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(params, x, cfg, return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    cd = x.dtype
+    xw = x @ params["w"].astype(cd) + params["b"].astype(cd)
+
+    def body(state, xw_t):
+        new = _slstm_step(params, xw_t, state, H, hd)
+        return new, new["h"]
+
+    state0 = init_slstm_state(cfg, B)
+    final, hs = jax.lax.scan(body, state0, xw.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3)  # (B,S,H,hd)
+    h = layers.head_rms_norm(h.astype(cd), params["out_norm"], cfg.norm_eps)
+    out = h.reshape(B, S, d)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode(params, x, state, cfg):
+    B = x.shape[0]
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    cd = x.dtype
+    xw = (x[:, 0] @ params["w"].astype(cd) + params["b"].astype(cd))
+    new = _slstm_step(params, xw, state, H, hd)
+    h = layers.head_rms_norm(new["h"].astype(cd), params["out_norm"], cfg.norm_eps)
+    return h.reshape(B, 1, d), new
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}

@@ -1,0 +1,273 @@
+"""Block assembly: (mixer, ffn) blocks tiled into a scanned layer stack.
+
+Layer stacks are organized as ``num_periods`` repetitions of an *effective
+period* — the lcm of the block pattern and MoE period — so every position in
+the period has a static structure and ``lax.scan`` runs over stacked period
+parameters (small HLO, fast compile at 512 partitions).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.partitioning import constrain
+
+
+def block_specs(cfg) -> List[Tuple[str, str]]:
+    """Per-position (mixer, ffn) specs for one effective period."""
+    period = cfg.pattern_period
+    if cfg.num_experts > 0:
+        period = math.lcm(period, cfg.moe_period)
+    assert cfg.num_layers % period == 0, (cfg.name, cfg.num_layers, period)
+    specs = []
+    for p in range(period):
+        mixer = cfg.kind_at(p)
+        if mixer in ("mlstm",):
+            ffn = "none"            # mLSTM block embeds its own projections
+        elif mixer == "slstm":
+            ffn = "ffn43"           # xLSTM post-up-projection FFN (4/3)
+        elif cfg.moe_at(p):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        specs.append((mixer, ffn))
+    return specs
+
+
+def num_periods(cfg) -> int:
+    return cfg.num_layers // len(block_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+_MIXER_INIT = {
+    "attn": attention.init_attention,
+    "mamba": ssm.init_mamba,
+    "mlstm": ssm.init_mlstm,
+    "slstm": ssm.init_slstm,
+}
+
+
+def init_block(key, cfg, spec):
+    mixer, ffn = spec
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "mixer_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mixer": _MIXER_INIT[mixer](k1, cfg, dtype),
+    }
+    if ffn == "mlp":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = layers.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "ffn43":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = layers.init_mlp(k2, cfg.d_model, int(cfg.d_model * 4 / 3), dtype)
+    elif ffn == "moe":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ffn"] = moe.init_moe(k3, cfg, dtype)
+    return p
+
+
+def _residual_constrain(x, cfg):
+    if cfg.seq_sharded_residual:
+        return constrain(x, "dp", ("sp",), None)
+    return constrain(x, "dp", None, None)
+
+
+def block_forward(params, x, cfg, spec, positions):
+    """Full-sequence forward. Returns (x, aux_loss, cache_seed)."""
+    mixer, ffn = spec
+    x = _residual_constrain(x, cfg)
+    h = layers.rms_norm(x, params["mixer_norm"], cfg.norm_eps)
+    cache_seed = None
+    if mixer == "attn":
+        y, (k, v) = attention.attention_forward(params["mixer"], h, cfg, positions)
+        cache_seed = {"k": k, "v": v}
+    elif mixer == "mamba":
+        y = ssm.mamba_forward(params["mixer"], h, cfg)
+    elif mixer == "mlstm":
+        y = ssm.mlstm_forward(params["mixer"], h, cfg)
+    elif mixer == "slstm":
+        y = ssm.slstm_forward(params["mixer"], h, cfg)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn in ("mlp", "ffn43"):
+        h = layers.rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        x = x + layers.apply_mlp(params["ffn"], h, x.dtype)
+    elif ffn == "moe":
+        h = layers.rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        y, aux = moe.apply_moe(params["ffn"], h, cfg)
+        x = x + y
+    x = _residual_constrain(x, cfg)
+    return x, aux, cache_seed
+
+
+def block_prefill(params, x, cfg, spec, positions):
+    """Full-sequence forward that also returns the decode cache."""
+    mixer, ffn = spec
+    x = _residual_constrain(x, cfg)
+    h = layers.rms_norm(x, params["mixer_norm"], cfg.norm_eps)
+    if mixer == "attn":
+        y, (k, v) = attention.attention_forward(params["mixer"], h, cfg, positions)
+        cache = {"k": k, "v": v}
+    elif mixer == "mamba":
+        y, cache = ssm.mamba_forward(params["mixer"], h, cfg, return_state=True)
+    elif mixer == "mlstm":
+        y, cache = ssm.mlstm_forward(params["mixer"], h, cfg, return_state=True)
+    elif mixer == "slstm":
+        y, cache = ssm.slstm_forward(params["mixer"], h, cfg, return_state=True)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn in ("mlp", "ffn43"):
+        h = layers.rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        x = x + layers.apply_mlp(params["ffn"], h, x.dtype)
+    elif ffn == "moe":
+        h = layers.rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        y, aux = moe.apply_moe(params["ffn"], h, cfg)
+        x = x + y
+    x = _residual_constrain(x, cfg)
+    return x, aux, cache
+
+
+def block_decode(params, x, cache, cfg, spec, write_idx):
+    """Single-token decode. Returns (x, new_cache)."""
+    mixer, ffn = spec
+    h = layers.rms_norm(x, params["mixer_norm"], cfg.norm_eps)
+    if mixer == "attn":
+        y, new_cache = attention.attention_decode(params["mixer"], h, cache, cfg, write_idx)
+    elif mixer == "mamba":
+        y, new_cache = ssm.mamba_decode(params["mixer"], h, cache, cfg)
+    elif mixer == "mlstm":
+        y, new_cache = ssm.mlstm_decode(params["mixer"], h, cache, cfg)
+    elif mixer == "slstm":
+        y, new_cache = ssm.slstm_decode(params["mixer"], h, cache, cfg)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+    if ffn in ("mlp", "ffn43"):
+        h = layers.rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        x = x + layers.apply_mlp(params["ffn"], h, x.dtype)
+    elif ffn == "moe":
+        h = layers.rms_norm(x, params["ffn_norm"], cfg.norm_eps)
+        y, _ = moe.apply_moe(params["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def init_block_cache(cfg, spec, batch: int, seq: int, dtype=jnp.bfloat16):
+    mixer, _ = spec
+    if mixer == "attn":
+        return attention.init_kv_cache(cfg, batch, seq, dtype)
+    if mixer == "mamba":
+        return ssm.init_mamba_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch, dtype)
+    if mixer == "slstm":
+        return ssm.init_slstm_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# Layer stack (scan over periods)
+# ---------------------------------------------------------------------------
+def init_stack(key, cfg):
+    """Params: tuple over period positions of pytrees stacked over periods."""
+    specs = block_specs(cfg)
+    P = num_periods(cfg)
+    out = []
+    for p, spec in enumerate(specs):
+        keys = jax.random.split(jax.random.fold_in(key, p), P)
+        stacked = jax.vmap(lambda k: init_block(k, cfg, spec))(keys)
+        out.append(stacked)
+    return tuple(out)
+
+
+def stack_forward(params, x, cfg, positions):
+    specs = block_specs(cfg)
+
+    def body(carry, period_params):
+        x, aux = carry
+        for p, spec in enumerate(specs):
+            x, a, _ = block_forward(period_params[p], x, cfg, spec, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        P = num_periods(cfg)
+        for i in range(P):
+            (x, aux), _ = body((x, aux), jax.tree.map(lambda a: a[i], params))
+    return x, aux
+
+
+def stack_prefill(params, x, cfg, positions):
+    """Forward that also returns per-layer decode caches (stacked like
+    ``init_caches``)."""
+    specs = block_specs(cfg)
+
+    def body(carry, period_params):
+        x, aux = carry
+        caches = []
+        for p, spec in enumerate(specs):
+            x, a, c = block_prefill(period_params[p], x, cfg, spec, positions)
+            aux = aux + a
+            caches.append(c)
+        return (x, aux), tuple(caches)
+
+    if cfg.scan_layers:
+        (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        outs = []
+        for i in range(num_periods(cfg)):
+            (x, aux), c = body((x, aux), jax.tree.map(lambda a: a[i], params))
+            outs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, aux, caches
+
+
+def stack_decode(params, x, caches, cfg, write_idx):
+    specs = block_specs(cfg)
+
+    def body(x, inp):
+        period_params, period_cache = inp
+        new_caches = []
+        for p, spec in enumerate(specs):
+            x, nc = block_decode(period_params[p], x, period_cache[p], cfg, spec, write_idx)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params, caches))
+    else:
+        P = num_periods(cfg)
+        outs = []
+        for i in range(P):
+            x, nc = body(x, jax.tree.map(lambda a: a[i], (params, caches)))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, new_caches
+
+
+def init_caches(cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Stacked caches matching stack_decode's scan structure."""
+    specs = block_specs(cfg)
+    P = num_periods(cfg)
+    out = []
+    for spec in specs:
+        one = init_block_cache(cfg, spec, batch, seq, dtype)
+        out.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (P,) + a.shape), one))
+    return tuple(out)

@@ -1,0 +1,4 @@
+from repro.optim import adamw, compression, outer  # noqa: F401
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state  # noqa: F401
+from repro.optim.compression import get_compressor  # noqa: F401
+from repro.optim.outer import OuterConfig, init_outer_state  # noqa: F401

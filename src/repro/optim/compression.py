@@ -1,0 +1,124 @@
+"""Lossy gradient compression with error feedback — the best-effort "message
+drop" operator on the cross-pod gradient path (DESIGN.md §2).
+
+Coordinates not selected (top-k) or rounded away (int8) are NOT retried; the
+residual folds into error-feedback state exactly as dropped best-effort
+messages fold into later simulation state.  Payloads are compact, so the
+cross-pod collective bytes shrink by the compression ratio (visible in the
+dry-run HLO — see benchmarks/roofline.py).
+
+SPMD note (§Perf cell C): encode must be SHAPE-PRESERVING for tensors with
+sharded dims — flattening/padding a sharded gradient forces GSPMD to gather
+it.  For ndim >= 2 leaves both compressors therefore work row-wise over the
+trailing dim (no reshape); 1-D leaves (tiny norm/bias grads) use the
+flat/blockwise forms, which also back the Pallas kernels.
+
+Pallas: ``repro.kernels.topk_compress`` / ``repro.kernels.quantize`` are the
+TPU kernels for the blockwise encode hot path; these jnp versions are the
+oracles and the CPU/dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Magnitude top-k selection; payload = (values, indices)."""
+
+    ratio: float = 0.01
+
+    def k_for(self, size: int) -> int:
+        return max(1, int(size * self.ratio))
+
+    def encode(self, leaf):
+        if leaf.ndim >= 2:
+            return self._encode_rows(leaf)
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        k = self.k_for(flat.size)
+        _, idx = lax.top_k(jnp.abs(flat), k)
+        vals = flat[idx]
+        residual = flat.at[idx].set(0.0).reshape(leaf.shape).astype(leaf.dtype)
+        return {"values": vals, "indices": idx.astype(jnp.int32)}, residual
+
+    def _encode_rows(self, leaf):
+        rows = leaf.reshape(leaf.shape[0], -1) if leaf.ndim > 2 else leaf
+        shape2 = rows.shape
+        x = rows.astype(jnp.float32)
+        k = self.k_for(shape2[-1])
+        _, idx = lax.top_k(jnp.abs(x), k)                 # (R, k)
+        vals = jnp.take_along_axis(x, idx, axis=-1)
+        residual = jnp.put_along_axis(x, idx, 0.0, axis=-1, inplace=False)
+        return ({"values": vals, "indices": idx.astype(jnp.int32)},
+                residual.reshape(leaf.shape).astype(leaf.dtype))
+
+    def decode_sum(self, gathered, shape, dtype):
+        """gathered: payload with a leading pod dim."""
+        vals, idx = gathered["values"], gathered["indices"]
+        if vals.ndim >= 3:  # (P, R, k) row-wise
+            P_, R, _ = vals.shape
+            cols = 1
+            for s in shape[1:]:
+                cols *= s
+            dense = jnp.zeros((R, cols), jnp.float32)
+            rows = jnp.arange(R)[:, None]
+            for p in range(P_):
+                dense = dense.at[rows, idx[p]].add(vals[p])
+            return dense.reshape(shape).astype(dtype)
+        size = 1
+        for s in shape:
+            size *= s
+        dense = jnp.zeros((size,), jnp.float32)
+        dense = dense.at[gathered["indices"].reshape(-1)].add(
+            gathered["values"].reshape(-1))
+        return dense.reshape(shape).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Symmetric int8 quantization: row-wise for ndim>=2 (shape-preserving,
+    SPMD-friendly), blockwise for 1-D leaves."""
+
+    block: int = 1024
+
+    def encode(self, leaf):
+        if leaf.ndim >= 2:
+            xf = leaf.astype(jnp.float32)
+            scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0 + 1e-12
+            q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+            residual = (xf - q.astype(jnp.float32) * scale).astype(leaf.dtype)
+            return {"q": q, "scale": scale}, residual
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        pad = (-flat.size) % self.block
+        padded = jnp.pad(flat, (0, pad)).reshape(-1, self.block)
+        scale = jnp.max(jnp.abs(padded), axis=1, keepdims=True) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(padded / scale), -127, 127).astype(jnp.int8)
+        deq = (q.astype(jnp.float32) * scale).reshape(-1)[:flat.size]
+        residual = (flat - deq).reshape(leaf.shape).astype(leaf.dtype)
+        return {"q": q, "scale": scale.astype(jnp.float32)}, residual
+
+    def decode_sum(self, gathered, shape, dtype):
+        """gathered: {"q","scale"} with a leading pod dim."""
+        deq = gathered["q"].astype(jnp.float32) * gathered["scale"]
+        total = deq.sum(axis=0)
+        if total.shape == tuple(shape):   # row-wise path
+            return total.astype(dtype)
+        total = total.reshape(-1)
+        size = 1
+        for s in shape:
+            size *= s
+        return total[:size].reshape(shape).astype(dtype)
+
+
+def get_compressor(name, **kw):
+    if name is None or name == "none":
+        return None
+    if name == "topk":
+        return TopKCompressor(**kw)
+    if name == "int8":
+        return Int8Compressor(**kw)
+    raise ValueError(name)

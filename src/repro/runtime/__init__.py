@@ -1,0 +1,2 @@
+from repro.runtime import channels, faults, simulator  # noqa: F401
+from repro.runtime.simulator import SimConfig, Simulator, SimResult  # noqa: F401

@@ -1,0 +1,89 @@
+"""Fault and heterogeneity injection for the discrete-event runtime.
+
+Models the paper's observed conditions: per-step lognormal jitter with
+occasional stalls, a faulty node (lac-417 analogue: extreme slowdown +
+degraded links for the node and its clique), and transient stragglers.
+
+Randomness is a counter-based splitmix64 hash — deterministic, O(ns) per
+sample, no generator objects on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+_MASK = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _MASK
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    return z ^ (z >> 31)
+
+
+def _hash_uniform(*ints: int) -> float:
+    """Deterministic uniform in (0, 1) from integer keys."""
+    h = 0
+    for v in ints:
+        h = _splitmix64(h ^ (v & _MASK))
+    return (h >> 11) / float(1 << 53) + 1e-16
+
+
+def _hash_normal(*ints: int) -> float:
+    u1 = _hash_uniform(*ints, 1)
+    u2 = _hash_uniform(*ints, 2)
+    return math.sqrt(-2.0 * math.log(u1)) * math.cos(2 * math.pi * u2)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    compute_slowdown: Dict[int, float] = dataclasses.field(default_factory=dict)
+    link_slowdown: Dict[Tuple[int, int], float] = dataclasses.field(default_factory=dict)
+
+    def compute_factor(self, pid: int) -> float:
+        return self.compute_slowdown.get(pid, 1.0)
+
+    def link_factor(self, src: int, dst: int) -> float:
+        return self.link_slowdown.get((src, dst), 1.0)
+
+
+def faulty_node(pid: int, neighbors, compute_factor: float = 30.0,
+                link_factor: float = 50.0) -> FaultModel:
+    """A single apparently-faulty node: slow compute and slow links to/from
+    its clique (the paper's lac-417 scenario)."""
+    links = {}
+    for nb in neighbors:
+        links[(pid, nb)] = link_factor
+        links[(nb, pid)] = link_factor
+    return FaultModel({pid: compute_factor}, links)
+
+
+class Jitter:
+    """Deterministic per-(process, step) multiplicative jitter."""
+
+    def __init__(self, sigma: float, seed: int,
+                 stall_prob: float = 0.0, stall_factor: float = 1.0):
+        self.sigma = sigma
+        self.seed = seed
+        self.stall_prob = stall_prob
+        self.stall_factor = stall_factor
+
+    def factor(self, pid: int, step: int) -> float:
+        if self.sigma <= 0 and self.stall_prob <= 0:
+            return 1.0
+        f = 1.0
+        if self.sigma > 0:
+            z = _hash_normal(self.seed, pid, step)
+            f = math.exp(-0.5 * self.sigma ** 2 + self.sigma * z)
+        if self.stall_prob > 0 and _hash_uniform(self.seed, 13, pid, step) < self.stall_prob:
+            f *= self.stall_factor
+        return f
+
+    def latency_factor(self, pid: int, count: int) -> float:
+        if self.sigma <= 0:
+            return 1.0
+        z = _hash_normal(self.seed, 7919, pid, count)
+        return math.exp(-0.5 * self.sigma ** 2 + self.sigma * z)

@@ -1,0 +1,274 @@
+"""Discrete-event best-effort runtime: virtual processes, real compute.
+
+Executes an application's *actual* compute fragments (JAX/numpy) under a
+virtual-time model of per-step jitter, link latency, bounded send buffers,
+barrier costs, and fault injection — reproducing the paper's cluster
+experiments (C1–C4, DESIGN.md §1) deterministically on a single host.
+
+Event ordering: step completions are processed in global virtual-time order
+(heap), so message availability is causally consistent.  Each simstep is
+compute-phase → communication-phase, with received messages incorporated at
+the *next* compute phase, matching the paper's model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.modes import AsyncMode
+from repro.core.qos import Counters, QosReport, report
+from repro.runtime.channels import Duct
+from repro.runtime.faults import FaultModel, Jitter
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    mode: AsyncMode = AsyncMode.BEST_EFFORT
+    duration: float = 1.0              # virtual seconds
+    base_compute: float = 15e-6        # mean compute seconds per update
+    work_units: int = 0                # added compute work (paper §III-C)
+    work_unit_cost: float = 35e-9
+    per_message_cost: float = 0.1e-6   # receiver-side handling per message
+    per_pull_cost: float = 0.3e-6      # per pull attempt (bulk drain)
+    jitter_sigma: float = 0.15
+    stall_prob: float = 0.01           # occasional OS/cache stall
+    stall_factor: float = 8.0
+    base_latency: float = 500e-6       # internode one-way latency
+    latency_sigma: float = 0.5
+    buffer_capacity: int = 64
+    barrier_base: float = 2e-5
+    barrier_per_log2: float = 1.5e-5   # sync cost grows with CPU count
+    rolling_quantum: float = 0.01      # mode 1 work chunk (10 ms, paper)
+    fixed_interval: float = 0.25       # mode 2 sync timepoints
+    snapshot_interval: float = 0.2     # QoS snapshot spacing
+    snapshot_warmup: float = 0.2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    updates: List[int]
+    horizon: float
+    quality: float
+    qos: List[QosReport]               # one per (process, window)
+    qos_by_process: Dict[int, List[QosReport]]
+    dropped: int
+    sent: int
+
+    @property
+    def update_rate_per_cpu(self) -> float:
+        return sum(self.updates) / len(self.updates) / self.horizon
+
+    @property
+    def delivery_failure_rate(self) -> float:
+        return self.dropped / max(self.sent, 1)
+
+
+class _Proc:
+    __slots__ = ("pid", "clock", "steps", "pending_handling", "waiting",
+                 "last_release", "barrier_seq", "done", "touch")
+
+    def __init__(self, pid: int):
+        self.pid = pid
+        self.clock = 0.0
+        self.steps = 0
+        self.pending_handling = 0.0
+        self.waiting = False
+        self.last_release = 0.0
+        self.barrier_seq = 0
+        self.done = False
+        self.touch: Dict[int, int] = {}
+
+
+class Simulator:
+    """Generic engine; the application provides fragments + topology."""
+
+    def __init__(self, app, cfg: SimConfig, faults: Optional[FaultModel] = None):
+        self.app = app
+        self.cfg = cfg
+        self.faults = faults or FaultModel()
+        self.n = app.n_processes
+        self.topology: Dict[int, List[int]] = app.topology()
+        self.fragments = app.make_fragments()
+        self.jitter = Jitter(cfg.jitter_sigma, cfg.seed,
+                             cfg.stall_prob, cfg.stall_factor)
+        self.procs = [_Proc(i) for i in range(self.n)]
+        for p in self.procs:
+            p.touch = {nb: 0 for nb in self.topology[p.pid]}
+        self.ducts: Dict[Tuple[int, int], Duct] = {}
+        for src, nbs in self.topology.items():
+            for dst in nbs:
+                self.ducts[(src, dst)] = Duct(
+                    cfg.buffer_capacity, self._latency_fn(src, dst),
+                    name=f"{src}->{dst}")
+        self._lat_count = 0
+        self._snapshots: Dict[int, List[Tuple[float, Counters]]] = {
+            i: [] for i in range(self.n)}
+        self._barrier_arrivals: Dict[int, List[Tuple[int, float]]] = {}
+
+    # ------------------------------------------------------------------
+    def _latency_fn(self, src, dst):
+        def fn(now):
+            self._lat_count += 1
+            f = self.jitter.latency_factor(src, self._lat_count)
+            return self.cfg.base_latency * f * self.faults.link_factor(src, dst)
+        return fn
+
+    def _step_duration(self, pid: int, step: int) -> float:
+        cfg = self.cfg
+        base = cfg.base_compute + cfg.work_units * cfg.work_unit_cost
+        f = self.jitter.factor(pid, step)
+        return base * f * self.faults.compute_factor(pid)
+
+    def _barrier_cost(self) -> float:
+        if self.n <= 1:
+            return 0.0  # a lone process has nothing to synchronize with
+        return self.cfg.barrier_base + self.cfg.barrier_per_log2 * math.log2(self.n)
+
+    # ------------------------------------------------------------------
+    def _proc_counters(self, pid: int) -> Counters:
+        """Aggregate a process's channel counters + its own update/touch."""
+        c = Counters()
+        p = self.procs[pid]
+        c.update_count = p.steps
+        c.touch_count = sum(p.touch.values())
+        c.wall_time = p.clock
+        for nb in self.topology[pid]:
+            out_d = self.ducts[(pid, nb)]
+            in_d = self.ducts[(nb, pid)]
+            c.attempted_send_count += out_d.inlet.attempted_send_count
+            c.successful_send_count += out_d.inlet.successful_send_count
+            c.laden_pull_count += in_d.outlet.laden_pull_count
+            c.message_count += in_d.outlet.message_count
+            c.pull_attempt_count += in_d.outlet.pull_attempt_count
+        return c
+
+    def _maybe_snapshot(self, pid: int, t: float):
+        snaps = self._snapshots[pid]
+        due = self.cfg.snapshot_warmup + len(snaps) * self.cfg.snapshot_interval
+        if t >= due:
+            c = self._proc_counters(pid)
+            c.wall_time = t
+            snaps.append((t, c))
+
+    # ------------------------------------------------------------------
+    def _barrier_due(self, p: _Proc, t: float) -> bool:
+        mode = self.cfg.mode
+        if mode == AsyncMode.BARRIER_EVERY_STEP:
+            return True
+        if mode == AsyncMode.ROLLING_BARRIER:
+            return (t - p.last_release) >= self.cfg.rolling_quantum
+        if mode == AsyncMode.FIXED_BARRIER:
+            return t >= (p.barrier_seq + 1) * self.cfg.fixed_interval
+        return False
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        heap: List[Tuple[float, int, int]] = []
+        seq = 0
+        for p in self.procs:
+            d = self._step_duration(p.pid, 0)
+            heapq.heappush(heap, (d, seq, p.pid))
+            seq += 1
+
+        active = self.n
+        comm = cfg.mode != AsyncMode.NO_COMM
+
+        while heap:
+            t, _, pid = heapq.heappop(heap)
+            p = self.procs[pid]
+            if p.done:
+                continue
+            p.clock = t
+
+            # --- communication phase: bulk-drain inboxes -------------------
+            inbox = {}
+            n_msgs = 0
+            if comm:
+                for nb in self.topology[pid]:
+                    msg, drained = self.ducts[(nb, pid)].latest(t)
+                    n_msgs += drained
+                    if msg is not None:
+                        p.touch[nb] = 1 + msg.touch
+                        inbox[nb] = msg.payload
+                    else:
+                        inbox[nb] = None
+            else:
+                inbox = {nb: None for nb in self.topology[pid]}
+
+            # --- compute phase (the real application fragment) -------------
+            outputs = self.fragments[pid].update(inbox)
+            p.steps += 1
+
+            if comm:
+                for nb, payload in outputs.items():
+                    self.ducts[(pid, nb)].try_send(payload, t, p.touch[nb])
+
+            p.pending_handling = (n_msgs * cfg.per_message_cost
+                                  + len(self.topology[pid]) * cfg.per_pull_cost)
+            self._maybe_snapshot(pid, t)
+
+            # --- termination ------------------------------------------------
+            if t >= cfg.duration:
+                p.done = True
+                active -= 1
+                # release any barrier this process would have joined
+                seq = self._try_release_barriers(heap, seq)
+                continue
+
+            # --- scheduling / barriers --------------------------------------
+            if self._barrier_due(p, t):
+                b = p.barrier_seq
+                self._barrier_arrivals.setdefault(b, []).append((pid, t))
+                p.waiting = True
+                seq = self._try_release_barriers(heap, seq)
+            else:
+                d = self._step_duration(pid, p.steps) + p.pending_handling
+                heapq.heappush(heap, (t + d, seq, pid))
+                seq += 1
+
+        updates = [p.steps for p in self.procs]
+        qos_by_proc: Dict[int, List[QosReport]] = {}
+        all_qos: List[QosReport] = []
+        for pid, snaps in self._snapshots.items():
+            reps = []
+            for (t0, c0), (t1, c1) in zip(snaps, snaps[1:]):
+                reps.append(report(c0, c1))
+            qos_by_proc[pid] = reps
+            all_qos.extend(reps)
+
+        sent = sum(d.inlet.attempted_send_count for d in self.ducts.values())
+        ok = sum(d.inlet.successful_send_count for d in self.ducts.values())
+        return SimResult(
+            updates=updates,
+            horizon=cfg.duration,
+            quality=self.app.quality(self.fragments),
+            qos=all_qos,
+            qos_by_process=qos_by_proc,
+            dropped=sent - ok,
+            sent=sent,
+        )
+
+    # ------------------------------------------------------------------
+    def _try_release_barriers(self, heap, seq) -> int:
+        """Release every barrier whose full active cohort has arrived."""
+        for b in sorted(self._barrier_arrivals):
+            arrivals = self._barrier_arrivals[b]
+            waiting_active = [a for a in arrivals if not self.procs[a[0]].done]
+            needed = sum(1 for p in self.procs
+                         if not p.done and p.barrier_seq == b)
+            if needed > 0 and len(waiting_active) >= needed:
+                release = max(a[1] for a in arrivals) + self._barrier_cost()
+                for pid, _ in waiting_active:
+                    p = self.procs[pid]
+                    p.waiting = False
+                    p.barrier_seq = b + 1
+                    p.last_release = release
+                    d = self._step_duration(pid, p.steps) + p.pending_handling
+                    heapq.heappush(heap, (release + d, seq, pid))
+                    seq += 1
+                del self._barrier_arrivals[b]
+        return seq

@@ -1,0 +1,69 @@
+"""Per-architecture smoke tests: reduced config of the same family runs one
+forward + train-grad step (and a decode step) on CPU; shapes + no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.smoke import reduce_for_smoke
+from repro.models import lm, modality, transformer
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend:
+        batch[modality.frontend_input_name(cfg)] = (
+            jax.random.normal(KEY, (B, cfg.frontend_len, cfg.d_model)) * 0.02)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert np.isfinite(float(loss)), arch
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab_size)) < 1.5
+    for leaf in jax.tree.leaves(grads):
+        assert not bool(jnp.isnan(leaf).any()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = lm.init_params(KEY, cfg)
+    B, S = 2, 16
+    caches = transformer.init_caches(cfg, B, S, jnp.bfloat16)
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab_size)
+    nt, logits, nc = lm.decode_step(params, tok, caches, cfg, S - 1)
+    assert nt.shape == (B, 1)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), arch
+    # cache structure preserved
+    assert jax.tree.structure(nc) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_abstract_shapes(arch):
+    """Full config param tree builds abstractly (no allocation) and the
+    parameter count is in the expected family ballpark."""
+    cfg = get_config(arch)
+    n = lm.param_count(cfg)
+    expected = {
+        "musicgen-large": (2.5e9, 4e9),
+        "qwen2.5-3b": (2e9, 4e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "qwen2-1.5b": (1e9, 2.2e9),
+        "minitron-8b": (7e9, 10.5e9),
+        "deepseek-moe-16b": (12e9, 20e9),
+        "dbrx-132b": (110e9, 150e9),
+        "llava-next-mistral-7b": (6.5e9, 8.5e9),
+        "xlstm-125m": (0.08e9, 0.2e9),
+        "jamba-v0.1-52b": (44e9, 60e9),
+    }[arch]
+    assert expected[0] < n < expected[1], (arch, n)

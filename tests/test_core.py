@@ -1,0 +1,149 @@
+"""Core best-effort library tests: QoS metrics, compressors, optimizers.
+
+Multi-device conduit/collective semantics are tested in
+test_core_multidevice.py (subprocess with forced host device count)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qos
+from repro.core.modes import AsyncMode, sync_due
+from repro.optim import adamw, compression, outer
+
+
+# ---------------------------------------------------------------------------
+# QoS metrics (paper §II-D formulas)
+# ---------------------------------------------------------------------------
+def _counters(**kw):
+    return qos.Counters(**kw)
+
+
+def test_simstep_period():
+    b = _counters(update_count=0, wall_time=0.0)
+    a = _counters(update_count=100, wall_time=2.0)
+    assert qos.simstep_period(b, a) == pytest.approx(0.02)
+
+
+def test_simstep_latency_and_walltime():
+    b = _counters()
+    a = _counters(update_count=100, touch_count=25, wall_time=1.0)
+    assert qos.simstep_latency(b, a) == pytest.approx(4.0)
+    assert qos.walltime_latency(b, a) == pytest.approx(4.0 * 0.01)
+
+
+def test_simstep_latency_no_touches_best_case():
+    b = _counters()
+    a = _counters(update_count=50, touch_count=0, wall_time=1.0)
+    assert qos.simstep_latency(b, a) == 50.0  # best-case: one elapsed touch
+
+
+def test_delivery_failure_rate():
+    b = _counters()
+    a = _counters(attempted_send_count=100, successful_send_count=70)
+    assert qos.delivery_failure_rate(b, a) == pytest.approx(0.3)
+    assert qos.delivery_failure_rate(b, b) == 0.0
+
+
+def test_clumpiness_even_stream_is_zero():
+    # every message in its own laden pull
+    b = _counters()
+    a = _counters(laden_pull_count=10, message_count=10, pull_attempt_count=50)
+    assert qos.delivery_clumpiness(b, a) == pytest.approx(0.0)
+
+
+def test_clumpiness_pigeonhole_zero():
+    # more messages than pulls, every pull laden
+    b = _counters()
+    a = _counters(laden_pull_count=20, message_count=100, pull_attempt_count=20)
+    assert qos.delivery_clumpiness(b, a) == pytest.approx(0.0)
+
+
+def test_clumpiness_single_burst_near_one():
+    b = _counters()
+    a = _counters(laden_pull_count=1, message_count=100, pull_attempt_count=100)
+    assert qos.delivery_clumpiness(b, a) == pytest.approx(0.99)
+
+
+def test_report_bundle():
+    b = _counters()
+    a = _counters(update_count=10, touch_count=5, attempted_send_count=10,
+                  successful_send_count=10, laden_pull_count=5, message_count=5,
+                  pull_attempt_count=10, wall_time=1.0)
+    r = qos.report(b, a)
+    assert set(r.as_dict()) == {"simstep_period", "simstep_latency",
+                                "walltime_latency", "delivery_failure_rate",
+                                "delivery_clumpiness"}
+
+
+# ---------------------------------------------------------------------------
+# Modes
+# ---------------------------------------------------------------------------
+def test_sync_due():
+    assert bool(sync_due(AsyncMode.BARRIER_EVERY_STEP, 3, 10))
+    assert bool(sync_due(AsyncMode.ROLLING_BARRIER, 9, 10))
+    assert not bool(sync_due(AsyncMode.ROLLING_BARRIER, 5, 10))
+    assert not bool(sync_due(AsyncMode.BEST_EFFORT, 9, 10))
+    assert not bool(sync_due(AsyncMode.NO_COMM, 9, 10))
+
+
+# ---------------------------------------------------------------------------
+# Compressors (error feedback invariants)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("comp", [compression.TopKCompressor(ratio=0.25),
+                                  compression.Int8Compressor(block=16)],
+                         ids=["topk", "int8"])
+def test_compressor_error_feedback_identity(comp):
+    """payload-decoded + residual must equal the input (lossless split)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 33))
+    payload, residual = comp.encode(x)
+    gathered = jax.tree.map(lambda p: p[None], payload)  # 1 "pod"
+    decoded = comp.decode_sum(gathered, x.shape, x.dtype)
+    np.testing.assert_allclose(np.asarray(decoded + residual), np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_topk_keeps_largest():
+    comp = compression.TopKCompressor(ratio=0.1)
+    x = jnp.zeros((100,)).at[7].set(5.0).at[42].set(-9.0)
+    payload, residual = comp.encode(x)
+    kept = set(np.asarray(payload["indices"]).tolist())
+    assert {7, 42} <= kept or 42 in kept  # k=10, both fit
+    assert float(jnp.abs(residual).max()) == 0.0
+
+
+def test_int8_quantization_error_bounded():
+    comp = compression.Int8Compressor(block=64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    payload, residual = comp.encode(x)
+    # error bounded by half a quantization step per block
+    scale = np.asarray(payload["scale"]).reshape(-1)
+    err = np.abs(np.asarray(residual)).reshape(-1, 64).max(axis=1)
+    assert (err <= scale * 0.5 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# AdamW + outer optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_descends_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=100, grad_clip=1e9)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init_opt_state(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw.apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_outer_step_moves_anchor_toward_workers():
+    params = {"w": jnp.array([1.0])}
+    ostate = outer.init_outer_state(params)
+    # workers drifted to anchor - delta => mean_delta = anchor - params
+    drifted = {"w": jnp.array([0.0])}
+    delta = jax.tree.map(lambda a, p: a - p, ostate["anchor"], drifted)
+    cfg = outer.OuterConfig(outer_lr=1.0, outer_momentum=0.0, nesterov=False)
+    new_params, new_state = outer.outer_step(drifted, ostate, delta, cfg)
+    # anchor moves from 1.0 toward 0.0 by outer_lr * delta
+    assert float(new_state["anchor"]["w"][0]) == pytest.approx(0.0)
+    assert float(new_params["w"][0]) == pytest.approx(0.0)

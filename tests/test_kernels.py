@@ -1,0 +1,182 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes, dtypes, and block sizes (+ hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.decode_attention.kernel import decode_attention_partials
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.quantize import dequantize, quantize, quantize_ref
+from repro.kernels.topk_compress import topk_compress, topk_compress_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BK,G,S,hd,bq,bk", [
+    (2, 1, 256, 64, 128, 128),
+    (2, 2, 256, 128, 64, 128),
+    (1, 4, 512, 64, 128, 64),
+    (3, 1, 128, 32, 128, 128),   # single block (bq=bk=S)
+])
+def test_flash_attention_matches_ref(BK, G, S, hd, bq, bk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BK, G, S, hd), dtype)
+    k = jax.random.normal(ks[1], (BK, S, hd), dtype)
+    v = jax.random.normal(ks[2], (BK, S, hd), dtype)
+    out = flash_attention_kernel(q, k, v, causal=True, bq=bq, bk=bk,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 2, 256, 64))
+    k = jax.random.normal(ks[1], (2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 256, 64))
+    out = flash_attention_kernel(q, k, v, causal=False, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_model_layout_wrapper():
+    """ops.flash_attention agrees with the model's chunked jnp attention."""
+    from repro.configs.base import ModelConfig
+    from repro.models import attention, lm
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", param_dtype="float32")
+    params = lm.init_params(KEY, cfg)["stack"][0]
+    attn_p = jax.tree.map(lambda a: a[0], params)["mixer"]
+    x = jax.random.normal(KEY, (2, 128, 64))
+    pos = jnp.broadcast_to(jnp.arange(128, dtype=jnp.int32)[None], (2, 128))
+    y_ref, (k, v) = attention.attention_forward(attn_p, x, cfg, pos)
+    q, k2, v2 = attention._project_qkv(attn_p, x, cfg, pos)
+    o = flash_attention(q, k2, v2, causal=True, interpret=True)
+    o = o.reshape(2, 128, -1) @ attn_p["wo"]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(s_blocks=st.integers(1, 4), hd_pow=st.integers(5, 7))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property_blocks(s_blocks, hd_pow):
+    S, hd = 128 * s_blocks, 2 ** hd_pow
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 1, S, hd))
+    k = jax.random.normal(ks[1], (1, S, hd))
+    v = jax.random.normal(ks[2], (1, S, hd))
+    out = flash_attention_kernel(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("BK,G,S,hd,bc", [
+    (4, 2, 1024, 64, 256),
+    (2, 1, 2048, 128, 512),
+    (1, 8, 512, 64, 512),     # single chunk
+])
+def test_decode_attention_matches_ref(BK, G, S, hd, bc, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BK, G, hd), dtype)
+    k = jax.random.normal(ks[1], (BK, S, hd), dtype)
+    v = jax.random.normal(ks[2], (BK, S, hd), dtype)
+    out = decode_attention(q, k, v, bc=bc, interpret=True)
+    ref = decode_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_partials_combine_invariance():
+    """Chunk size must not change the combined result (flash-decoding)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 2, 64))
+    k = jax.random.normal(ks[1], (2, 1024, 64))
+    v = jax.random.normal(ks[2], (2, 1024, 64))
+    a = decode_attention(q, k, v, bc=128, interpret=True)
+    b = decode_attention(q, k, v, bc=1024, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# topk compress
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,block,ratio", [
+    (4096, 512, 0.05), (1000, 256, 0.1), (128, 128, 0.5),
+])
+def test_topk_matches_ref(n, block, ratio, dtype):
+    x = (jax.random.normal(KEY, (n,)) * 3).astype(dtype)
+    vals, gidx, nb = topk_compress(x, ratio=ratio, block=block, interpret=True)
+    pad = (-n) % block
+    padded = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    rvals, ridx = topk_compress_ref(padded, max(1, int(block * ratio)))
+    # same magnitudes selected per block (order may differ on ties)
+    np.testing.assert_allclose(
+        np.sort(np.abs(np.asarray(vals, np.float32)), axis=-1),
+        np.sort(np.abs(np.asarray(rvals)), axis=-1), rtol=1e-5, atol=1e-5)
+    # global indices address the right values
+    flat = np.asarray(jnp.pad(x.astype(jnp.float32), (0, pad)))
+    np.testing.assert_allclose(flat[np.asarray(gidx).reshape(-1)],
+                               np.asarray(vals, np.float32).reshape(-1),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_topk_property_selected_dominate(seed):
+    """Every selected |value| >= every unselected |value| in its block."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+    vals, gidx, nb = topk_compress(x, ratio=0.1, block=256, interpret=True)
+    xa = np.asarray(x)
+    for b in range(2):
+        sel = np.asarray(gidx[b]) - b * 256
+        blockv = np.abs(xa[b * 256:(b + 1) * 256])
+        thresh = np.abs(np.asarray(vals[b])).min()
+        unselected = np.delete(blockv, sel)
+        assert (unselected <= thresh + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,block", [(1000, 256), (4096, 1024), (64, 128)])
+def test_quantize_roundtrip_error_bounded(n, block, dtype):
+    x = (jax.random.normal(KEY, (n,)) * 5).astype(dtype)
+    q, s, size = quantize(x, block=block, interpret=True)
+    assert q.dtype == jnp.int8
+    xr = dequantize(q, s, size, interpret=True)
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(xr)[:n])
+    # elementwise error bounded by half a step of that element's block scale
+    scales = np.asarray(s).reshape(-1)
+    bound = np.repeat(scales, block)[:n] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_quantize_matches_ref():
+    x = jax.random.normal(KEY, (8, 256)) * 2
+    q, s = quantize_ref(x)
+    q2, s2, _ = quantize(x.reshape(-1), block=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-6)

@@ -1,0 +1,87 @@
+"""Tests for perf/analysis machinery: replica-group classification,
+param pre-cast, MoE dispatch positions."""
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "benchmarks"))
+
+from hlo_tools import group_spans_pods  # noqa: E402
+
+
+def test_group_spans_pods_iota_transposed():
+    # [256,2]<=[2,256]T(1,0): groups pair device i with i+256 => cross-pod
+    line = 'x = f32[8] all-reduce(%y), replica_groups=[256,2]<=[2,256]T(1,0)'
+    assert group_spans_pods(line, pod_stride=256)
+
+
+def test_group_spans_pods_intra_pod_pairs():
+    # [256,2]<=[512]: consecutive pairs (model axis) => intra-pod
+    line = 'x = f32[8] all-gather(%y), replica_groups=[256,2]<=[512]'
+    assert not group_spans_pods(line, pod_stride=256)
+
+
+def test_group_spans_pods_data_axis_groups():
+    # FSDP gathers over data within a pod: [32,16]<=[2,16,16]T(0,2,1)
+    line = 'x = f32[8] all-gather(%y), replica_groups=[32,16]<=[2,16,16]T(0,2,1)'
+    assert not group_spans_pods(line, pod_stride=256)
+
+
+def test_group_spans_pods_explicit_list():
+    line = 'x = f32[8] all-reduce(%y), replica_groups={{0,256},{1,257}}'
+    assert group_spans_pods(line)
+    line2 = 'x = f32[8] all-reduce(%y), replica_groups={{0,1},{2,3}}'
+    assert not group_spans_pods(line2)
+
+
+def test_cast_params_for_compute_rules():
+    from repro.configs.base import ModelConfig
+    from repro.models import lm
+    cfg = ModelConfig(name="c", family="moe", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_experts=4, experts_per_tok=2, moe_d_ff=32)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cast = lm.cast_params_for_compute(params, cfg)
+    # 2-D+ weights cast to bf16
+    assert cast["embed"].dtype == jnp.bfloat16
+    # norm scales (1-D) stay fp32
+    assert cast["final_norm"].dtype == jnp.float32
+    # router stays fp32 for top-k stability
+    routers = [l for p, l in jax.tree_util.tree_flatten_with_path(cast)[0]
+               if any("router" in str(getattr(k, "key", "")) for k in p)]
+    assert routers and all(r.dtype == jnp.float32 for r in routers)
+
+
+def test_moe_positions_in_expert():
+    from repro.models.moe import _positions_in_expert
+    idx = jnp.array([[0, 1], [0, 0], [1, 2]])  # (T=3, k=2)
+    pos = np.asarray(_positions_in_expert(idx, 4))
+    # expert 0 chosen 3x -> positions {0,1,2}; expert 1 twice -> {0,1}
+    e0 = sorted(pos[idx == 0].tolist())
+    e1 = sorted(pos[np.asarray(idx) == 1].tolist())
+    assert e0 == [0, 1, 2]
+    assert e1 == [0, 1]
+    assert pos[2, 1] == 0  # expert 2's only token
+
+
+def test_moe_capacity_drop_is_best_effort():
+    """Tokens over capacity are dropped (no retry); the residual path still
+    carries them — loss stays finite and finite-grad."""
+    from repro.configs.base import ModelConfig
+    from repro.models import moe as moe_mod
+    cfg = ModelConfig(name="c", family="moe", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      num_experts=4, experts_per_tok=2, moe_d_ff=32,
+                      dtype="float32", param_dtype="float32")
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32))
+    # capacity_factor tiny -> heavy drops
+    y, aux = moe_mod.apply_moe(p, x, cfg, capacity_factor=0.1)
+    assert np.isfinite(np.asarray(y)).all()
+    yfull, _ = moe_mod.apply_moe(p, x, cfg, capacity_factor=4.0)
+    # dropped tokens mean output differs from the no-drop compute
+    assert not np.allclose(np.asarray(y), np.asarray(yfull))

@@ -1,0 +1,73 @@
+"""Hypothesis property tests on runtime/system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.modes import AsyncMode
+from repro.core.qos import Counters, report
+from repro.runtime.simulator import SimConfig, Simulator
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+
+
+@given(mode=st.sampled_from([0, 1, 2, 3, 4]),
+       n=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_simulator_conservation_and_bounds(mode, n, seed):
+    """Invariants for any mode/scale/seed:
+    - messages: attempted = successful + dropped; received <= successful
+    - every process clock ends within the horizon + one step
+    - update counts are positive and (mode 0) lockstep
+    """
+    app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=16,
+                                         seed=seed))
+    cfg = SimConfig(mode=AsyncMode(mode), duration=0.01, seed=seed,
+                    base_latency=50e-6, buffer_capacity=4)
+    sim = Simulator(app, cfg)
+    res = sim.run()
+
+    attempted = sum(d.inlet.attempted_send_count for d in sim.ducts.values())
+    successful = sum(d.inlet.successful_send_count for d in sim.ducts.values())
+    received = sum(d.outlet.message_count for d in sim.ducts.values())
+    in_flight = sum(d.backlog for d in sim.ducts.values())
+    assert attempted == successful + res.dropped
+    assert received + in_flight == successful
+    assert all(u > 0 for u in res.updates)
+    if AsyncMode(mode) == AsyncMode.BARRIER_EVERY_STEP:
+        assert max(res.updates) - min(res.updates) <= 1
+    if AsyncMode(mode) == AsyncMode.NO_COMM:
+        assert attempted == 0
+
+
+@given(u=st.integers(1, 10_000), t=st.integers(0, 5_000),
+       a=st.integers(0, 10_000), s=st.integers(0, 10_000),
+       lp=st.integers(0, 1000), m=st.integers(0, 1000),
+       p=st.integers(0, 1000), w=st.floats(1e-6, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_qos_metrics_bounded(u, t, a, s, lp, m, p, w):
+    """QoS metrics stay in their defined ranges for any counter deltas."""
+    s = min(s, a)
+    lp = min(lp, p, m)
+    before = Counters()
+    after = Counters(update_count=u, touch_count=t, attempted_send_count=a,
+                     successful_send_count=s, laden_pull_count=lp,
+                     message_count=m, pull_attempt_count=p, wall_time=w)
+    r = report(before, after)
+    assert r.simstep_period > 0
+    assert r.simstep_latency >= 0
+    assert r.walltime_latency >= 0
+    assert 0.0 <= r.delivery_failure_rate <= 1.0
+    assert 0.0 <= r.delivery_clumpiness <= 1.0
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_graphcolor_probs_stay_simplex(seed):
+    """CFL probability rows remain a simplex through arbitrary updates."""
+    app = GraphColorApp(GraphColorConfig(n_processes=1, nodes_per_process=16,
+                                         seed=seed))
+    f = app.make_fragments()[0]
+    for _ in range(50):
+        f.update({})
+    assert (f.probs >= -1e-9).all()
+    np.testing.assert_allclose(f.probs.sum(-1), 1.0, atol=1e-6)
+    assert ((0 <= f.colors) & (f.colors < 3)).all()
