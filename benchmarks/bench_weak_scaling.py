@@ -1,68 +1,75 @@
 """Paper §III-F analogue: QoS under weak scaling (claim C3).
 
-16 -> 64 -> 256 processes, at one simel/CPU (maximal communication
-intensity) and 2048 simels/CPU (the benchmark parameterization).  The claim:
-median QoS metrics are stable scaling 64 -> 256.
+16 -> 64 -> 256 processes (optionally 1024), at one simel/CPU (maximal
+communication intensity) and 2048 simels/CPU (the benchmark
+parameterization), over any registered topology (runtime/topologies).
+The claim: median QoS metrics are stable scaling 64 -> 256.
 """
 from __future__ import annotations
 
-import numpy as np
+import argparse
 
 from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
 from repro.core.modes import AsyncMode
+from repro.core.qos import METRICS, aggregate_reports, median_of_process_medians
 from repro.runtime.simulator import SimConfig, Simulator
+from repro.runtime.topologies import make_topology
 
 from benchmarks.common import emit, save_json
 
 PROC_COUNTS = (16, 64, 256)
-FIELDS = ("simstep_period", "simstep_latency", "walltime_latency",
-          "delivery_failure_rate", "delivery_clumpiness")
+FIELDS = METRICS
 
 
-def _median_of_process_medians(res, field):
-    meds = []
-    for p, reps in res.qos_by_process.items():
-        if reps:
-            meds.append(np.median([getattr(q, field) for q in reps]))
-    return float(np.median(meds)) if meds else None
-
-
-def run(proc_counts=PROC_COUNTS):
+def run(proc_counts=PROC_COUNTS, topology: str = "torus",
+        intra_latency=None):
     rows = []
     for simels in (1, 2048):
         for n in proc_counts:
             base = 15e-6 if simels == 1 else 200e-6
+            topo = make_topology(topology, n)
             app = GraphColorApp(GraphColorConfig(
-                n_processes=n, nodes_per_process=simels))
+                n_processes=n, nodes_per_process=simels), topology=topo)
             cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.12,
                             base_compute=base, base_latency=550e-6,
+                            intra_node_latency=intra_latency,
                             snapshot_warmup=0.03, snapshot_interval=0.02,
                             buffer_capacity=64)
             res = Simulator(app, cfg).run()
-            row = dict(simels=simels, n=n,
-                       rate_per_cpu=res.update_rate_per_cpu)
+            row = dict(simels=simels, n=n, topology=topo.name,
+                       rate_per_cpu=res.update_rate_per_cpu,
+                       distributions=aggregate_reports(res.qos, (50, 95)))
             for f in FIELDS:
-                row[f"median_{f}"] = _median_of_process_medians(res, f)
+                row[f"median_{f}"] = median_of_process_medians(
+                    res.qos_by_process, f)
             rows.append(row)
-            emit(f"weak_scaling/simels{simels}/n{n}",
+            emit(f"weak_scaling/{topo.name}/simels{simels}/n{n}",
                  row["median_simstep_period"] * 1e6,
                  f"lat_steps={row['median_simstep_latency']:.1f} "
                  f"clump={row['median_delivery_clumpiness']:.2f} "
                  f"fail={row['median_delivery_failure_rate']:.3f}")
-    # stability check 64 -> 256 (claim C3)
+    # stability check across the two largest scales (claim C3: 64 -> 256)
     summary = {}
+    scales = sorted(proc_counts)[-2:]
     for simels in (1, 2048):
-        r64 = next(r for r in rows if r["simels"] == simels and r["n"] == 64)
-        r256 = next(r for r in rows if r["simels"] == simels and r["n"] == 256)
-        degr = {f: (r256[f"median_{f}"] / r64[f"median_{f}"]
-                    if r64[f"median_{f}"] else None)
+        lo = next(r for r in rows
+                  if r["simels"] == simels and r["n"] == scales[0])
+        hi = next(r for r in rows
+                  if r["simels"] == simels and r["n"] == scales[-1])
+        degr = {f: (hi[f"median_{f}"] / lo[f"median_{f}"]
+                    if lo[f"median_{f}"] else None)
                 for f in ("simstep_period", "simstep_latency")}
         summary[f"simels{simels}"] = degr
-        emit(f"weak_scaling/simels{simels}/stability_64_to_256", 0.0,
-             " ".join(f"{k}_ratio={v:.2f}" for k, v in degr.items() if v))
+        emit(f"weak_scaling/simels{simels}/stability_{scales[0]}_to_{scales[-1]}",
+             0.0, " ".join(f"{k}_ratio={v:.2f}" for k, v in degr.items() if v))
     save_json("bench_weak_scaling", {"rows": rows, "summary": summary})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    p = argparse.ArgumentParser()
+    p.add_argument("--topology", default="torus")
+    p.add_argument("--procs", type=int, nargs="+", default=list(PROC_COUNTS))
+    p.add_argument("--intra-latency", type=float, default=None)
+    a = p.parse_args()
+    run(tuple(a.procs), a.topology, a.intra_latency)

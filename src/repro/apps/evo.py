@@ -19,7 +19,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.apps.graphcolor import _OPP, block_shape, proc_grid
+from repro.apps.graphcolor import _OPP, block_shape, direction_map, proc_grid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,11 +36,17 @@ class EvoConfig:
 
 
 class _Fragment:
-    def __init__(self, pid, cfg: EvoConfig, grid, block, self_wrap):
+    def __init__(self, pid, cfg: EvoConfig, grid, block, self_wrap,
+                 nbr_dirs: Optional[Dict[int, str]] = None):
         self.pid = pid
         self.cfg = cfg
         self.grid = grid
         self.self_wrap = self_wrap
+        self.nbr_dirs = nbr_dirs  # injected topology: neighbor -> halo slot
+        # halo slots no injected neighbor feeds behave reflectively (mirror
+        # our own edge) instead of draining resource into phantom zeros
+        self._unfed = (set("nswe") - set(nbr_dirs.values())
+                       if nbr_dirs is not None else set())
         H, W = block
         self.rng = np.random.default_rng((cfg.seed, pid))
         self.genomes = self.rng.integers(0, 256, size=(H, W, cfg.genome_len),
@@ -82,11 +88,21 @@ class _Fragment:
 
     def update(self, inbox: Dict[int, Optional[dict]]):
         cfg = self.cfg
-        nbs = self.neighbors()
-        for d, nb in nbs.items():
-            payload = inbox.get(nb)
-            if payload is not None:
-                self.halo_res[d] = payload[_OPP[d]]
+        if self.nbr_dirs is not None:
+            for nb, payload in inbox.items():
+                if payload is not None:
+                    d = self.nbr_dirs[nb]
+                    self.halo_res[d] = payload[_OPP[d]]
+            r = self.resource
+            own_edge = {"n": r[0], "s": r[-1], "w": r[:, 0], "e": r[:, -1]}
+            for d in self._unfed:
+                self.halo_res[d] = own_edge[d]
+        else:
+            nbs = self.neighbors()
+            for d, nb in nbs.items():
+                payload = inbox.get(nb)
+                if payload is not None:
+                    self.halo_res[d] = payload[_OPP[d]]
 
         self._execute_genomes()  # compute-heavy interpretation step
 
@@ -135,22 +151,35 @@ class _Fragment:
 
         edges = {"n": self.resource[0].copy(), "s": self.resource[-1].copy(),
                  "w": self.resource[:, 0].copy(), "e": self.resource[:, -1].copy()}
+        if self.nbr_dirs is not None:
+            return {nb: edges for nb in self.nbr_dirs}
         return {nb: edges for nb in set(nbs.values())}
 
 
 class EvoApp:
-    def __init__(self, cfg: EvoConfig):
+    def __init__(self, cfg: EvoConfig, topology=None):
         self.cfg = cfg
         self.n_processes = cfg.n_processes
         self.grid = proc_grid(cfg.n_processes)
         self.block = block_shape(cfg.cells_per_process)
         self.self_wrap = {"ns": self.grid[0] == 1, "ew": self.grid[1] == 1}
+        if topology is not None:
+            assert topology.n == cfg.n_processes, \
+                f"topology is for {topology.n} processes, app has {cfg.n_processes}"
+        self.injected = topology  # runtime.topologies.Topology or None
 
     def make_fragments(self) -> List[_Fragment]:
+        if self.injected is not None:
+            no_wrap = {"ns": False, "ew": False}
+            return [_Fragment(i, self.cfg, self.grid, self.block, no_wrap,
+                              nbr_dirs=direction_map(self.injected.neighbors[i]))
+                    for i in range(self.cfg.n_processes)]
         return [_Fragment(i, self.cfg, self.grid, self.block, self.self_wrap)
                 for i in range(self.cfg.n_processes)]
 
-    def topology(self) -> Dict[int, List[int]]:
+    def topology(self):
+        if self.injected is not None:
+            return self.injected
         out = {}
         for i in range(self.cfg.n_processes):
             f = _Fragment.__new__(_Fragment)

@@ -36,6 +36,18 @@ def block_shape(nodes_per_proc: int):
     return a, nodes_per_proc // a
 
 
+def direction_map(neighbors) -> Dict[int, str]:
+    """Assign each injected-topology neighbor a halo direction slot.
+
+    Arbitrary topologies (ring, cliques, small-world — runtime/topologies)
+    don't carry grid directions, so neighbors round-robin over the four halo
+    slots; several neighbors may feed one slot (last fresh message wins,
+    which is exactly the best-effort staleness semantics).
+    """
+    dirs = ("n", "s", "w", "e")
+    return {nb: dirs[i % 4] for i, nb in enumerate(sorted(neighbors))}
+
+
 @dataclasses.dataclass(frozen=True)
 class GraphColorConfig:
     n_processes: int = 4
@@ -83,7 +95,8 @@ def _update_block(colors, probs, halo, b, rng):
 
 
 class _Fragment:
-    def __init__(self, pid, cfg: GraphColorConfig, grid, block, self_wrap):
+    def __init__(self, pid, cfg: GraphColorConfig, grid, block, self_wrap,
+                 nbr_dirs: Optional[Dict[int, str]] = None):
         self.pid = pid
         self.cfg = cfg
         self.grid = grid
@@ -92,9 +105,27 @@ class _Fragment:
         self.colors = self.rng.integers(0, cfg.n_colors, size=(H, W))
         self.probs = np.full((H, W, cfg.n_colors), 1.0 / cfg.n_colors)
         self.self_wrap = self_wrap  # {"ns": bool, "ew": bool}
-        # last-known halos (best-effort: start with own edges)
-        self.halo = {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
-                     "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
+        self.nbr_dirs = nbr_dirs    # injected topology: neighbor -> halo slot
+        self.scalar = H == W == 1   # 1 simel/process: pure-python fast path
+        # last-known halos (best-effort: start with own edges).  The scalar
+        # path trades arrays for plain ints end-to-end: halos, payloads, and
+        # probabilities stay python scalars, ~10x cheaper per update.
+        if self.scalar:
+            c = int(self.colors[0, 0])
+            self.halo = {"n": c, "s": c, "w": c, "e": c}
+            self._c = c
+            self._p = self.probs[0, 0].tolist()
+            self._onehot = False
+        else:
+            self.halo = {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
+                         "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
+        if nbr_dirs is not None:
+            # slots no injected neighbor feeds (degree < 4, e.g. a ring)
+            # would stay frozen at the initial self-copy and register phantom
+            # conflicts forever; -1 is a color no node ever holds
+            for d in set("nswe") - set(nbr_dirs.values()):
+                self.halo[d] = -1 if self.scalar \
+                    else np.full_like(self.halo[d], -1)
 
     def neighbors(self) -> Dict[str, int]:
         gh, gw = self.grid
@@ -109,43 +140,127 @@ class _Fragment:
         return out
 
     def update(self, inbox: Dict[int, Optional[np.ndarray]]):
+        scalar = self.scalar
+        halo = self.halo
+        if self.nbr_dirs is not None:
+            # injected topology: any neighbor can feed any halo slot
+            nbr_dirs = self.nbr_dirs
+            if scalar:
+                for nb, payload in inbox.items():
+                    if payload is not None:
+                        halo[nbr_dirs[nb]] = payload
+                self._update_scalar()
+                c = self._c
+                return {nb: c for nb in nbr_dirs}
+            for nb, payload in inbox.items():
+                if payload is not None:
+                    d = nbr_dirs[nb]
+                    halo[d] = payload[_OPP[d]]
+            self.colors, self.probs, _ = _update_block(
+                self.colors, self.probs, halo, self.cfg.b, self.rng)
+            edges = self._edges()
+            return {nb: edges for nb in nbr_dirs}
+
         nbs = self.neighbors()
         # refresh halos from any fresh messages (stale otherwise)
+        if scalar:
+            for d, nb in nbs.items():
+                payload = inbox.get(nb)
+                if payload is not None:
+                    halo[d] = payload
+            if self.self_wrap["ns"]:
+                halo["n"] = halo["s"] = self._c
+            if self.self_wrap["ew"]:
+                halo["w"] = halo["e"] = self._c
+            self._update_scalar()
+            c = self._c
+            return {nb: c for nb in set(nbs.values())}
+
         for d, nb in nbs.items():
             payload = inbox.get(nb)
             if payload is not None:
-                self.halo[d] = payload[_OPP[d]]
+                halo[d] = payload[_OPP[d]]
         if self.self_wrap["ns"]:
-            self.halo["n"] = self.colors[-1]
-            self.halo["s"] = self.colors[0]
+            halo["n"] = self.colors[-1]
+            halo["s"] = self.colors[0]
         if self.self_wrap["ew"]:
-            self.halo["w"] = self.colors[:, -1]
-            self.halo["e"] = self.colors[:, 0]
+            halo["w"] = self.colors[:, -1]
+            halo["e"] = self.colors[:, 0]
 
         self.colors, self.probs, _ = _update_block(
-            self.colors, self.probs, self.halo, self.cfg.b, self.rng)
+            self.colors, self.probs, halo, self.cfg.b, self.rng)
 
-        edges = {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
-                 "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
+        edges = self._edges()
         return {nb: edges for nb in set(nbs.values())}
+
+    def _edges(self):
+        return {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
+                "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
+
+    def _update_scalar(self):
+        """1x1-block CFL update on plain python scalars — what lets a
+        1024-process maximal-intensity sweep finish in interactive time.
+        Payloads are bare color ints; ``colors``/``probs`` arrays are kept
+        in sync so ``quality()`` and inspection still work."""
+        halo = self.halo
+        c = self._c
+        if (c != halo["n"] and c != halo["s"]
+                and c != halo["w"] and c != halo["e"]):
+            if not self._onehot:
+                p = [0.0] * self.cfg.n_colors
+                p[c] = 1.0
+                self._p = p
+                self._onehot = True
+                self.probs[0, 0] = p
+            return
+        b = self.cfg.b
+        C = self.cfg.n_colors
+        spread = b / (C - 1)
+        p = [(1.0 - b) * v + (0.0 if k == c else spread)
+             for k, v in enumerate(self._p)]
+        u = self.rng.random()
+        acc = 0.0
+        new = C - 1
+        for k, v in enumerate(p):
+            acc += v
+            if u <= acc:
+                new = k
+                break
+        self._p = p
+        self._onehot = False
+        self.probs[0, 0] = p
+        if new != c:
+            self._c = new
+            self.colors[0, 0] = new
 
 
 _OPP = {"n": "s", "s": "n", "w": "e", "e": "w"}
 
 
 class GraphColorApp:
-    def __init__(self, cfg: GraphColorConfig):
+    def __init__(self, cfg: GraphColorConfig, topology=None):
         self.cfg = cfg
         self.n_processes = cfg.n_processes
         self.grid = proc_grid(cfg.n_processes)
         self.block = block_shape(cfg.nodes_per_process)
         self.self_wrap = {"ns": self.grid[0] == 1, "ew": self.grid[1] == 1}
+        if topology is not None:
+            assert topology.n == cfg.n_processes, \
+                f"topology is for {topology.n} processes, app has {cfg.n_processes}"
+        self.injected = topology  # runtime.topologies.Topology or None
 
     def make_fragments(self) -> List[_Fragment]:
+        if self.injected is not None:
+            no_wrap = {"ns": False, "ew": False}
+            return [_Fragment(i, self.cfg, self.grid, self.block, no_wrap,
+                              nbr_dirs=direction_map(self.injected.neighbors[i]))
+                    for i in range(self.cfg.n_processes)]
         return [_Fragment(i, self.cfg, self.grid, self.block, self.self_wrap)
                 for i in range(self.cfg.n_processes)]
 
-    def topology(self) -> Dict[int, List[int]]:
+    def topology(self):
+        if self.injected is not None:
+            return self.injected
         out = {}
         for i in range(self.cfg.n_processes):
             f = _Fragment.__new__(_Fragment)

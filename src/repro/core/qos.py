@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class Counters:
@@ -93,3 +95,38 @@ def report(before: Counters, after: Counters) -> QosReport:
         delivery_failure_rate=delivery_failure_rate(before, after),
         delivery_clumpiness=delivery_clumpiness(before, after),
     )
+
+
+# ---------------------------------------------------------------------------
+# Distribution aggregation across processes and windows (paper §III reports
+# medians + tails, not means: under best-effort QoS the distribution IS the
+# result).
+# ---------------------------------------------------------------------------
+METRICS = ("simstep_period", "simstep_latency", "walltime_latency",
+           "delivery_failure_rate", "delivery_clumpiness")
+
+
+def aggregate_reports(reports, percentiles=(50, 95)):
+    """Per-metric percentile summary over (process, window) samples.
+
+    Returns ``{metric: {"median": v, "p95": v, ...}}`` — percentile 50 is
+    keyed ``"median"``, every other q as ``"p{q}"``.  Empty input yields
+    empty per-metric dicts.
+    """
+    out = {}
+    for m in METRICS:
+        vals = [getattr(r, m) for r in reports]
+        summary = {}
+        for q in percentiles:
+            key = "median" if q == 50 else f"p{int(q)}"
+            summary[key] = float(np.percentile(vals, q)) if vals else None
+        out[m] = summary
+    return out
+
+
+def median_of_process_medians(qos_by_process, metric: str):
+    """The paper's headline statistic: median over processes of each
+    process's median over observation windows.  None if no windows."""
+    meds = [np.median([getattr(q, metric) for q in reps])
+            for reps in qos_by_process.values() if reps]
+    return float(np.median(meds)) if meds else None

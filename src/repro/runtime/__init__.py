@@ -1,2 +1,3 @@
-from repro.runtime import channels, faults, simulator  # noqa: F401
+from repro.runtime import channels, faults, simulator, topologies  # noqa: F401
 from repro.runtime.simulator import SimConfig, Simulator, SimResult  # noqa: F401
+from repro.runtime.topologies import Topology, make_topology  # noqa: F401

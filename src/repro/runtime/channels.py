@@ -60,9 +60,25 @@ class Duct:
         return out
 
     def latest(self, now: float) -> Tuple[Optional[Message], int]:
-        """Drain and return only the freshest message (+ count drained)."""
-        msgs = self.pull(now)
-        return (msgs[-1] if msgs else None), len(msgs)
+        """Drain and return only the freshest message (+ count drained).
+
+        Hot-path form of :meth:`pull`: identical counter semantics, but no
+        intermediate list — the empty/nothing-arrived case is a single
+        comparison.
+        """
+        self.outlet.pull_attempt_count += 1
+        q = self.queue
+        if not q or q[0].avail_time > now:
+            return None, 0
+        popleft = q.popleft
+        msg = popleft()
+        drained = 1
+        while q and q[0].avail_time <= now:
+            msg = popleft()
+            drained += 1
+        self.outlet.laden_pull_count += 1
+        self.outlet.message_count += drained
+        return msg, drained
 
     @property
     def backlog(self) -> int:

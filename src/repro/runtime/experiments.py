@@ -1,0 +1,263 @@
+"""Driver for the paper's four experiment families (DESIGN.md §5).
+
+  modes          asynchronicity-mode sweep: update rate + solution quality
+                 under barrier / rolling / fixed / best-effort / no-comm
+                 (paper §III-A/B, claims C1 + C2)
+  weak_scaling   QoS distributions while scaling the process count at fixed
+                 work per process (paper §III-F, claim C3)
+  intensivity    communication-intensivity sweep: simels per process from
+                 maximal (1) down to the benchmark parameterization (2048)
+                 (paper §III-C/E)
+  faults         an apparently-faulty host: extreme degradation inside its
+                 clique, stable global medians (paper §III-G, claim C4)
+
+Every family reports per-process QoS *distributions* — median + tail
+percentiles over (process, window) samples — because under best-effort
+communication the distribution, not a scalar, is the result.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.runtime.experiments \
+        --topology torus --procs 64 256
+
+runs weak scaling on a torus at 64 and 256 processes; ``--family all``
+runs every family.  See EXPERIMENTS.md for the full matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.modes import AsyncMode
+from repro.core.qos import METRICS, aggregate_reports
+from repro.runtime.faults import faulty_host
+from repro.runtime.simulator import SimConfig, Simulator
+from repro.runtime.topologies import TOPOLOGIES, Topology, make_topology
+
+PERCENTILES = (50, 95)
+
+_UNITS = {"simstep_period": ("us", 1e6), "simstep_latency": ("steps", 1.0),
+          "walltime_latency": ("us", 1e6), "delivery_failure_rate": ("", 1.0),
+          "delivery_clumpiness": ("", 1.0)}
+
+
+def make_app(name: str, n: int, simels: int, topology: Optional[Topology],
+             seed: int = 0):
+    if name == "graphcolor":
+        from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+        return GraphColorApp(
+            GraphColorConfig(n_processes=n, nodes_per_process=simels,
+                             seed=seed), topology=topology)
+    if name == "evo":
+        from repro.apps.evo import EvoApp, EvoConfig
+        return EvoApp(EvoConfig(n_processes=n, cells_per_process=simels,
+                                seed=seed), topology=topology)
+    raise ValueError(f"unknown app {name!r} (graphcolor|evo)")
+
+
+def _sim_config(args, n: int, mode: AsyncMode = AsyncMode.BEST_EFFORT,
+                **overrides) -> SimConfig:
+    # windows shrink with the horizon so every scale yields >= ~6 windows
+    warmup = args.duration / 6
+    interval = args.duration / 12
+    base = dict(mode=mode, duration=args.duration,
+                base_compute=args.base_compute,
+                base_latency=args.base_latency,
+                intra_node_latency=args.intra_latency,
+                snapshot_warmup=warmup, snapshot_interval=interval,
+                buffer_capacity=args.buffer, seed=args.seed)
+    base.update(overrides)
+    return SimConfig(**base)
+
+
+def _distributions(res) -> Dict[str, Dict[str, float]]:
+    return aggregate_reports(res.qos, percentiles=PERCENTILES)
+
+
+def _print_distributions(dist, indent: str = "    "):
+    for m in METRICS:
+        unit, scale = _UNITS[m]
+        parts = []
+        for key, v in dist[m].items():
+            if v is None:
+                parts.append(f"{key}=n/a")
+            else:
+                parts.append(f"{key}={v * scale:.3f}{unit}")
+        print(f"{indent}{m:<24} " + "  ".join(parts))
+
+
+def _topology_for(args, n: int) -> Topology:
+    kw = {}
+    if args.topology == "cliques" and args.clique_size:
+        kw["clique_size"] = args.clique_size
+    return make_topology(args.topology, n, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Families
+# ---------------------------------------------------------------------------
+def run_modes(args) -> List[dict]:
+    n = args.procs[0]
+    topo = _topology_for(args, n)
+    print(f"[modes] app={args.app} topology={topo.name} n={n} "
+          f"simels={args.simels}")
+    rows = []
+    for mode in AsyncMode:
+        app = make_app(args.app, n, args.simels, topo, args.seed)
+        res = Simulator(app, _sim_config(args, n, mode=mode)).run()
+        dist = _distributions(res)
+        row = dict(family="modes", mode=int(mode), n=n,
+                   topology=topo.name,
+                   rate_per_cpu=res.update_rate_per_cpu,
+                   quality=res.quality,
+                   delivery_failure_rate=res.delivery_failure_rate,
+                   qos=dist)
+        rows.append(row)
+        print(f"  mode {int(mode)} ({mode.description}): "
+              f"{res.update_rate_per_cpu:9.0f} upd/s/cpu  "
+              f"quality={res.quality:.3f}  fail={res.delivery_failure_rate:.3f}")
+    return rows
+
+
+def run_weak_scaling(args) -> List[dict]:
+    print(f"[weak_scaling] app={args.app} topology={args.topology} "
+          f"simels={args.simels} duration={args.duration}s")
+    rows = []
+    for n in args.procs:
+        topo = _topology_for(args, n)
+        app = make_app(args.app, n, args.simels, topo, args.seed)
+        t0 = time.perf_counter()
+        res = Simulator(app, _sim_config(args, n)).run()
+        wall = time.perf_counter() - t0
+        dist = _distributions(res)
+        rows.append(dict(family="weak_scaling", n=n, topology=topo.name,
+                         simels=args.simels,
+                         rate_per_cpu=res.update_rate_per_cpu,
+                         wall_seconds=wall, qos=dist))
+        print(f"  n={n:<5} ({topo.name}, {sum(res.updates)} updates "
+              f"in {wall:.1f}s wall)")
+        _print_distributions(dist)
+    return rows
+
+
+def run_intensivity(args) -> List[dict]:
+    n = args.procs[0]
+    topo = _topology_for(args, n)
+    sweep = args.intensivity_simels
+    print(f"[intensivity] app={args.app} topology={topo.name} n={n} "
+          f"simels sweep={sweep}")
+    rows = []
+    for simels in sweep:
+        # heavier blocks cost more virtual compute per update (2048 simels
+        # ~ 200us, matching the benchmark parameterization)
+        base = args.base_compute * (1 + simels / 160)
+        app = make_app(args.app, n, simels, topo, args.seed)
+        res = Simulator(app, _sim_config(args, n, base_compute=base)).run()
+        dist = _distributions(res)
+        rows.append(dict(family="intensivity", n=n, simels=simels,
+                         topology=topo.name,
+                         rate_per_cpu=res.update_rate_per_cpu, qos=dist))
+        print(f"  simels/process={simels}")
+        _print_distributions(dist)
+    return rows
+
+
+def run_faults(args) -> List[dict]:
+    n = args.procs[0]
+    topo = _topology_for(args, n)
+    host = args.faulty_host if args.faulty_host is not None else topo.n_nodes // 2
+    victims = set(topo.host_pids(host))
+    clique = set()
+    for p in victims:
+        clique.update(topo.clique_of(p))
+    print(f"[faults] app={args.app} topology={topo.name} n={n} "
+          f"faulty host={host} ({len(victims)} procs, clique of {len(clique)})")
+
+    rows = []
+    for label, faults in (("without_fault", None),
+                          ("with_fault", faulty_host(topo, host,
+                                                     args.fault_compute,
+                                                     args.fault_link))):
+        app = make_app(args.app, n, args.simels, topo, args.seed)
+        res = Simulator(app, _sim_config(args, n), faults).run()
+        groups = {
+            "global": res.qos,
+            "clique": [q for p in clique for q in res.qos_by_process[p]],
+            "rest": [q for p in range(n) if p not in clique
+                     for q in res.qos_by_process[p]],
+        }
+        row = dict(family="faults", label=label, n=n, topology=topo.name,
+                   faulty_host=host,
+                   qos={g: aggregate_reports(reps, PERCENTILES)
+                        for g, reps in groups.items()})
+        rows.append(row)
+        print(f"  {label}:")
+        for g in ("global", "clique", "rest"):
+            print(f"   {g}:")
+            _print_distributions(row["qos"][g], indent="      ")
+    return rows
+
+
+FAMILIES = {
+    "modes": run_modes,
+    "weak_scaling": run_weak_scaling,
+    "intensivity": run_intensivity,
+    "faults": run_faults,
+}
+
+
+# ---------------------------------------------------------------------------
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.runtime.experiments",
+        description="Run the paper's experiment families on the "
+                    "discrete-event best-effort runtime.")
+    p.add_argument("--family", default="weak_scaling",
+                   choices=[*FAMILIES, "all"])
+    p.add_argument("--topology", default="torus", choices=sorted(TOPOLOGIES))
+    p.add_argument("--procs", type=int, nargs="+", default=[64, 256],
+                   help="process counts (weak_scaling sweeps them; other "
+                        "families use the first)")
+    p.add_argument("--app", default="graphcolor",
+                   choices=["graphcolor", "evo"])
+    p.add_argument("--simels", type=int, default=1,
+                   help="simulation elements per process (1 = maximal "
+                        "communication intensivity)")
+    p.add_argument("--duration", type=float, default=0.05,
+                   help="virtual seconds per run")
+    p.add_argument("--base-compute", type=float, default=15e-6)
+    p.add_argument("--base-latency", type=float, default=550e-6)
+    p.add_argument("--intra-latency", type=float, default=None,
+                   help="same-host link latency (enables the hierarchical "
+                        "link model; default: flat)")
+    p.add_argument("--buffer", type=int, default=64)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--clique-size", type=int, default=None)
+    p.add_argument("--intensivity-simels", type=int, nargs="+",
+                   default=[1, 64, 2048])
+    p.add_argument("--faulty-host", type=int, default=None)
+    p.add_argument("--fault-compute", type=float, default=30.0)
+    p.add_argument("--fault-link", type=float, default=30.0)
+    p.add_argument("--json", default=None, help="write rows to this path")
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
+    args = build_parser().parse_args(argv)
+    families = list(FAMILIES) if args.family == "all" else [args.family]
+    rows: List[dict] = []
+    t0 = time.perf_counter()
+    for fam in families:
+        rows.extend(FAMILIES[fam](args))
+    print(f"done in {time.perf_counter() - t0:.1f}s wall")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+        print(f"wrote {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,11 @@ Models the paper's observed conditions: per-step lognormal jitter with
 occasional stalls, a faulty node (lac-417 analogue: extreme slowdown +
 degraded links for the node and its clique), and transient stragglers.
 
-Randomness is a counter-based splitmix64 hash — deterministic, O(ns) per
-sample, no generator objects on the hot path.
+Randomness is a counter-based splitmix64 hash — deterministic and
+generator-free.  The hot path samples it through :class:`Jitter`, which
+evaluates the hash chain vectorized (numpy uint64, wrapping arithmetic)
+in blocks of 512 counters per process, so the amortized per-sample cost
+is O(ns) even with millions of events.
 """
 from __future__ import annotations
 
@@ -13,7 +16,12 @@ import dataclasses
 import math
 from typing import Dict, Tuple
 
+import numpy as np
+
 _MASK = (1 << 64) - 1
+_BLOCK = 512          # vectorized sample block (power of two)
+_BMASK = _BLOCK - 1
+_BSHIFT = _BLOCK.bit_length() - 1
 
 
 def _splitmix64(x: int) -> int:
@@ -36,6 +44,31 @@ def _hash_normal(*ints: int) -> float:
     u1 = _hash_uniform(*ints, 1)
     u2 = _hash_uniform(*ints, 2)
     return math.sqrt(-2.0 * math.log(u1)) * math.cos(2 * math.pi * u2)
+
+
+# -- vectorized twins (numpy uint64: multiplication/addition wrap mod 2^64,
+#    reproducing the scalar chain bit-for-bit) -------------------------------
+def _np_splitmix64(x: np.ndarray) -> np.ndarray:
+    x = x + np.uint64(0x9E3779B97F4A7C15)
+    z = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def _np_chain(prefix: int, tail: np.ndarray) -> np.ndarray:
+    """Continue a scalar splitmix chain ``prefix`` over a counter array."""
+    return _np_splitmix64(np.uint64(prefix) ^ tail)
+
+
+def _np_uniform(h: np.ndarray) -> np.ndarray:
+    return (h >> np.uint64(11)).astype(np.float64) / float(1 << 53) + 1e-16
+
+
+def _chain_prefix(*ints: int) -> int:
+    h = 0
+    for v in ints:
+        h = _splitmix64(h ^ (v & _MASK))
+    return h
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,8 +94,30 @@ def faulty_node(pid: int, neighbors, compute_factor: float = 30.0,
     return FaultModel({pid: compute_factor}, links)
 
 
+def faulty_host(topology, host: int, compute_factor: float = 30.0,
+                link_factor: float = 50.0) -> FaultModel:
+    """Degrade a whole physical host: every process placed on ``host``
+    (per ``topology.node_of``) runs slow, and every link touching one of
+    those processes is slow in both directions — the paper's faulty node
+    dragging its entire communication clique (§III-G)."""
+    pids = topology.host_pids(host)
+    assert pids, f"host {host} has no processes"
+    links = {}
+    for p in pids:
+        for nb in topology.neighbors[p]:
+            links[(p, nb)] = link_factor
+            links[(nb, p)] = link_factor
+    return FaultModel({p: compute_factor for p in pids}, links)
+
+
 class Jitter:
-    """Deterministic per-(process, step) multiplicative jitter."""
+    """Deterministic per-(process, step) multiplicative jitter.
+
+    Samples are pure functions of (seed, key, counter).  Because consumers
+    walk counters sequentially, samples are produced vectorized in blocks of
+    ``_BLOCK`` and cached (latest block per key), making the common-case
+    lookup an array index instead of ~10 python big-int hash rounds.
+    """
 
     def __init__(self, sigma: float, seed: int,
                  stall_prob: float = 0.0, stall_factor: float = 1.0):
@@ -70,20 +125,52 @@ class Jitter:
         self.seed = seed
         self.stall_prob = stall_prob
         self.stall_factor = stall_factor
+        self._arange = np.arange(_BLOCK, dtype=np.uint64)
+        self._fcache: Dict[int, Tuple[int, list]] = {}
+        self._lcache: Dict[int, Tuple[int, list]] = {}
 
+    # -- block generation ----------------------------------------------------
+    def _normal_block(self, prefix: int, start: int) -> np.ndarray:
+        h = _np_chain(prefix, np.uint64(start) + self._arange)
+        u1 = _np_uniform(_np_splitmix64(h ^ np.uint64(1)))
+        u2 = _np_uniform(_np_splitmix64(h ^ np.uint64(2)))
+        return np.sqrt(-2.0 * np.log(u1)) * np.cos(2 * np.pi * u2)
+
+    def _lognormal_block(self, prefix: int, start: int) -> np.ndarray:
+        z = self._normal_block(prefix, start)
+        return np.exp(-0.5 * self.sigma ** 2 + self.sigma * z)
+
+    def _factor_block(self, pid: int, start: int) -> np.ndarray:
+        if self.sigma > 0:
+            f = self._lognormal_block(_chain_prefix(self.seed, pid), start)
+        else:
+            f = np.ones(_BLOCK)
+        if self.stall_prob > 0:
+            u = _np_uniform(_np_chain(_chain_prefix(self.seed, 13, pid),
+                                      np.uint64(start) + self._arange))
+            f = np.where(u < self.stall_prob, f * self.stall_factor, f)
+        return f
+
+    # -- sample access -------------------------------------------------------
     def factor(self, pid: int, step: int) -> float:
         if self.sigma <= 0 and self.stall_prob <= 0:
             return 1.0
-        f = 1.0
-        if self.sigma > 0:
-            z = _hash_normal(self.seed, pid, step)
-            f = math.exp(-0.5 * self.sigma ** 2 + self.sigma * z)
-        if self.stall_prob > 0 and _hash_uniform(self.seed, 13, pid, step) < self.stall_prob:
-            f *= self.stall_factor
-        return f
+        block = step >> _BSHIFT
+        cached = self._fcache.get(pid)
+        if cached is None or cached[0] != block:
+            # .tolist() so lookups hand back python floats (fast arithmetic)
+            cached = (block, self._factor_block(pid, block << _BSHIFT).tolist())
+            self._fcache[pid] = cached
+        return cached[1][step & _BMASK]
 
-    def latency_factor(self, pid: int, count: int) -> float:
+    def latency_factor(self, key: int, count: int) -> float:
+        """Link-latency jitter for duct ``key`` at its ``count``-th send."""
         if self.sigma <= 0:
             return 1.0
-        z = _hash_normal(self.seed, 7919, pid, count)
-        return math.exp(-0.5 * self.sigma ** 2 + self.sigma * z)
+        block = count >> _BSHIFT
+        cached = self._lcache.get(key)
+        if cached is None or cached[0] != block:
+            cached = (block, self._lognormal_block(
+                _chain_prefix(self.seed, 7919, key), block << _BSHIFT).tolist())
+            self._lcache[key] = cached
+        return cached[1][count & _BMASK]

@@ -9,6 +9,13 @@ Event ordering: step completions are processed in global virtual-time order
 (heap), so message availability is causally consistent.  Each simstep is
 compute-phase → communication-phase, with received messages incorporated at
 the *next* compute phase, matching the paper's model.
+
+Scale: process state lives in flat numpy arrays and QoS counters are
+accumulated incrementally inside the event loop (never recomputed by
+scanning ducts), so the engine sustains 1024+ virtual processes.  The link
+model is hierarchical (DESIGN.md §3): when the application's topology
+carries a host assignment, intra-node hops use ``intra_node_latency`` while
+inter-node hops pay ``base_latency``.
 """
 from __future__ import annotations
 
@@ -21,6 +28,9 @@ from repro.core.modes import AsyncMode
 from repro.core.qos import Counters, QosReport, report
 from repro.runtime.channels import Duct
 from repro.runtime.faults import FaultModel, Jitter
+
+_BARRIER_MODES = (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
+                  AsyncMode.FIXED_BARRIER)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +46,7 @@ class SimConfig:
     stall_prob: float = 0.01           # occasional OS/cache stall
     stall_factor: float = 8.0
     base_latency: float = 500e-6       # internode one-way latency
+    intra_node_latency: Optional[float] = None  # same-host hops (None: flat)
     latency_sigma: float = 0.5
     buffer_capacity: int = 64
     barrier_base: float = 2e-5
@@ -66,61 +77,97 @@ class SimResult:
         return self.dropped / max(self.sent, 1)
 
 
-class _Proc:
-    __slots__ = ("pid", "clock", "steps", "pending_handling", "waiting",
-                 "last_release", "barrier_seq", "done", "touch")
-
-    def __init__(self, pid: int):
-        self.pid = pid
-        self.clock = 0.0
-        self.steps = 0
-        self.pending_handling = 0.0
-        self.waiting = False
-        self.last_release = 0.0
-        self.barrier_seq = 0
-        self.done = False
-        self.touch: Dict[int, int] = {}
-
-
 class Simulator:
-    """Generic engine; the application provides fragments + topology."""
+    """Generic engine; the application provides fragments + topology.
+
+    ``app.topology()`` may return either a plain ``{pid: [neighbors]}`` dict
+    or a :class:`repro.runtime.topologies.Topology`; the latter enables the
+    hierarchical link model and host-level fault injection.
+    """
 
     def __init__(self, app, cfg: SimConfig, faults: Optional[FaultModel] = None):
         self.app = app
         self.cfg = cfg
         self.faults = faults or FaultModel()
-        self.n = app.n_processes
-        self.topology: Dict[int, List[int]] = app.topology()
+        self.n = n = app.n_processes
+        topo = app.topology()
+        if hasattr(topo, "as_dict"):          # Topology object
+            self.topo = topo
+            self.topology: Dict[int, List[int]] = topo.as_dict()
+        else:
+            self.topo = None
+            self.topology = topo
         self.fragments = app.make_fragments()
         self.jitter = Jitter(cfg.jitter_sigma, cfg.seed,
                              cfg.stall_prob, cfg.stall_factor)
-        self.procs = [_Proc(i) for i in range(self.n)]
-        for p in self.procs:
-            p.touch = {nb: 0 for nb in self.topology[p.pid]}
+        self.lat_jitter = Jitter(cfg.latency_sigma, cfg.seed)
+
+        # --- array-backed process state: flat per-pid arrays, no objects ---
+        # (plain lists: python-int increments beat numpy scalar boxing on the
+        # hot path; bulk math converts to numpy at aggregation time)
+        self._clock = [0.0] * n
+        self._steps = [0] * n
+        self._done = [False] * n
+        self._last_release = [0.0] * n
+        self._barrier_seq = [0] * n
+        self._pending = [0.0] * n      # message-handling cost of last step
+        self._deg = [len(self.topology[pid]) for pid in range(n)]
+        self._cfactor = [self.faults.compute_factor(pid) for pid in range(n)]
+        # incremental per-process QoS counters (DESIGN.md §5): maintained in
+        # the event loop so snapshots are O(1), never an O(degree) duct scan.
+        # pull_attempt_count is exactly steps*degree (one bulk drain of every
+        # in-duct per update), so it is derived, not stored.
+        self._c_touch = [0] * n
+        self._c_att = [0] * n
+        self._c_ok = [0] * n
+        self._c_laden = [0] * n
+        self._c_msgs = [0] * n
+
+        self._touch: List[Dict[int, int]] = [
+            {nb: 0 for nb in self.topology[pid]} for pid in range(n)]
         self.ducts: Dict[Tuple[int, int], Duct] = {}
-        for src, nbs in self.topology.items():
-            for dst in nbs:
+        duct_id = 0
+        for src in range(n):
+            for dst in self.topology[src]:
                 self.ducts[(src, dst)] = Duct(
-                    cfg.buffer_capacity, self._latency_fn(src, dst),
+                    cfg.buffer_capacity, self._latency_fn(src, dst, duct_id),
                     name=f"{src}->{dst}")
-        self._lat_count = 0
+                duct_id += 1
+        # pid -> [(neighbor, incoming duct)] in neighbor order, hoisted out
+        # of the hot loop so events never hash (src, dst) tuples
+        self._in_ducts = [[(nb, self.ducts[(nb, pid)])
+                           for nb in self.topology[pid]] for pid in range(n)]
         self._snapshots: Dict[int, List[Tuple[float, Counters]]] = {
-            i: [] for i in range(self.n)}
+            i: [] for i in range(n)}
         self._barrier_arrivals: Dict[int, List[Tuple[int, float]]] = {}
+        self._seq_active: Dict[int, int] = {0: n}  # barrier_seq -> live procs
 
     # ------------------------------------------------------------------
-    def _latency_fn(self, src, dst):
+    def _link_base(self, src: int, dst: int) -> float:
+        """Hierarchical link model: same-host hops are cheap (DESIGN.md §3)."""
+        cfg = self.cfg
+        if (cfg.intra_node_latency is not None and self.topo is not None
+                and self.topo.same_node(src, dst)):
+            return cfg.intra_node_latency
+        return cfg.base_latency
+
+    def _latency_fn(self, src, dst, duct_id: int):
+        # fault and hierarchy factors are constant per link: hoist them so a
+        # send costs one cached jitter lookup, not two dict probes
+        base = self._link_base(src, dst) * self.faults.link_factor(src, dst)
+        jitter = self.lat_jitter
+        count = [0]
+
         def fn(now):
-            self._lat_count += 1
-            f = self.jitter.latency_factor(src, self._lat_count)
-            return self.cfg.base_latency * f * self.faults.link_factor(src, dst)
+            c = count[0]
+            count[0] = c + 1
+            return base * jitter.latency_factor(duct_id, c)
         return fn
 
     def _step_duration(self, pid: int, step: int) -> float:
         cfg = self.cfg
         base = cfg.base_compute + cfg.work_units * cfg.work_unit_cost
-        f = self.jitter.factor(pid, step)
-        return base * f * self.faults.compute_factor(pid)
+        return base * self.jitter.factor(pid, step) * self._cfactor[pid]
 
     def _barrier_cost(self) -> float:
         if self.n <= 1:
@@ -128,120 +175,142 @@ class Simulator:
         return self.cfg.barrier_base + self.cfg.barrier_per_log2 * math.log2(self.n)
 
     # ------------------------------------------------------------------
-    def _proc_counters(self, pid: int) -> Counters:
-        """Aggregate a process's channel counters + its own update/touch."""
-        c = Counters()
-        p = self.procs[pid]
-        c.update_count = p.steps
-        c.touch_count = sum(p.touch.values())
-        c.wall_time = p.clock
-        for nb in self.topology[pid]:
-            out_d = self.ducts[(pid, nb)]
-            in_d = self.ducts[(nb, pid)]
-            c.attempted_send_count += out_d.inlet.attempted_send_count
-            c.successful_send_count += out_d.inlet.successful_send_count
-            c.laden_pull_count += in_d.outlet.laden_pull_count
-            c.message_count += in_d.outlet.message_count
-            c.pull_attempt_count += in_d.outlet.pull_attempt_count
-        return c
-
-    def _maybe_snapshot(self, pid: int, t: float):
-        snaps = self._snapshots[pid]
-        due = self.cfg.snapshot_warmup + len(snaps) * self.cfg.snapshot_interval
-        if t >= due:
-            c = self._proc_counters(pid)
-            c.wall_time = t
-            snaps.append((t, c))
+    def _proc_counters(self, pid: int, t: Optional[float] = None) -> Counters:
+        """Snapshot of a process's accumulated counters (O(1))."""
+        return Counters(
+            update_count=self._steps[pid],
+            touch_count=self._c_touch[pid],
+            attempted_send_count=self._c_att[pid],
+            successful_send_count=self._c_ok[pid],
+            laden_pull_count=self._c_laden[pid],
+            message_count=self._c_msgs[pid],
+            pull_attempt_count=(self._steps[pid] * self._deg[pid]
+                                if self.cfg.mode != AsyncMode.NO_COMM else 0),
+            wall_time=self._clock[pid] if t is None else t,
+        )
 
     # ------------------------------------------------------------------
-    def _barrier_due(self, p: _Proc, t: float) -> bool:
+    def _barrier_due(self, pid: int, t: float) -> bool:
         mode = self.cfg.mode
         if mode == AsyncMode.BARRIER_EVERY_STEP:
             return True
         if mode == AsyncMode.ROLLING_BARRIER:
-            return (t - p.last_release) >= self.cfg.rolling_quantum
+            return (t - self._last_release[pid]) >= self.cfg.rolling_quantum
         if mode == AsyncMode.FIXED_BARRIER:
-            return t >= (p.barrier_seq + 1) * self.cfg.fixed_interval
+            return t >= (self._barrier_seq[pid] + 1) * self.cfg.fixed_interval
         return False
 
     # ------------------------------------------------------------------
     def run(self) -> SimResult:
         cfg = self.cfg
-        heap: List[Tuple[float, int, int]] = []
-        seq = 0
-        for p in self.procs:
-            d = self._step_duration(p.pid, 0)
-            heapq.heappush(heap, (d, seq, p.pid))
-            seq += 1
-
-        active = self.n
+        n = self.n
         comm = cfg.mode != AsyncMode.NO_COMM
+        barriered = cfg.mode in _BARRIER_MODES
+        duration = cfg.duration
+        per_msg_cost = cfg.per_message_cost
+        per_pull_cost = cfg.per_pull_cost
+        warmup = cfg.snapshot_warmup
+        interval = cfg.snapshot_interval
+
+        clock = self._clock
+        steps = self._steps
+        done = self._done
+        c_touch, c_att, c_ok = self._c_touch, self._c_att, self._c_ok
+        c_laden, c_msgs = self._c_laden, self._c_msgs
+        touch = self._touch
+        in_ducts = self._in_ducts
+        ducts = self.ducts
+        fragments = self.fragments
+        snapshots = self._snapshots
+        next_snap = [warmup] * n
+        base_compute = cfg.base_compute + cfg.work_units * cfg.work_unit_cost
+        cfactor = self._cfactor
+        jitter_factor = self.jitter.factor
+        pull_costs = [d * per_pull_cost for d in self._deg]
+        heappush, heappop = heapq.heappush, heapq.heappop
+
+        heap: List[Tuple[float, int, int]] = [
+            (self._step_duration(pid, 0), pid, pid) for pid in range(n)]
+        heapq.heapify(heap)
+        seq = n
 
         while heap:
-            t, _, pid = heapq.heappop(heap)
-            p = self.procs[pid]
-            if p.done:
+            t, _, pid = heappop(heap)
+            if done[pid]:
                 continue
-            p.clock = t
+            clock[pid] = t
+            ptouch = touch[pid]
 
             # --- communication phase: bulk-drain inboxes -------------------
+            # inbox holds fresh payloads only; fragments treat missing
+            # neighbors as "no news" (stale halo)
             inbox = {}
             n_msgs = 0
             if comm:
-                for nb in self.topology[pid]:
-                    msg, drained = self.ducts[(nb, pid)].latest(t)
-                    n_msgs += drained
-                    if msg is not None:
-                        p.touch[nb] = 1 + msg.touch
+                n_laden = 0
+                for nb, duct in in_ducts[pid]:
+                    msg, drained = duct.latest(t)
+                    if drained:
+                        n_msgs += drained
+                        n_laden += 1
+                        new_touch = 1 + msg.touch
+                        c_touch[pid] += new_touch - ptouch[nb]
+                        ptouch[nb] = new_touch
                         inbox[nb] = msg.payload
-                    else:
-                        inbox[nb] = None
-            else:
-                inbox = {nb: None for nb in self.topology[pid]}
+                if n_msgs:
+                    c_msgs[pid] += n_msgs
+                    c_laden[pid] += n_laden
 
             # --- compute phase (the real application fragment) -------------
-            outputs = self.fragments[pid].update(inbox)
-            p.steps += 1
+            outputs = fragments[pid].update(inbox)
+            step = steps[pid] + 1
+            steps[pid] = step
 
-            if comm:
+            if comm and outputs:
+                n_ok = 0
                 for nb, payload in outputs.items():
-                    self.ducts[(pid, nb)].try_send(payload, t, p.touch[nb])
+                    if ducts[(pid, nb)].try_send(payload, t, ptouch[nb]):
+                        n_ok += 1
+                c_att[pid] += len(outputs)
+                c_ok[pid] += n_ok
 
-            p.pending_handling = (n_msgs * cfg.per_message_cost
-                                  + len(self.topology[pid]) * cfg.per_pull_cost)
-            self._maybe_snapshot(pid, t)
+            pending = n_msgs * per_msg_cost + pull_costs[pid]
+
+            if t >= next_snap[pid]:
+                snaps = snapshots[pid]
+                snaps.append((t, self._proc_counters(pid, t)))
+                next_snap[pid] = warmup + len(snaps) * interval
 
             # --- termination ------------------------------------------------
-            if t >= cfg.duration:
-                p.done = True
-                active -= 1
+            if t >= duration:
+                done[pid] = True
+                self._seq_active[self._barrier_seq[pid]] -= 1
                 # release any barrier this process would have joined
                 seq = self._try_release_barriers(heap, seq)
                 continue
 
             # --- scheduling / barriers --------------------------------------
-            if self._barrier_due(p, t):
-                b = p.barrier_seq
+            if barriered and self._barrier_due(pid, t):
+                b = self._barrier_seq[pid]
+                self._pending[pid] = pending
                 self._barrier_arrivals.setdefault(b, []).append((pid, t))
-                p.waiting = True
                 seq = self._try_release_barriers(heap, seq)
             else:
-                d = self._step_duration(pid, p.steps) + p.pending_handling
-                heapq.heappush(heap, (t + d, seq, pid))
+                d = base_compute * jitter_factor(pid, step) * cfactor[pid]
+                heappush(heap, (t + d + pending, seq, pid))
                 seq += 1
 
-        updates = [p.steps for p in self.procs]
+        updates = list(steps)
         qos_by_proc: Dict[int, List[QosReport]] = {}
         all_qos: List[QosReport] = []
         for pid, snaps in self._snapshots.items():
-            reps = []
-            for (t0, c0), (t1, c1) in zip(snaps, snaps[1:]):
-                reps.append(report(c0, c1))
+            reps = [report(c0, c1)
+                    for (t0, c0), (t1, c1) in zip(snaps, snaps[1:])]
             qos_by_proc[pid] = reps
             all_qos.extend(reps)
 
-        sent = sum(d.inlet.attempted_send_count for d in self.ducts.values())
-        ok = sum(d.inlet.successful_send_count for d in self.ducts.values())
+        sent = sum(self._c_att)
+        ok = sum(self._c_ok)
         return SimResult(
             updates=updates,
             horizon=cfg.duration,
@@ -254,20 +323,28 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def _try_release_barriers(self, heap, seq) -> int:
-        """Release every barrier whose full active cohort has arrived."""
+        """Release every barrier whose full active cohort has arrived.
+
+        ``_seq_active`` tracks how many live processes sit at each barrier
+        sequence number, so cohort checks are O(1) instead of an O(n) scan.
+        """
+        done = self._done
         for b in sorted(self._barrier_arrivals):
             arrivals = self._barrier_arrivals[b]
-            waiting_active = [a for a in arrivals if not self.procs[a[0]].done]
-            needed = sum(1 for p in self.procs
-                         if not p.done and p.barrier_seq == b)
+            waiting_active = [a for a in arrivals if not done[a[0]]]
+            needed = self._seq_active.get(b, 0)
             if needed > 0 and len(waiting_active) >= needed:
                 release = max(a[1] for a in arrivals) + self._barrier_cost()
-                for pid, _ in waiting_active:
-                    p = self.procs[pid]
-                    p.waiting = False
-                    p.barrier_seq = b + 1
-                    p.last_release = release
-                    d = self._step_duration(pid, p.steps) + p.pending_handling
+                self._seq_active[b] -= len(waiting_active)
+                if self._seq_active[b] <= 0:
+                    del self._seq_active[b]
+                self._seq_active[b + 1] = (self._seq_active.get(b + 1, 0)
+                                           + len(waiting_active))
+                for pid, t_arr in waiting_active:
+                    self._barrier_seq[pid] = b + 1
+                    self._last_release[pid] = release
+                    d = (self._step_duration(pid, self._steps[pid])
+                         + self._pending[pid])
                     heapq.heappush(heap, (release + d, seq, pid))
                     seq += 1
                 del self._barrier_arrivals[b]

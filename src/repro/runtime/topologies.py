@@ -1,0 +1,198 @@
+"""Pluggable process topologies for the discrete-event runtime (DESIGN.md §3).
+
+A :class:`Topology` is an immutable adjacency structure plus a host
+assignment (``node_of``), so the simulator's hierarchical link model can
+price intra-node and inter-node hops differently (Bienz et al.,
+arXiv:1806.02030) and the fault injector can degrade a whole physical node
+and its communication clique (the paper's lac-417 scenario, §III-G).
+
+Four families cover the paper's experiments plus scaling stress shapes:
+
+  ring          degree-2 cycle — cheapest per-process communication
+  torus         near-square 2-D torus — the benchmark apps' native shape
+  cliques       clique-of-cliques: full connectivity within a host, plus
+                corresponding-member links to the neighboring hosts
+  smallworld    ring lattice + deterministic long chords — dense, low
+                diameter; stresses clumpiness under load
+
+All builders are deterministic (counter-based splitmix64 hashing, no RNG
+objects) and validated: symmetric, self-loop-free, connected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from repro.runtime.faults import _splitmix64
+
+
+def near_square(n: int) -> Tuple[int, int]:
+    """Near-square factorization of ``n`` (rows <= cols)."""
+    a = int(math.sqrt(n))
+    while n % a:
+        a -= 1
+    return a, n // a
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Immutable communication graph with a physical-host assignment."""
+
+    name: str
+    n: int
+    neighbors: Tuple[Tuple[int, ...], ...]   # adjacency, index = pid
+    node_of: Tuple[int, ...]                 # pid -> physical host id
+
+    def as_dict(self) -> Dict[int, List[int]]:
+        return {i: list(nbs) for i, nbs in enumerate(self.neighbors)}
+
+    def degree(self, pid: int) -> int:
+        return len(self.neighbors[pid])
+
+    @property
+    def n_edges(self) -> int:
+        return sum(len(nbs) for nbs in self.neighbors) // 2
+
+    @property
+    def n_nodes(self) -> int:
+        return len(set(self.node_of))
+
+    def same_node(self, a: int, b: int) -> bool:
+        return self.node_of[a] == self.node_of[b]
+
+    def host_pids(self, host: int) -> List[int]:
+        return [p for p in range(self.n) if self.node_of[p] == host]
+
+    def clique_of(self, pid: int) -> List[int]:
+        """The pid's communication clique: itself plus direct neighbors."""
+        return sorted({pid, *self.neighbors[pid]})
+
+    def validate(self) -> "Topology":
+        for i, nbs in enumerate(self.neighbors):
+            assert i not in nbs, f"self-loop at {i}"
+            assert len(set(nbs)) == len(nbs), f"duplicate edge at {i}"
+            for j in nbs:
+                assert i in self.neighbors[j], f"asymmetric edge {i}->{j}"
+        if self.n > 1:
+            seen = {0}
+            frontier = [0]
+            while frontier:
+                nxt = []
+                for p in frontier:
+                    for q in self.neighbors[p]:
+                        if q not in seen:
+                            seen.add(q)
+                            nxt.append(q)
+                frontier = nxt
+            assert len(seen) == self.n, "topology is disconnected"
+        return self
+
+
+def _freeze(adj: Sequence[Sequence[int]], name: str,
+            node_of: Sequence[int]) -> Topology:
+    neighbors = tuple(tuple(sorted(set(nbs))) for nbs in adj)
+    return Topology(name, len(neighbors), neighbors,
+                    tuple(node_of)).validate()
+
+
+def _default_nodes(n: int, procs_per_node: int) -> List[int]:
+    return [p // max(procs_per_node, 1) for p in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+def ring(n: int, procs_per_node: int = 4) -> Topology:
+    assert n >= 2, "ring needs >= 2 processes"
+    adj = [[(i - 1) % n, (i + 1) % n] for i in range(n)]
+    return _freeze(adj, f"ring{n}", _default_nodes(n, procs_per_node))
+
+
+def torus(n: int, procs_per_node: int = 4) -> Topology:
+    """Near-square 2-D torus — matches the apps' native halo structure."""
+    assert n >= 2, "torus needs >= 2 processes"
+    gh, gw = near_square(n)
+    adj: List[List[int]] = [[] for _ in range(n)]
+    for p in range(n):
+        r, c = divmod(p, gw)
+        for q in (((r - 1) % gh) * gw + c, ((r + 1) % gh) * gw + c,
+                  r * gw + (c - 1) % gw, r * gw + (c + 1) % gw):
+            if q != p:
+                adj[p].append(q)
+    return _freeze(adj, f"torus{gh}x{gw}", _default_nodes(n, procs_per_node))
+
+
+def cliques(n: int, clique_size: int = 8) -> Topology:
+    """Clique-of-cliques: each host's processes are fully connected, and
+    member k of each clique links to member k of the two adjacent cliques
+    (a ring over hosts).  ``node_of`` is the clique index, so the faulty-node
+    experiment degrades exactly one clique."""
+    assert n >= 2
+    assert clique_size >= 1
+    assert n % clique_size == 0, "n must be a multiple of clique_size"
+    n_cliques = n // clique_size
+    adj: List[List[int]] = [[] for _ in range(n)]
+    for p in range(n):
+        cq, k = divmod(p, clique_size)
+        for k2 in range(clique_size):
+            if k2 != k:
+                adj[p].append(cq * clique_size + k2)
+        if n_cliques > 1:
+            for d in (-1, +1):
+                q = ((cq + d) % n_cliques) * clique_size + k
+                if q != p:
+                    adj[p].append(q)
+    return _freeze(adj, f"cliques{n_cliques}x{clique_size}",
+                   [p // clique_size for p in range(n)])
+
+
+def smallworld(n: int, k: int = 4, chords: int = 2, seed: int = 0,
+               procs_per_node: int = 4) -> Topology:
+    """Dense small-world: ring lattice (k nearest, k/2 each side) plus
+    ``chords`` deterministic long-range links per process.  Chord endpoints
+    come from splitmix64 hashing, so the graph is a pure function of
+    (n, k, chords, seed)."""
+    assert n >= 4, "smallworld needs >= 4 processes"
+    k = max(2, min(k, n - 1)) // 2 * 2
+    adj: List[set] = [set() for _ in range(n)]
+    for p in range(n):
+        for d in range(1, k // 2 + 1):
+            adj[p].add((p + d) % n)
+            adj[p].add((p - d) % n)
+    for p in range(n):
+        for c in range(chords):
+            h = _splitmix64(_splitmix64(seed * 1_000_003 + p) ^ (c + 1))
+            # offset in [k//2 + 1, n - k//2 - 1]: always a non-lattice edge
+            span = n - k - 1
+            if span <= 0:
+                break
+            q = (p + k // 2 + 1 + h % span) % n
+            if q != p:
+                adj[p].add(q)
+                adj[q].add(p)
+    return _freeze([sorted(s) for s in adj], f"smallworld{n}k{k}",
+                   _default_nodes(n, procs_per_node))
+
+
+TOPOLOGIES = {
+    "ring": ring,
+    "torus": torus,
+    "cliques": cliques,
+    "smallworld": smallworld,
+}
+
+
+def make_topology(name: str, n: int, **kwargs) -> Topology:
+    """Build a registered topology by name for ``n`` processes."""
+    try:
+        builder = TOPOLOGIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown topology {name!r}; choose from {sorted(TOPOLOGIES)}")
+    if name == "cliques":
+        size = kwargs.pop("clique_size", None)
+        if size is None:
+            size = next(s for s in (8, 4, 2, 1) if n % s == 0)
+        return builder(n, clique_size=size, **kwargs)
+    return builder(n, **kwargs)

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional extra; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.mlstm_attention.kernel import mlstm_attention_kernel

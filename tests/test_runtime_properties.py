@@ -1,5 +1,8 @@
 """Hypothesis property tests on runtime/system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional extra; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.modes import AsyncMode

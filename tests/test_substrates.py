@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional extra; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import ckpt

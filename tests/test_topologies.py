@@ -1,0 +1,207 @@
+"""Topology layer: adjacency invariants, hierarchical link model, injected
+topologies in the apps, engine determinism, and the experiments driver."""
+import numpy as np
+import pytest
+
+from repro.apps.evo import EvoApp, EvoConfig
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+from repro.core.modes import AsyncMode
+from repro.runtime.faults import faulty_host
+from repro.runtime.simulator import SimConfig, Simulator
+from repro.runtime.topologies import (
+    TOPOLOGIES, cliques, make_topology, near_square, ring, smallworld, torus,
+)
+
+
+# ---------------------------------------------------------------------------
+# Adjacency invariants
+# ---------------------------------------------------------------------------
+ALL_CASES = [
+    ring(8), ring(64),
+    torus(16), torus(12), torus(64),
+    cliques(32, 8), cliques(64, 4),
+    smallworld(32), smallworld(64, k=6, chords=3),
+]
+
+
+@pytest.mark.parametrize("topo", ALL_CASES, ids=lambda t: t.name)
+def test_symmetric_no_self_loops_connected(topo):
+    for i, nbs in enumerate(topo.neighbors):
+        assert i not in nbs
+        assert len(set(nbs)) == len(nbs)
+        for j in nbs:
+            assert i in topo.neighbors[j]
+    # connectivity: BFS from 0 reaches everyone
+    seen, frontier = {0}, [0]
+    while frontier:
+        frontier = [q for p in frontier for q in topo.neighbors[p]
+                    if q not in seen and not seen.add(q)]
+    assert len(seen) == topo.n
+
+
+def test_degree_invariants():
+    assert all(ring(16).degree(p) == 2 for p in range(16))
+    assert all(torus(64).degree(p) == 4 for p in range(64))
+    # 3x4 torus: wrap along the 3-row axis still yields distinct neighbors
+    assert all(torus(12).degree(p) == 4 for p in range(12))
+    # clique-of-cliques: (size-1) in-clique + 2 inter-clique links
+    t = cliques(32, 8)
+    assert all(t.degree(p) == 7 + 2 for p in range(32))
+    # small-world: at least the ring lattice
+    t = smallworld(64, k=4, chords=2)
+    assert all(t.degree(p) >= 4 for p in range(64))
+    assert t.n_edges > 64 * 4 // 2   # chords added something
+
+
+def test_node_assignment_and_cliques():
+    t = cliques(32, 8)
+    assert t.n_nodes == 4
+    assert t.host_pids(1) == list(range(8, 16))
+    assert t.same_node(8, 15) and not t.same_node(7, 8)
+    # a clique member's communication clique covers its whole host
+    assert set(t.host_pids(0)) <= set(t.clique_of(0))
+
+
+def test_smallworld_deterministic_in_seed():
+    a = smallworld(48, seed=3)
+    b = smallworld(48, seed=3)
+    c = smallworld(48, seed=4)
+    assert a.neighbors == b.neighbors
+    assert a.neighbors != c.neighbors
+
+
+def test_make_topology_registry():
+    assert set(TOPOLOGIES) == {"ring", "torus", "cliques", "smallworld"}
+    t = make_topology("cliques", 24)   # picks a divisor clique size
+    assert t.n == 24
+    with pytest.raises(ValueError):
+        make_topology("hypercube", 16)
+    assert near_square(12) == (3, 4)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical link model
+# ---------------------------------------------------------------------------
+def test_intra_node_links_are_cheaper():
+    topo = cliques(16, 4)
+    app = GraphColorApp(GraphColorConfig(n_processes=16, nodes_per_process=4),
+                        topology=topo)
+    cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.01,
+                    base_latency=500e-6, intra_node_latency=50e-6)
+    sim = Simulator(app, cfg)
+    assert sim._link_base(0, 1) == 50e-6      # same clique/host
+    assert sim._link_base(0, 4) == 500e-6     # cross host
+    # without the hierarchical model everything is flat
+    sim_flat = Simulator(
+        GraphColorApp(GraphColorConfig(n_processes=16, nodes_per_process=4),
+                      topology=topo),
+        SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.01,
+                  base_latency=500e-6))
+    assert sim_flat._link_base(0, 1) == 500e-6
+
+
+def test_faulty_host_degrades_whole_clique():
+    topo = cliques(32, 8)
+    fm = faulty_host(topo, 1, compute_factor=20.0, link_factor=10.0)
+    for p in range(8, 16):
+        assert fm.compute_factor(p) == 20.0
+    assert fm.compute_factor(0) == 1.0
+    assert fm.link_factor(8, 9) == 10.0
+    assert fm.link_factor(8, 0) == 10.0 and fm.link_factor(0, 8) == 10.0
+    assert fm.link_factor(0, 1) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Injected topologies drive the apps end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_graphcolor_runs_on_every_topology(name):
+    topo = make_topology(name, 16)
+    app = GraphColorApp(GraphColorConfig(n_processes=16, nodes_per_process=16),
+                        topology=topo)
+    cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.01,
+                    base_latency=100e-6)
+    res = Simulator(app, cfg).run()
+    assert all(u > 0 for u in res.updates)
+    assert res.sent > 0
+    # messages travel exactly the topology's edges
+    assert len(Simulator(app, cfg).ducts) == 2 * topo.n_edges
+
+
+def test_evo_runs_on_injected_topology():
+    topo = ring(8)
+    app = EvoApp(EvoConfig(n_processes=8, cells_per_process=16),
+                 topology=topo)
+    res = Simulator(app, SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.005,
+                                   base_latency=100e-6)).run()
+    assert all(u > 0 for u in res.updates)
+    assert np.isfinite(res.quality)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed -> identical trajectories and QoS
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["torus", "cliques"])
+def test_simulator_deterministic(name):
+    def go():
+        topo = make_topology(name, 16)
+        app = GraphColorApp(
+            GraphColorConfig(n_processes=16, nodes_per_process=4, seed=7),
+            topology=topo)
+        cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.05, seed=7,
+                        base_latency=200e-6, intra_node_latency=40e-6,
+                        snapshot_warmup=0.01, snapshot_interval=0.01)
+        return Simulator(app, cfg).run()
+
+    a, b = go(), go()
+    assert a.updates == b.updates
+    assert a.sent == b.sent and a.dropped == b.dropped
+    assert a.quality == b.quality
+    assert a.qos == b.qos                      # QosReport is frozen/comparable
+    assert a.qos_by_process == b.qos_by_process
+
+
+def test_scalar_and_block_fragments_share_semantics():
+    """1-simel fragments use the fast scalar path; colors stay in range and
+    probs remain a simplex."""
+    topo = torus(16)
+    app = GraphColorApp(GraphColorConfig(n_processes=16, nodes_per_process=1),
+                        topology=topo)
+    frags = app.make_fragments()
+    res = Simulator(app, SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.01,
+                                   base_latency=100e-6)).run()
+    for f in frags:
+        assert 0 <= f.colors[0, 0] < 3
+        np.testing.assert_allclose(f.probs.sum(), 1.0, atol=1e-6)
+    assert np.isfinite(res.quality)
+
+
+# ---------------------------------------------------------------------------
+# Experiments driver (tiny end-to-end)
+# ---------------------------------------------------------------------------
+def test_experiments_weak_scaling_cli(capsys):
+    from repro.runtime.experiments import main
+    rows = main(["--family", "weak_scaling", "--topology", "ring",
+                 "--procs", "8", "16", "--duration", "0.01"])
+    assert [r["n"] for r in rows] == [8, 16]
+    for r in rows:
+        for metric in ("simstep_period", "delivery_failure_rate"):
+            assert r["qos"][metric]["median"] is not None
+            assert r["qos"][metric]["p95"] is not None
+    out = capsys.readouterr().out
+    assert "median=" in out and "p95=" in out
+
+
+def test_experiments_faults_family():
+    from repro.runtime.experiments import main
+    rows = main(["--family", "faults", "--topology", "cliques",
+                 "--procs", "16", "--duration", "0.02",
+                 "--clique-size", "4"])
+    with_fault = next(r for r in rows if r["label"] == "with_fault")
+    without = next(r for r in rows if r["label"] == "without_fault")
+    # the faulty clique's tail is drastically worse than the healthy rest
+    assert (with_fault["qos"]["clique"]["simstep_period"]["p95"]
+            > 3 * with_fault["qos"]["rest"]["simstep_period"]["p95"])
+    # global medians stay in the same ballpark (claim C4)
+    assert (with_fault["qos"]["global"]["simstep_period"]["median"]
+            < 2 * without["qos"]["global"]["simstep_period"]["median"])
