@@ -1,0 +1,95 @@
+"""Event vs jax engine: wall-clock and updates/sec at matched configs.
+
+The acceptance gate for the vectorized engine (DESIGN.md §7): the
+4096-process torus weak-scaling point must complete >= 10x faster than the
+discrete-event engine on the same machine, while total simulated updates
+agree within 2%.
+
+Run: PYTHONPATH=src:. python benchmarks/bench_engines.py \
+         [--procs 256 1024 4096] [--engines event jax] [--duration 0.05]
+
+Writes ``benchmarks/results/BENCH_engines.json`` (benchmarks/report.py
+conventions: CSV-ish stdout via ``emit``, JSON artifact via ``save_json``).
+Event-engine points above ``--event-cap`` processes are skipped by default
+because they take minutes; pass a larger cap to measure the full matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+from repro.runtime.engine import make_engine
+from repro.runtime.simulator import SimConfig
+from repro.runtime.topologies import make_topology
+
+from benchmarks.common import emit, save_json
+
+PROC_COUNTS = (256, 1024, 4096)
+
+
+def bench_point(engine: str, n: int, duration: float, topology: str):
+    topo = make_topology(topology, n)
+    app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1),
+                        topology=topo)
+    cfg = SimConfig(duration=duration, snapshot_warmup=duration / 6,
+                    snapshot_interval=duration / 12)
+    eng = make_engine(engine, app, cfg)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    updates = sum(res.updates)
+    return dict(engine=engine, n=n, topology=topo.name, duration=duration,
+                wall_seconds=wall, updates=updates,
+                updates_per_sec=updates / wall,
+                delivery_failure_rate=res.delivery_failure_rate)
+
+
+def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
+        duration: float = 0.05, topology: str = "torus",
+        event_cap: int = 1024):
+    rows = []
+    for n in proc_counts:
+        for engine in engines:
+            if engine == "event" and n > event_cap:
+                emit(f"engines/{engine}/n{n}", 0.0,
+                     f"skipped (> --event-cap {event_cap}; "
+                     "the event engine needs minutes at this scale)")
+                continue
+            row = bench_point(engine, n, duration, topology)
+            rows.append(row)
+            emit(f"engines/{engine}/n{n}",
+                 row["wall_seconds"] * 1e6,
+                 f"updates={row['updates']} "
+                 f"upd_per_sec={row['updates_per_sec']:.0f} "
+                 f"fail={row['delivery_failure_rate']:.3f}")
+    # speedup summary wherever both engines ran the same point
+    summary = {}
+    for n in proc_counts:
+        ev = next((r for r in rows
+                   if r["engine"] == "event" and r["n"] == n), None)
+        jx = next((r for r in rows
+                   if r["engine"] == "jax" and r["n"] == n), None)
+        if ev and jx:
+            summary[f"n{n}"] = dict(
+                speedup=ev["wall_seconds"] / jx["wall_seconds"],
+                updates_agree=abs(jx["updates"] - ev["updates"])
+                <= 0.02 * ev["updates"])
+            emit(f"engines/speedup/n{n}", 0.0,
+                 f"jax_over_event={summary[f'n{n}']['speedup']:.1f}x")
+    save_json("BENCH_engines", {"rows": rows, "summary": summary})
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--procs", type=int, nargs="+", default=list(PROC_COUNTS))
+    p.add_argument("--engines", nargs="+", default=["event", "jax"],
+                   choices=["event", "jax"])
+    p.add_argument("--duration", type=float, default=0.05)
+    p.add_argument("--topology", default="torus")
+    p.add_argument("--event-cap", type=int, default=1024,
+                   help="skip event-engine points above this process count")
+    a = p.parse_args()
+    run(tuple(a.procs), tuple(a.engines), a.duration, a.topology,
+        a.event_cap)

@@ -40,7 +40,8 @@ def _fmt(x, unit=""):
 def dryrun_table():
     rows = _load("dryrun")
     base = [r for r in rows if not r.get("tag")]
-    print("| arch | shape | mesh | status | HLO GFLOP/chip* | coll bytes/chip | args GB/chip | lower+compile s |")
+    print("| arch | shape | mesh | status | HLO GFLOP/chip* "
+          "| coll bytes/chip | args GB/chip | lower+compile s |")
     print("|---|---|---|---|---|---|---|---|")
     for r in base:
         if r["status"] == "ok":

@@ -26,7 +26,6 @@ os.environ["XLA_FLAGS"] = (
 # ruff: noqa: E402
 import argparse
 import json
-import math
 
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # B/s / chip

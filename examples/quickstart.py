@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.modes import AsyncMode
-from repro.models import lm, transformer
+from repro.models import lm
 from repro.runtime.simulator import SimConfig, Simulator
 from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
 

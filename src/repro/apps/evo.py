@@ -156,6 +156,124 @@ class _Fragment:
         return {nb: edges for nb in set(nbs.values())}
 
 
+# ---------------------------------------------------------------------------
+# Population-batched form — what the vectorized engine scans (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+class BatchedEvo:
+    """All fragments' evolution updates as one step over flat arrays.
+
+    Mirrors ``_Fragment.update``: genome interpretation (uint32 mixing
+    rounds — the accumulator is carried in the state so the compute-heavy
+    part cannot be dead-code-eliminated out of the scan), resource inflow +
+    diffusion over halo rows, and reproduction into the weakest rolled
+    neighbor (conflicting spawners resolve last-direction-wins instead of
+    spawner-order — DESIGN.md §7).  Halo slots no injected neighbor feeds
+    behave reflectively, as in the event-engine fragment.
+    """
+
+    _SHIFTS = ((1, 0), (-1, 0), (1, 1), (-1, 1))
+
+    def __init__(self, app: "EvoApp"):
+        import jax.numpy as jnp
+        from repro.runtime.topologies import halo_slot_map
+        assert app.injected is not None, \
+            "batched evo needs an injected Topology"
+        self.cfg = app.cfg
+        self.n = app.cfg.n_processes
+        self.H, self.W = app.block
+        self.L = max(self.H, self.W)
+        self.payload_len = self.L
+        self.payload_dtype = jnp.float32
+        self.target = (np.arange(app.cfg.genome_len, dtype=np.int32)
+                       * 16 % 256)
+        fed = np.zeros((self.n, 4), dtype=bool)
+        for p in range(self.n):
+            for s in halo_slot_map(app.injected.neighbors[p]).values():
+                fed[p, s] = True
+        self.fed = fed
+
+    def init(self, seed: int):
+        import jax.numpy as jnp
+        cfg, n, H, W = self.cfg, self.n, self.H, self.W
+        genomes = np.empty((n, H, W, cfg.genome_len), np.int32)
+        for p in range(n):
+            rng = np.random.default_rng((seed, p))
+            genomes[p] = rng.integers(0, 256, size=(H, W, cfg.genome_len))
+        state = dict(genomes=jnp.asarray(genomes),
+                     resource=jnp.zeros((n, H, W), jnp.float32),
+                     acc=jnp.zeros((n, H, W), jnp.uint32))
+        return state, jnp.zeros((n, 4, self.L), jnp.float32)
+
+    def _own_edges(self, r):
+        import jax.numpy as jnp
+        L, H, W = self.L, self.H, self.W
+        pad_w, pad_h = ((0, 0), (0, L - W)), ((0, 0), (0, L - H))
+        return jnp.stack([
+            jnp.pad(r[:, 0, :], pad_w), jnp.pad(r[:, -1, :], pad_w),
+            jnp.pad(r[:, :, 0], pad_h), jnp.pad(r[:, :, -1], pad_h)], axis=1)
+
+    def step(self, state, halo, steps, seed):
+        import jax.numpy as jnp
+        from repro.runtime.engine_jax import STREAM_MUT, hash_uniform
+        cfg, H, W = self.cfg, self.H, self.W
+        g, r = state["genomes"], state["resource"]
+        G = cfg.genome_len
+
+        # reflective unfed slots: mirror our own edge, never drain resource
+        halo_eff = jnp.where(jnp.asarray(self.fed)[:, :, None], halo,
+                             self._own_edges(r))
+        hn, hs = halo_eff[:, 0, :W], halo_eff[:, 1, :W]
+        hw, he = halo_eff[:, 2, :H], halo_eff[:, 3, :H]
+
+        # genome "interpretation": uint32 mixing rounds (compute-heavy)
+        st = g.sum(axis=-1).astype(jnp.uint32)
+        acc = state["acc"]
+        for rr in range(cfg.exec_rounds):
+            instr = g[..., rr % G].astype(jnp.uint32)
+            st = st * np.uint32(2654435761) + instr * np.uint32(2246822519)
+            acc = acc ^ (st >> np.uint32(17))
+
+        fit = 1.0 - jnp.abs(g - self.target[None, None, None, :]
+                            ).mean(axis=-1) / 128.0
+        r = r + cfg.resource_inflow * fit
+
+        # resource diffusion over internal cells + halo rows (no wrap)
+        up = jnp.concatenate([hn[:, None, :], r[:, :-1]], axis=1)
+        down = jnp.concatenate([r[:, 1:], hs[:, None, :]], axis=1)
+        left = jnp.concatenate([hw[:, :, None], r[:, :, :-1]], axis=2)
+        right = jnp.concatenate([r[:, :, 1:], he[:, :, None]], axis=2)
+        mean_nb = (up + down + left + right) / 4.0
+        r = (1 - cfg.share_frac) * r + cfg.share_frac * mean_nb
+
+        # reproduction: spawners overwrite their weakest rolled neighbor
+        spawn = r > cfg.spawn_threshold
+        fit_rolled = jnp.stack([jnp.roll(fit, s, axis=a + 1)
+                                for s, a in self._SHIFTS])
+        weakest = fit_rolled.argmin(axis=0)
+        cell = jnp.arange(self.n * H * W * G, dtype=jnp.int32
+                          ).reshape(self.n, H, W, G)
+        step_k = steps[:, None, None, None]
+        mut = hash_uniform(seed, STREAM_MUT, step_k, cell) < cfg.mutation_rate
+        delta = jnp.floor(
+            hash_uniform(seed, STREAM_MUT, step_k, cell, 7) * 33
+        ).astype(jnp.int32) - 16
+        child = jnp.clip(g + jnp.where(mut, delta, 0), 0, 255)
+        new_g = g
+        for d, (s, a) in enumerate(self._SHIFTS):
+            lands = jnp.roll(spawn & (weakest == d), -s, axis=a + 1)
+            new_g = jnp.where(lands[..., None],
+                              jnp.roll(child, -s, axis=a + 1), new_g)
+        r = jnp.where(spawn, r * 0.5, r)
+
+        state = dict(genomes=new_g, resource=r, acc=acc)
+        return state, self._own_edges(r)
+
+    def quality(self, state) -> float:
+        g = np.asarray(state["genomes"])
+        diff = np.abs(g - self.target[None, None, None, :])
+        return float((1.0 - diff.mean(axis=-1) / 128.0).mean())
+
+
 class EvoApp:
     def __init__(self, cfg: EvoConfig, topology=None):
         self.cfg = cfg
@@ -186,6 +304,10 @@ class EvoApp:
             f.pid, f.grid, f.self_wrap = i, self.grid, self.self_wrap
             out[i] = sorted(set(f.neighbors().values()) - {i})
         return out
+
+    def batched(self) -> "BatchedEvo":
+        """Population-batched entry point for the vectorized engine."""
+        return BatchedEvo(self)
 
     def quality(self, fragments) -> float:
         return float(np.mean([f.fitness().mean() for f in fragments]))

@@ -42,10 +42,12 @@ def direction_map(neighbors) -> Dict[int, str]:
     Arbitrary topologies (ring, cliques, small-world — runtime/topologies)
     don't carry grid directions, so neighbors round-robin over the four halo
     slots; several neighbors may feed one slot (last fresh message wins,
-    which is exactly the best-effort staleness semantics).
+    which is exactly the best-effort staleness semantics).  The numeric slot
+    assignment lives in ``runtime.topologies.halo_slot_map`` so the
+    vectorized engine wires edges identically.
     """
-    dirs = ("n", "s", "w", "e")
-    return {nb: dirs[i % 4] for i, nb in enumerate(sorted(neighbors))}
+    from repro.runtime.topologies import DIRS, halo_slot_map
+    return {nb: DIRS[s] for nb, s in halo_slot_map(neighbors).items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,6 +270,10 @@ class GraphColorApp:
             out[i] = sorted(set(f.neighbors().values()) - {i})
         return out
 
+    def batched(self) -> "BatchedGraphColor":
+        """Population-batched entry point for the vectorized engine."""
+        return BatchedGraphColor(self)
+
     def quality(self, fragments) -> float:
         """Exact remaining conflict count on the assembled global grid."""
         gh, gw = self.grid
@@ -279,6 +285,113 @@ class GraphColorApp:
         conflicts = ((full == np.roll(full, 1, 0)).sum()
                      + (full == np.roll(full, 1, 1)).sum())
         return float(conflicts)
+
+
+# ---------------------------------------------------------------------------
+# Population-batched form — what the vectorized engine scans (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+class BatchedGraphColor:
+    """All fragments' CFL updates as one vmapped step over flat arrays.
+
+    The same math as ``_update_block`` (via its jnp twin), executed for the
+    whole process population inside the vectorized engine's lockstep
+    window.  Halo state lives in an ``(n, 4, L)`` array the engine scatters
+    delivered edge payloads into; slots no injected neighbor feeds stay at
+    the -1 sentinel (a color no node holds), matching ``_Fragment``.
+    """
+
+    def __init__(self, app: "GraphColorApp"):
+        import jax.numpy as jnp
+        from repro.runtime.topologies import halo_slot_map
+        assert app.injected is not None, \
+            "batched graphcolor needs an injected Topology"
+        self.cfg = app.cfg
+        self.app = app
+        self.n = app.cfg.n_processes
+        self.H, self.W = app.block
+        self.L = max(self.H, self.W)
+        self.payload_len = self.L
+        self.payload_dtype = jnp.int32
+        fed = np.zeros((self.n, 4), dtype=bool)
+        for p in range(self.n):
+            for s in halo_slot_map(app.injected.neighbors[p]).values():
+                fed[p, s] = True
+        self.fed = fed
+
+    def _edges_np(self, colors: np.ndarray) -> np.ndarray:
+        """(n, H, W) block colors -> (n, 4, L) n/s/w/e edge rows (0-padded)."""
+        n, H, W = colors.shape
+        out = np.zeros((n, 4, self.L), dtype=np.int32)
+        out[:, 0, :W] = colors[:, 0, :]
+        out[:, 1, :W] = colors[:, -1, :]
+        out[:, 2, :H] = colors[:, :, 0]
+        out[:, 3, :H] = colors[:, :, -1]
+        return out
+
+    def init(self, seed: int):
+        import jax.numpy as jnp
+        cfg, n, H, W = self.cfg, self.n, self.H, self.W
+        colors = np.empty((n, H, W), np.int32)
+        for p in range(n):
+            rng = np.random.default_rng((seed, p))
+            colors[p] = rng.integers(0, cfg.n_colors, size=(H, W))
+        probs = jnp.full((n, H, W, cfg.n_colors), 1.0 / cfg.n_colors,
+                         jnp.float32)
+        halo = np.where(self.fed[:, :, None], self._edges_np(colors),
+                        np.int32(-1))
+        state = dict(colors=jnp.asarray(colors), probs=probs)
+        return state, jnp.asarray(halo)
+
+    def step(self, state, halo, steps, seed):
+        import jax
+        import jax.numpy as jnp
+        from repro.runtime.engine_jax import STREAM_APP, hash_uniform
+        H, W, L = self.H, self.W, self.L
+        b, C = self.cfg.b, self.cfg.n_colors
+        colors, probs = state["colors"], state["probs"]
+        hn, hs = halo[:, 0, :W], halo[:, 1, :W]
+        hw, he = halo[:, 2, :H], halo[:, 3, :H]
+
+        # batched jnp_update_block: population axis in front of (H, W)
+        up = jnp.concatenate([hn[:, None, :], colors[:, :-1]], axis=1)
+        down = jnp.concatenate([colors[:, 1:], hs[:, None, :]], axis=1)
+        left = jnp.concatenate([hw[:, :, None], colors[:, :, :-1]], axis=2)
+        right = jnp.concatenate([colors[:, :, 1:], he[:, :, None]], axis=2)
+        conflict = ((colors == up) | (colors == down)
+                    | (colors == left) | (colors == right))
+        onehot = jax.nn.one_hot(colors, C)
+        fail_p = (1 - b) * probs + b * (1 - onehot) / (C - 1)
+        new_probs = jnp.where(conflict[..., None], fail_p, onehot)
+        # counter-hash resample draw: ~10 integer ops per node, much
+        # cheaper in the scan hot loop than per-process threefry folding
+        cell = jnp.arange(self.n * H * W, dtype=jnp.int32
+                          ).reshape(self.n, H, W)
+        u = hash_uniform(seed, STREAM_APP, steps[:, None, None],
+                         cell)[..., None]
+        cdf = jnp.cumsum(new_probs, axis=-1)
+        # clip: float32 cumsum can leave cdf[-1] a few ulps below 1
+        sampled = jnp.minimum((u > cdf).sum(-1), C - 1)
+        new_colors = jnp.where(conflict, sampled, colors)
+
+        pad_w, pad_h = ((0, 0), (0, L - W)), ((0, 0), (0, L - H))
+        edges = jnp.stack([
+            jnp.pad(new_colors[:, 0, :], pad_w),
+            jnp.pad(new_colors[:, -1, :], pad_w),
+            jnp.pad(new_colors[:, :, 0], pad_h),
+            jnp.pad(new_colors[:, :, -1], pad_h)], axis=1)
+        return dict(colors=new_colors, probs=new_probs), edges
+
+    def quality(self, state) -> float:
+        """Same global-conflict count as ``GraphColorApp.quality``."""
+        colors = np.asarray(state["colors"])
+        gh, gw = self.app.grid
+        H, W = self.H, self.W
+        full = np.zeros((gh * H, gw * W), dtype=int)
+        for p in range(self.n):
+            r, c = divmod(p, gw)
+            full[r * H:(r + 1) * H, c * W:(c + 1) * W] = colors[p]
+        return float((full == np.roll(full, 1, 0)).sum()
+                     + (full == np.roll(full, 1, 1)).sum())
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +420,8 @@ def jnp_update_block(colors, probs, halo, b, key):
 
     u = jax.random.uniform(key, (H, W, 1))
     cdf = jnp.cumsum(new_probs, axis=-1)
-    sampled = (u > cdf).sum(-1)
+    # clip: float32 cumsum can leave cdf[-1] a few ulps below 1
+    sampled = jnp.minimum((u > cdf).sum(-1), C - 1)
     new_colors = jnp.where(conflict, sampled, colors)
     return new_colors, new_probs, conflict
 

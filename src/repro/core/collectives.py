@@ -14,8 +14,6 @@ gradient path (DESIGN.md §2):
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,6 +6,8 @@ Counters mirror the paper's Inlet/Outlet instrumentation:
   touch_count            round-trip touch counter (+2 per completed round trip)
   attempted_send_count   messages pushed toward a duct
   successful_send_count  messages accepted by the duct (buffer not full)
+  dropped_send_count     messages rejected by a full duct (counted at the
+                         drop site, never derived as attempted - successful)
   laden_pull_count       pull attempts that retrieved >= 1 fresh message
   message_count          messages received
   pull_attempt_count     pull attempts
@@ -24,6 +26,7 @@ class Counters:
     touch_count: int = 0
     attempted_send_count: int = 0
     successful_send_count: int = 0
+    dropped_send_count: int = 0
     laden_pull_count: int = 0
     message_count: int = 0
     pull_attempt_count: int = 0
@@ -67,11 +70,18 @@ def walltime_latency(before: Counters, after: Counters) -> float:
 
 
 def delivery_failure_rate(before: Counters, after: Counters) -> float:
+    """Fraction of sends dropped, from the explicit drop counter.
+
+    Drops are counted at the drop site (``dropped_send_count``), not derived
+    as attempted - successful: the two sender-side counters are snapshotted
+    independently, so the derived form can go transiently negative or miss
+    drops when a window boundary falls between the increments.
+    """
     attempted = after.attempted_send_count - before.attempted_send_count
-    successful = after.successful_send_count - before.successful_send_count
+    dropped = after.dropped_send_count - before.dropped_send_count
     if attempted <= 0:
         return 0.0
-    return 1.0 - successful / attempted
+    return dropped / attempted
 
 
 def delivery_clumpiness(before: Counters, after: Counters) -> float:

@@ -1,0 +1,7 @@
+from repro.kernels.duct_exchange.ops import (  # noqa: F401
+    duct_drain,
+    duct_exchange,
+    duct_exchange_jnp,
+    duct_send,
+)
+from repro.kernels.duct_exchange.ref import duct_exchange_ref  # noqa: F401

@@ -1,0 +1,143 @@
+"""Public duct-exchange wrappers: jnp twins + backend dispatch.
+
+``duct_drain`` / ``duct_send`` are the two phases as pure-jnp functions —
+the vectorized engine calls them separately around the application step
+(drain feeds the halos the step consumes; the step's outputs feed the
+send).  ``duct_exchange`` is the fused drain→send pass: the Pallas kernel
+implements it in one VMEM-resident sweep on TPU, with the jnp composition
+as the CPU/GPU path.  All three agree slot-for-slot with
+``ref.duct_exchange_ref``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DrainResult(NamedTuple):
+    q_avail: jax.Array
+    q_touch: jax.Array
+    head: jax.Array
+    size: jax.Array
+    drained: jax.Array     # (E,) i32 messages popped
+    recv_touch: jax.Array  # (E,) i32 touch of freshest popped (0 if none)
+    pop_pos: jax.Array     # (E,) i32 ring slot of freshest popped
+
+
+class SendResult(NamedTuple):
+    q_avail: jax.Array
+    q_touch: jax.Array
+    size: jax.Array
+    accepted: jax.Array    # (E,) bool — push accepted (False = dropped)
+    push_pos: jax.Array    # (E,) i32 ring slot the push landed in
+
+
+def duct_drain(q_avail, q_touch, head, size, recv_now, recv_active,
+               *, max_pops: int, clear_popped: bool = True) -> DrainResult:
+    """Bounded FIFO drain: pop while the head message is available.
+
+    ``max_pops`` sequential pop attempts are unrolled; a pop chain stops at
+    the first slot that is empty or not yet available (head-blocking, as in
+    the event engine's ``Duct.latest``).
+
+    ``clear_popped=False`` skips resetting popped availability slots to inf
+    — a hot-loop optimization: slots outside ``[head, head+size)`` are
+    never read, so only callers comparing raw ring state (parity tests)
+    need the reset.
+    """
+    E, C = q_avail.shape
+    rows = jnp.arange(E)
+    drained = jnp.zeros(E, dtype=jnp.int32)
+    alive = recv_active
+    for i in range(max_pops):
+        avail_i = q_avail[rows, (head + i) % C]
+        can = alive & (i < size) & (avail_i <= recv_now)
+        drained = drained + can
+        alive = can
+    delivered = drained > 0
+    pop_pos = jnp.where(delivered, (head + drained - 1) % C,
+                        head).astype(jnp.int32)
+    recv_touch = jnp.where(delivered, q_touch[rows, pop_pos], 0)
+    if clear_popped:
+        off = (jnp.arange(C)[None, :] - head[:, None]) % C
+        q_avail = jnp.where(off < drained[:, None], jnp.inf, q_avail)
+    return DrainResult(q_avail, q_touch, (head + drained) % C,
+                       size - drained, drained, recv_touch, pop_pos)
+
+
+def duct_send(q_avail, q_touch, head, size,
+              send_now, send_active, send_lat, send_touch,
+              *, capacity: int) -> SendResult:
+    """Best-effort push: drop iff the buffer is full; stamp latency."""
+    E, C = q_avail.shape
+    rows = jnp.arange(E)
+    accepted = send_active & (size < capacity)
+    pos = (head + size) % C
+    # drop-mode scatter: rejected rows index out of bounds instead of
+    # gathering old values for a where()
+    safe_rows = jnp.where(accepted, rows, E)
+    q_avail = q_avail.at[safe_rows, pos].set(send_now + send_lat,
+                                             mode="drop")
+    q_touch = q_touch.at[safe_rows, pos].set(send_touch, mode="drop")
+    push_pos = jnp.where(accepted, pos, 0).astype(jnp.int32)
+    return SendResult(q_avail, q_touch, size + accepted, accepted, push_pos)
+
+
+class ExchangeResult(NamedTuple):
+    q_avail: jax.Array
+    q_touch: jax.Array
+    head: jax.Array
+    size: jax.Array
+    drained: jax.Array
+    recv_touch: jax.Array
+    pop_pos: jax.Array
+    accepted: jax.Array
+    push_pos: jax.Array
+
+
+def duct_exchange_jnp(q_avail, q_touch, head, size,
+                      recv_now, recv_active,
+                      send_now, send_active, send_lat, send_touch,
+                      *, capacity: int, max_pops: int) -> ExchangeResult:
+    """Fused drain→send as the composition of the two jnp phases."""
+    d = duct_drain(q_avail, q_touch, head, size, recv_now, recv_active,
+                   max_pops=max_pops)
+    s = duct_send(d.q_avail, d.q_touch, d.head, d.size,
+                  send_now, send_active, send_lat, send_touch,
+                  capacity=capacity)
+    return ExchangeResult(s.q_avail, s.q_touch, d.head, s.size, d.drained,
+                          d.recv_touch, d.pop_pos, s.accepted, s.push_pos)
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def duct_exchange(q_avail, q_touch, head, size,
+                  recv_now, recv_active,
+                  send_now, send_active, send_lat, send_touch,
+                  *, capacity: int, max_pops: int,
+                  use_pallas: bool = None,
+                  interpret=None) -> ExchangeResult:
+    """Backend dispatch: Pallas kernel on TPU, jnp twin elsewhere.
+
+    ``use_pallas=True`` forces the kernel (with ``interpret`` controlling
+    the Pallas interpreter, for CPU parity tests).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return duct_exchange_jnp(
+            q_avail, q_touch, head, size, recv_now, recv_active,
+            send_now, send_active, send_lat, send_touch,
+            capacity=capacity, max_pops=max_pops)
+    from repro.kernels.duct_exchange.kernel import duct_exchange_kernel
+    return ExchangeResult(*duct_exchange_kernel(
+        q_avail, q_touch, head, size, recv_now, recv_active,
+        send_now, send_active, send_lat, send_touch,
+        capacity=capacity, max_pops=max_pops,
+        interpret=_auto_interpret(interpret)))

@@ -1,0 +1,73 @@
+"""Pure-numpy oracle for the fused best-effort duct exchange.
+
+One lockstep window of duct traffic over a batch of directed edges, each
+with a bounded ring buffer of in-flight messages (DESIGN.md §7):
+
+  drain   the receiver pops FIFO messages whose availability time has
+          passed — at most ``max_pops`` per window, and never past a
+          not-yet-available head (Conduit's MPI_Testsome semantics)
+  send    the sender then attempts one push; a full buffer means the
+          message is DROPPED (best-effort, no retry); accepted messages
+          are stamped ``send_now + send_lat`` (latency-delayed availability)
+
+Payloads ride outside the op: callers move them with the returned
+``pop_pos`` / ``push_pos`` ring indices, so one oracle covers scalar colors
+and halo rows alike.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class ExchangeResult(NamedTuple):
+    q_avail: np.ndarray     # (E, C) availability times (inf = empty slot)
+    q_touch: np.ndarray     # (E, C) touch stamps
+    head: np.ndarray        # (E,)   FIFO head slot
+    size: np.ndarray        # (E,)   occupancy
+    drained: np.ndarray     # (E,)   messages popped this window
+    recv_touch: np.ndarray  # (E,)   touch of the freshest popped (0 if none)
+    pop_pos: np.ndarray     # (E,)   ring slot of the freshest popped
+    accepted: np.ndarray    # (E,)   bool: push accepted (not dropped)
+    push_pos: np.ndarray    # (E,)   ring slot the push landed in
+
+
+def duct_exchange_ref(q_avail, q_touch, head, size,
+                      recv_now, recv_active,
+                      send_now, send_active, send_lat, send_touch,
+                      *, capacity: int, max_pops: int) -> ExchangeResult:
+    q_avail = np.array(q_avail, dtype=np.float32, copy=True)
+    q_touch = np.array(q_touch, dtype=np.int32, copy=True)
+    head = np.array(head, dtype=np.int32, copy=True)
+    size = np.array(size, dtype=np.int32, copy=True)
+    E, C = q_avail.shape
+    drained = np.zeros(E, dtype=np.int32)
+    recv_touch = np.zeros(E, dtype=np.int32)
+    pop_pos = np.array(head, copy=True)
+    accepted = np.zeros(E, dtype=bool)
+    push_pos = np.zeros(E, dtype=np.int32)
+
+    for e in range(E):
+        # -- drain: FIFO pops, head-blocking, bounded per window ------------
+        if recv_active[e]:
+            while (drained[e] < min(size[e], max_pops)
+                   and q_avail[e, (head[e] + drained[e]) % C] <= recv_now[e]):
+                pos = (head[e] + drained[e]) % C
+                recv_touch[e] = q_touch[e, pos]
+                pop_pos[e] = pos
+                q_avail[e, pos] = np.inf
+                drained[e] += 1
+            head[e] = (head[e] + drained[e]) % C
+            size[e] -= drained[e]
+        # -- send attempt: drop iff the buffer is full ----------------------
+        if send_active[e]:
+            if size[e] < capacity:
+                pos = (head[e] + size[e]) % C
+                q_avail[e, pos] = send_now[e] + send_lat[e]
+                q_touch[e, pos] = send_touch[e]
+                push_pos[e] = pos
+                size[e] += 1
+                accepted[e] = True
+    return ExchangeResult(q_avail, q_touch, head, size, drained,
+                          recv_touch, pop_pos, accepted, push_pos)

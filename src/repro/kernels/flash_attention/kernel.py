@@ -8,7 +8,6 @@ key blocks of one query block.  Block shapes are MXU-aligned (multiples of
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
 from repro.core.modes import AsyncMode
@@ -44,7 +44,9 @@ _COLL_RE = re.compile(
     r"=\s*(\([^)]*\)|\S+)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start|-done)?\(")
-_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|f8e4m3|f8e5m2)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64"
+    r"|f8e4m3|f8e5m2)\[([0-9,]*)\]")
 
 
 def _shape_bytes(segment: str) -> int:

@@ -3,7 +3,6 @@ model axis, with automatic replication fallback on indivisible dims.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

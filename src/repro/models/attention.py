@@ -124,8 +124,10 @@ def attention_decode(params, x, cache, cfg, write_idx):
     S = cache["k"].shape[1]
     positions = jnp.full((B, 1), write_idx, dtype=jnp.int32)
     q, k_new, v_new = _project_qkv(params, x, cfg, positions)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), write_idx, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), write_idx, axis=1)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), write_idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), write_idx, axis=1)
     k = constrain(k, "dp", "sp", None, None)
     v = constrain(v, "dp", "sp", None, None)
 

@@ -26,7 +26,8 @@ def init_moe(key, cfg, dtype):
         "router": layers.dense_init(ks[0], d, E, jnp.float32, scale),
         "gate": (jax.random.truncated_normal(ks[1], -2, 2, (E, d, ff)) * scale).astype(dtype),
         "up": (jax.random.truncated_normal(ks[2], -2, 2, (E, d, ff)) * scale).astype(dtype),
-        "down": (jax.random.truncated_normal(ks[3], -2, 2, (E, ff, d)) * (ff ** -0.5)).astype(dtype),
+        "down": (jax.random.truncated_normal(ks[3], -2, 2, (E, ff, d))
+                 * (ff ** -0.5)).astype(dtype),
     }
     if cfg.num_shared_experts > 0:
         p["shared"] = layers.init_mlp(ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, dtype)

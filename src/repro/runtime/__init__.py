@@ -1,3 +1,4 @@
 from repro.runtime import channels, faults, simulator, topologies  # noqa: F401
+from repro.runtime.engine import ENGINES, Engine, make_engine  # noqa: F401
 from repro.runtime.simulator import SimConfig, Simulator, SimResult  # noqa: F401
 from repro.runtime.topologies import Topology, make_topology  # noqa: F401

@@ -41,6 +41,7 @@ class Duct:
     def try_send(self, payload, now: float, touch: int) -> bool:
         self.inlet.attempted_send_count += 1
         if len(self.queue) >= self.capacity:
+            self.inlet.dropped_send_count += 1
             return False  # best-effort: drop, no retry
         self.inlet.successful_send_count += 1
         lat = self.latency_fn(now)

@@ -1,0 +1,88 @@
+"""Engine protocol + registry: one contract, two simulation backends.
+
+Every backend consumes the same inputs (an application exposing
+``n_processes`` / ``topology()`` / fragments or a batched step, a
+:class:`~repro.runtime.simulator.SimConfig`, an optional
+:class:`~repro.runtime.faults.FaultModel`) and produces the same
+:class:`~repro.runtime.simulator.SimResult`, so experiment families,
+benchmarks, and tests are backend-agnostic.
+
+Registered backends:
+
+  event   ``runtime/simulator.py`` — discrete-event heap loop; exact event
+          ordering, the reference semantics (DESIGN.md §1)
+  jax     ``runtime/engine_jax.py`` — vectorized windowed-time engine; the
+          whole population advances per lockstep window as flat JAX arrays,
+          with ``jax.vmap`` over seeds for multi-replicate sweeps
+          (DESIGN.md §7)
+
+The jax backend additionally offers ``run_replicates(seeds)``; engines that
+lack a native batched form fall back to sequential runs via
+:func:`run_replicates`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
+
+from repro.runtime.faults import FaultModel
+from repro.runtime.simulator import SimConfig, SimResult, Simulator
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What every simulation backend must provide."""
+
+    name: str
+
+    def run(self) -> SimResult:
+        """Execute the configured run and return the QoS result."""
+        ...
+
+
+def _make_event(app, cfg: SimConfig, faults: Optional[FaultModel]) -> Engine:
+    return Simulator(app, cfg, faults)
+
+
+def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel]) -> Engine:
+    from repro.runtime.engine_jax import JaxEngine  # deferred: heavy import
+    return JaxEngine(app, cfg, faults)
+
+
+ENGINES = {
+    "event": _make_event,
+    "jax": _make_jax,
+}
+
+
+def make_engine(name: str, app, cfg: SimConfig,
+                faults: Optional[FaultModel] = None) -> Engine:
+    """Build a registered engine by name."""
+    try:
+        factory = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; choose from {sorted(ENGINES)}")
+    return factory(app, cfg, faults)
+
+
+def run_replicates(engine_name: str, make_app, cfg: SimConfig,
+                   seeds: Sequence[int],
+                   faults: Optional[FaultModel] = None) -> List[SimResult]:
+    """Run one replicate per seed, batched where the backend supports it.
+
+    ``make_app(seed)`` builds a fresh application per replicate.  Backends
+    exposing a native ``run_replicates`` (the jax engine: one vmapped scan)
+    get all seeds at once; others loop.  ``cfg.seed`` is overridden by
+    each replicate's seed.
+    """
+    import dataclasses
+    eng = make_engine(engine_name, make_app(int(seeds[0])),
+                      dataclasses.replace(cfg, seed=int(seeds[0])), faults)
+    if hasattr(eng, "run_replicates"):
+        return eng.run_replicates([int(s) for s in seeds])
+    out = [eng.run()]
+    for s in seeds[1:]:
+        eng = make_engine(engine_name, make_app(int(s)),
+                          dataclasses.replace(cfg, seed=int(s)), faults)
+        out.append(eng.run())
+    return out

@@ -1,0 +1,450 @@
+"""Vectorized windowed-time best-effort engine (DESIGN.md §7).
+
+The discrete-event engine (``runtime/simulator.py``) processes one event at
+a time from a heap — exact, but serial.  This engine advances the *entire
+process population per lockstep window* as flat JAX arrays: window k is
+every process's k-th simstep, executed at per-process virtual times that
+drift apart exactly as the paper describes (jitter, stalls, faults,
+barriers).  Per window it performs
+
+  1. edge-parallel duct drain   (kernels/duct_exchange: bounded FIFO rings,
+                                 latency-delayed availability)
+  2. halo scatter + the application's *actual* batched compute
+  3. edge-parallel send attempt (capacity drop, latency stamp)
+  4. incremental QoS counter updates + O(1) snapshot scatter
+
+All stochastic draws are counter-based splitmix-style hashes evaluated
+in-graph, so a run is a pure function of ``(config, seed)`` and
+``jax.vmap`` over the seed axis dispatches a whole replicate sweep in one
+scan (``run_replicates``).
+
+Where it diverges from the event engine — and why that is acceptable for
+median/p95 QoS — is documented in DESIGN.md §7.  Parity on small configs is
+enforced by ``tests/test_engine_jax.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modes import AsyncMode
+from repro.core.qos import Counters, QosReport, report
+from repro.kernels.duct_exchange.ops import duct_drain, duct_send
+from repro.runtime.faults import FaultModel
+from repro.runtime.simulator import SimConfig, SimResult
+from repro.runtime.topologies import OPP_IDX, Topology, halo_slot_map
+
+_BARRIER_MODES = (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
+                  AsyncMode.FIXED_BARRIER)
+
+# ---------------------------------------------------------------------------
+# Counter-based RNG: splitmix-style 32-bit finalizer chains, pure functions
+# of their integer keys — the in-graph twin of runtime/faults.py's
+# splitmix64 streams (same distributions, different bit streams).
+# ---------------------------------------------------------------------------
+_GOLDEN = np.uint32(0x9E3779B9)
+
+# stream tags keep independent draws independent
+STREAM_STEP, STREAM_STALL, STREAM_LAT, STREAM_APP, STREAM_MUT = 1, 2, 3, 4, 5
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """32-bit splitmix-style finalizer (lowbias32 constants)."""
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    return x ^ (x >> np.uint32(16))
+
+
+def hash_u32(*keys) -> jax.Array:
+    """Combine integer keys (arrays broadcast) into one hashed uint32."""
+    h = _GOLDEN
+    for k in keys:
+        k = jnp.asarray(k).astype(jnp.uint32)
+        h = _mix32(h ^ (k + _GOLDEN + (h << np.uint32(6)) +
+                        (h >> np.uint32(2))))
+    return h
+
+
+def hash_uniform(*keys) -> jax.Array:
+    """Deterministic uniform in (0, 1) from integer keys."""
+    h = hash_u32(*keys)
+    return ((h >> np.uint32(8)).astype(jnp.float32) + 0.5) * np.float32(
+        1.0 / (1 << 24))
+
+
+def hash_normal(*keys) -> jax.Array:
+    u1 = hash_uniform(*keys, 101)
+    u2 = hash_uniform(*keys, 202)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * np.pi * u2)
+
+
+def lognormal_factor(sigma: float, *keys) -> jax.Array:
+    """Mean-one lognormal, matching faults.Jitter's parameterization."""
+    if sigma <= 0:
+        return jnp.ones(jnp.broadcast_shapes(
+            *(jnp.shape(k) for k in keys)), jnp.float32)
+    z = hash_normal(*keys)
+    return jnp.exp(np.float32(-0.5 * sigma * sigma) + np.float32(sigma) * z)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+class JaxEngine:
+    """Windowed-time engine over flat arrays; ``Engine`` protocol member.
+
+    Requires an application with an injected
+    :class:`~repro.runtime.topologies.Topology` and a ``batched()`` entry
+    point (``apps/graphcolor.py`` / ``apps/evo.py``) whose step runs the
+    real fragment compute vectorized over the whole population.
+    """
+
+    name = "jax"
+
+    def __init__(self, app, cfg: SimConfig,
+                 faults: Optional[FaultModel] = None,
+                 *, max_pops: int = 16, chunk: int = 256):
+        self.app = app
+        self.cfg = cfg
+        self.faults = faults or FaultModel()
+        self.max_pops = max_pops
+        self.chunk = chunk
+        topo = getattr(app, "injected", None)
+        if not isinstance(topo, Topology):
+            raise ValueError(
+                "JaxEngine needs an app built with an injected "
+                "runtime.topologies.Topology (experiments always inject one)")
+        self.topo = topo
+        self.n = n = app.n_processes
+        self.bapp = app.batched()
+
+        # --- static edge plumbing (numpy, hoisted out of the scan) --------
+        esrc, edst, slot = [], [], []
+        index = {}
+        for src in range(n):
+            for dst in topo.neighbors[src]:
+                index[(src, dst)] = len(esrc)
+                esrc.append(src)
+                edst.append(dst)
+        slot_maps = [halo_slot_map(topo.neighbors[p]) for p in range(n)]
+        slot = [slot_maps[d][s] for s, d in zip(esrc, edst)]
+        rev = [index[(d, s)] for s, d in zip(esrc, edst)]
+        self.E = E = len(esrc)
+        self._esrc = jnp.asarray(esrc, jnp.int32)
+        self._edst = jnp.asarray(edst, jnp.int32)
+        self._slot = jnp.asarray(slot, jnp.int32)
+        # flattened (dst, slot) key: several in-edges may share one halo
+        # slot; delivery ties are broken by highest edge index (segment_max)
+        # so the scatter is deterministic on every backend
+        self._halo_key = jnp.asarray(
+            [d * 4 + s for d, s in zip(edst, slot)], jnp.int32)
+        self._out_slot = jnp.asarray([OPP_IDX[s] for s in slot], jnp.int32)
+        self._rev = jnp.asarray(rev, jnp.int32)
+        self._eids = jnp.arange(E, dtype=jnp.int32)
+        self._pids = jnp.arange(n, dtype=jnp.int32)
+
+        lat = np.empty(E, np.float32)
+        for e, (s, d) in enumerate(zip(esrc, edst)):
+            base = cfg.base_latency
+            if cfg.intra_node_latency is not None and topo.same_node(s, d):
+                base = cfg.intra_node_latency
+            lat[e] = base * self.faults.link_factor(s, d)
+        self._lat_base = jnp.asarray(lat)
+        self._deg = jnp.asarray([topo.degree(p) for p in range(n)], jnp.int32)
+        self._cfactor = jnp.asarray(
+            [self.faults.compute_factor(p) for p in range(n)], jnp.float32)
+
+        warmup, interval = cfg.snapshot_warmup, cfg.snapshot_interval
+        self.S = max(1, int((cfg.duration - warmup) / interval) + 3)
+        base_total = cfg.base_compute + cfg.work_units * cfg.work_unit_cost
+        # generous lockstep-window budget: fastest plausible step is about
+        # half the mean, plus slack for barrier-arrival idling
+        self._max_windows = int(8 * cfg.duration / base_total) + 2048
+        self._runner = None
+
+    # ------------------------------------------------------------------
+    def _barrier_cost(self) -> float:
+        if self.n <= 1:
+            return 0.0
+        return self.cfg.barrier_base + self.cfg.barrier_per_log2 * math.log2(
+            self.n)
+
+    def _step_factor(self, seed, steps):
+        cfg = self.cfg
+        f = lognormal_factor(cfg.jitter_sigma, seed, STREAM_STEP,
+                             self._pids, steps)
+        if cfg.stall_prob > 0:
+            u = hash_uniform(seed, STREAM_STALL, self._pids, steps)
+            f = jnp.where(u < cfg.stall_prob,
+                          f * np.float32(cfg.stall_factor), f)
+        return f * self._cfactor
+
+    # ------------------------------------------------------------------
+    def _init_carry(self, seed: int) -> Dict[str, jax.Array]:
+        cfg, n, E = self.cfg, self.n, self.E
+        bapp = self.bapp
+        L = bapp.payload_len
+        base_total = np.float32(
+            cfg.base_compute + cfg.work_units * cfg.work_unit_cost)
+        seed_arr = jnp.asarray(seed, jnp.int32)
+        t0 = base_total * self._step_factor(
+            seed_arr, jnp.zeros(n, jnp.int32))
+        state, halo = bapp.init(seed)
+        return dict(
+            seed=seed_arr,
+            k=jnp.asarray(0, jnp.int32),
+            t=t0,
+            steps=jnp.zeros(n, jnp.int32),
+            done=jnp.zeros(n, bool),
+            waiting=jnp.zeros(n, bool),
+            barrier_seq=jnp.zeros(n, jnp.int32),
+            last_release=jnp.zeros(n, jnp.float32),
+            pending=jnp.zeros(n, jnp.float32),
+            c_touch=jnp.zeros(n, jnp.int32),
+            c_att=jnp.zeros(n, jnp.int32),
+            c_ok=jnp.zeros(n, jnp.int32),
+            c_drop=jnp.zeros(n, jnp.int32),
+            c_laden=jnp.zeros(n, jnp.int32),
+            c_msgs=jnp.zeros(n, jnp.int32),
+            ptouch=jnp.zeros(E, jnp.int32),
+            q_avail=jnp.full((E, cfg.buffer_capacity), jnp.inf, jnp.float32),
+            q_touch=jnp.zeros((E, cfg.buffer_capacity), jnp.int32),
+            q_pay=jnp.zeros((E, cfg.buffer_capacity, L), bapp.payload_dtype),
+            q_head=jnp.zeros(E, jnp.int32),
+            q_size=jnp.zeros(E, jnp.int32),
+            halo=halo,
+            app=state,
+            snap=jnp.zeros((n, self.S, 8), jnp.float32),
+            snap_idx=jnp.zeros(n, jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    def _window_body(self, carry, _):
+        cfg, n, E = self.cfg, self.n, self.E
+        bapp = self.bapp
+        mode = cfg.mode
+        comm = mode != AsyncMode.NO_COMM
+        barriered = mode in _BARRIER_MODES
+        rows = self._eids
+        esrc, edst = self._esrc, self._edst
+        seed = carry["seed"]
+        k = carry["k"]
+        t = carry["t"]
+        done, waiting = carry["done"], carry["waiting"]
+        active = ~done & ~waiting
+        halo = carry["halo"]
+        drained_r = jnp.zeros(n, jnp.int32)
+
+        if comm:
+            # --- 1. edge-parallel drain (bounded FIFO, head-blocking) -----
+            d = duct_drain(carry["q_avail"], carry["q_touch"],
+                           carry["q_head"], carry["q_size"],
+                           t[edst], active[edst], max_pops=self.max_pops,
+                           clear_popped=False)
+            delivered = d.drained > 0
+            payload = carry["q_pay"][rows, d.pop_pos]
+            # halo update: per (dst, slot) the highest delivering edge index
+            # wins — a deterministic stand-in for "last fresh message wins"
+            # (plain duplicate-index scatter order is unspecified in JAX)
+            winner = jax.ops.segment_max(
+                jnp.where(delivered, rows, -1), self._halo_key,
+                num_segments=n * 4)
+            has_win = winner >= 0
+            fresh = payload[jnp.where(has_win, winner, 0)]
+            L = halo.shape[-1]
+            halo = jnp.where(has_win[:, None], fresh,
+                             halo.reshape(n * 4, L)).reshape(n, 4, L)
+            new_touch = d.recv_touch + 1
+            dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+            ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+            # one multi-column segment sum for all receiver-side counters
+            recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
+                                   dtouch], axis=1)
+            recv_sums = jax.ops.segment_sum(recv_cols, edst, num_segments=n)
+            drained_r = recv_sums[:, 0]
+            c_msgs = carry["c_msgs"] + drained_r
+            c_laden = carry["c_laden"] + recv_sums[:, 1]
+            c_touch = carry["c_touch"] + recv_sums[:, 2]
+            q_avail, q_touch = d.q_avail, d.q_touch
+            q_head, q_size = d.head, d.size
+        else:
+            ptouch = carry["ptouch"]
+            c_touch, c_laden, c_msgs = (carry["c_touch"], carry["c_laden"],
+                                        carry["c_msgs"])
+            q_avail, q_touch = carry["q_avail"], carry["q_touch"]
+            q_head, q_size = carry["q_head"], carry["q_size"]
+
+        # --- 2. the application's actual batched compute ------------------
+        new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
+                                         seed)
+        app_state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                active.reshape((n,) + (1,) * (new.ndim - 1)), new, old),
+            new_state, carry["app"])
+        steps = carry["steps"] + active
+
+        if comm:
+            # --- 3. edge-parallel send attempt (drop iff full) ------------
+            out_pay = edges_out[esrc, self._out_slot]
+            lat = self._lat_base * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, rows, k)
+            s = duct_send(q_avail, q_touch, q_head, q_size,
+                          t[esrc], active[esrc], lat, ptouch[self._rev],
+                          capacity=cfg.buffer_capacity)
+            q_pay = carry["q_pay"].at[
+                jnp.where(s.accepted, rows, E), s.push_pos].set(
+                out_pay, mode="drop")
+            q_avail, q_touch, q_size = s.q_avail, s.q_touch, s.size
+            attempted = active[esrc]
+            send_cols = jnp.stack([
+                attempted.astype(jnp.int32), s.accepted.astype(jnp.int32),
+                (attempted & ~s.accepted).astype(jnp.int32)], axis=1)
+            send_sums = jax.ops.segment_sum(send_cols, esrc, num_segments=n,
+                                            indices_are_sorted=True)
+            c_att = carry["c_att"] + send_sums[:, 0]
+            c_ok = carry["c_ok"] + send_sums[:, 1]
+            c_drop = carry["c_drop"] + send_sums[:, 2]
+        else:
+            q_pay = carry["q_pay"]
+            c_att, c_ok, c_drop = carry["c_att"], carry["c_ok"], carry["c_drop"]
+
+        # --- 4. incremental QoS counters + snapshot scatter ---------------
+        pending = (drained_r.astype(jnp.float32) * np.float32(
+            cfg.per_message_cost) +
+            self._deg.astype(jnp.float32) * np.float32(cfg.per_pull_cost))
+        snap_idx = carry["snap_idx"]
+        thr = (np.float32(cfg.snapshot_warmup) +
+               snap_idx.astype(jnp.float32) * np.float32(
+                   cfg.snapshot_interval))
+        snap_due = active & (t >= thr) & (snap_idx < self.S)
+        row = jnp.stack([
+            steps.astype(jnp.float32), c_touch.astype(jnp.float32),
+            c_att.astype(jnp.float32), c_ok.astype(jnp.float32),
+            c_drop.astype(jnp.float32), c_laden.astype(jnp.float32),
+            c_msgs.astype(jnp.float32), t], axis=1)
+        snap = carry["snap"].at[jnp.where(snap_due, self._pids, n),
+                                snap_idx].set(row, mode="drop")
+        snap_idx = snap_idx + snap_due
+
+        # --- termination / barriers / time advance ------------------------
+        newly_done = active & (t >= np.float32(cfg.duration))
+        done = done | newly_done
+        d_next = (np.float32(cfg.base_compute + cfg.work_units *
+                             cfg.work_unit_cost) *
+                  self._step_factor(seed, steps))
+        barrier_seq = carry["barrier_seq"]
+        last_release = carry["last_release"]
+        pending_saved = carry["pending"]
+
+        if barriered:
+            if mode == AsyncMode.BARRIER_EVERY_STEP:
+                due = active & ~newly_done
+            elif mode == AsyncMode.ROLLING_BARRIER:
+                due = active & ~newly_done & (
+                    (t - last_release) >= np.float32(cfg.rolling_quantum))
+            else:
+                due = active & ~newly_done & (
+                    t >= (barrier_seq + 1).astype(jnp.float32) *
+                    np.float32(cfg.fixed_interval))
+            waiting = waiting | due
+            pending_saved = jnp.where(due, pending, pending_saved)
+            t = jnp.where(active & ~newly_done & ~due,
+                          t + d_next + pending, t)
+            release_ready = jnp.all(waiting | done) & jnp.any(waiting)
+            release_t = (jnp.max(jnp.where(waiting, t, -jnp.inf)) +
+                         np.float32(self._barrier_cost()))
+            rel = release_ready & waiting
+            t = jnp.where(rel, release_t + d_next + pending_saved, t)
+            last_release = jnp.where(rel, release_t, last_release)
+            barrier_seq = barrier_seq + rel
+            waiting = waiting & ~release_ready
+        else:
+            t = jnp.where(active & ~newly_done, t + d_next + pending, t)
+
+        carry = dict(
+            seed=seed, k=k + 1, t=t, steps=steps, done=done, waiting=waiting,
+            barrier_seq=barrier_seq, last_release=last_release,
+            pending=pending_saved,
+            c_touch=c_touch, c_att=c_att, c_ok=c_ok, c_drop=c_drop,
+            c_laden=c_laden, c_msgs=c_msgs, ptouch=ptouch,
+            q_avail=q_avail, q_touch=q_touch, q_pay=q_pay,
+            q_head=q_head, q_size=q_size,
+            halo=halo, app=app_state, snap=snap, snap_idx=snap_idx)
+        return carry, None
+
+    # ------------------------------------------------------------------
+    def _get_runner(self):
+        if self._runner is None:
+            def chunk(carry):
+                carry, _ = jax.lax.scan(self._window_body, carry, None,
+                                        length=self.chunk)
+                return carry
+            # donation lets XLA reuse the ring/state buffers across chunks
+            self._runner = jax.jit(jax.vmap(chunk), donate_argnums=0)
+        return self._runner
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        return self.run_replicates([self.cfg.seed])[0]
+
+    def run_replicates(self, seeds: Sequence[int]) -> List[SimResult]:
+        """One replicate per seed, dispatched as a single vmapped scan."""
+        carries = [self._init_carry(int(s)) for s in seeds]
+        carry = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *carries)
+        runner = self._get_runner()
+        windows = 0
+        while windows < self._max_windows:
+            carry = runner(carry)
+            windows += self.chunk
+            if bool(jnp.all(carry["done"])):
+                break
+        carry = jax.device_get(carry)
+        return [self._assemble(carry, r) for r in range(len(seeds))]
+
+    # ------------------------------------------------------------------
+    def _assemble(self, carry, r: int) -> SimResult:
+        cfg, n = self.cfg, self.n
+        comm = cfg.mode != AsyncMode.NO_COMM
+        deg = np.asarray(self._deg)
+        snap = np.asarray(carry["snap"][r])
+        snap_idx = np.asarray(carry["snap_idx"][r])
+        steps = np.asarray(carry["steps"][r])
+
+        def counters(p, row):
+            up = int(row[0])
+            return Counters(
+                update_count=up,
+                touch_count=int(row[1]),
+                attempted_send_count=int(row[2]),
+                successful_send_count=int(row[3]),
+                dropped_send_count=int(row[4]),
+                laden_pull_count=int(row[5]),
+                message_count=int(row[6]),
+                pull_attempt_count=up * int(deg[p]) if comm else 0,
+                wall_time=float(row[7]),
+            )
+
+        qos_by_proc: Dict[int, List[QosReport]] = {}
+        all_qos: List[QosReport] = []
+        for p in range(n):
+            rows = snap[p, :snap_idx[p]]
+            cs = [counters(p, row) for row in rows]
+            reps = [report(c0, c1) for c0, c1 in zip(cs, cs[1:])]
+            qos_by_proc[p] = reps
+            all_qos.extend(reps)
+
+        app_state = jax.tree_util.tree_map(lambda x: x[r], carry["app"])
+        return SimResult(
+            updates=[int(u) for u in steps],
+            horizon=cfg.duration,
+            quality=self.bapp.quality(app_state),
+            qos=all_qos,
+            qos_by_process=qos_by_proc,
+            dropped=int(np.sum(carry["c_drop"][r])),
+            sent=int(np.sum(carry["c_att"][r])),
+        )

@@ -15,10 +15,15 @@ Every family reports per-process QoS *distributions* — median + tail
 percentiles over (process, window) samples — because under best-effort
 communication the distribution, not a scalar, is the result.
 
+Every family runs on either simulation backend (``--engine event`` — the
+discrete-event reference, or ``--engine jax`` — the vectorized windowed-time
+engine, DESIGN.md §7); ``--replicates R`` sweeps R seeds, dispatched as one
+vmapped scan on the jax engine.
+
 CLI::
 
     PYTHONPATH=src python -m repro.runtime.experiments \
-        --topology torus --procs 64 256
+        --topology torus --procs 64 256 --engine jax
 
 runs weak scaling on a torus at 64 and 256 processes; ``--family all``
 runs every family.  See EXPERIMENTS.md for the full matrix.
@@ -32,8 +37,9 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.modes import AsyncMode
 from repro.core.qos import METRICS, aggregate_reports
+from repro.runtime.engine import ENGINES, make_engine, run_replicates
 from repro.runtime.faults import faulty_host
-from repro.runtime.simulator import SimConfig, Simulator
+from repro.runtime.simulator import SimConfig
 from repro.runtime.topologies import TOPOLOGIES, Topology, make_topology
 
 PERCENTILES = (50, 95)
@@ -102,14 +108,15 @@ def run_modes(args) -> List[dict]:
     n = args.procs[0]
     topo = _topology_for(args, n)
     print(f"[modes] app={args.app} topology={topo.name} n={n} "
-          f"simels={args.simels}")
+          f"simels={args.simels} engine={args.engine}")
     rows = []
     for mode in AsyncMode:
         app = make_app(args.app, n, args.simels, topo, args.seed)
-        res = Simulator(app, _sim_config(args, n, mode=mode)).run()
+        res = make_engine(args.engine, app,
+                          _sim_config(args, n, mode=mode)).run()
         dist = _distributions(res)
         row = dict(family="modes", mode=int(mode), n=n,
-                   topology=topo.name,
+                   topology=topo.name, engine=args.engine,
                    rate_per_cpu=res.update_rate_per_cpu,
                    quality=res.quality,
                    delivery_failure_rate=res.delivery_failure_rate,
@@ -123,20 +130,28 @@ def run_modes(args) -> List[dict]:
 
 def run_weak_scaling(args) -> List[dict]:
     print(f"[weak_scaling] app={args.app} topology={args.topology} "
-          f"simels={args.simels} duration={args.duration}s")
+          f"simels={args.simels} duration={args.duration}s "
+          f"engine={args.engine} replicates={args.replicates}")
     rows = []
     for n in args.procs:
         topo = _topology_for(args, n)
-        app = make_app(args.app, n, args.simels, topo, args.seed)
+        cfg = _sim_config(args, n)
         t0 = time.perf_counter()
-        res = Simulator(app, _sim_config(args, n)).run()
+        results = run_replicates(
+            args.engine,
+            lambda s: make_app(args.app, n, args.simels, topo, s),
+            cfg, seeds=[args.seed + r for r in range(args.replicates)])
         wall = time.perf_counter() - t0
-        dist = _distributions(res)
+        # QoS distribution pools (process, window) samples over replicates
+        all_qos = [q for res in results for q in res.qos]
+        dist = aggregate_reports(all_qos, percentiles=PERCENTILES)
+        rate = sum(r.update_rate_per_cpu for r in results) / len(results)
+        updates = sum(sum(r.updates) for r in results)
         rows.append(dict(family="weak_scaling", n=n, topology=topo.name,
-                         simels=args.simels,
-                         rate_per_cpu=res.update_rate_per_cpu,
+                         simels=args.simels, engine=args.engine,
+                         replicates=args.replicates, rate_per_cpu=rate,
                          wall_seconds=wall, qos=dist))
-        print(f"  n={n:<5} ({topo.name}, {sum(res.updates)} updates "
+        print(f"  n={n:<5} ({topo.name}, {updates} updates "
               f"in {wall:.1f}s wall)")
         _print_distributions(dist)
     return rows
@@ -147,17 +162,18 @@ def run_intensivity(args) -> List[dict]:
     topo = _topology_for(args, n)
     sweep = args.intensivity_simels
     print(f"[intensivity] app={args.app} topology={topo.name} n={n} "
-          f"simels sweep={sweep}")
+          f"simels sweep={sweep} engine={args.engine}")
     rows = []
     for simels in sweep:
         # heavier blocks cost more virtual compute per update (2048 simels
         # ~ 200us, matching the benchmark parameterization)
         base = args.base_compute * (1 + simels / 160)
         app = make_app(args.app, n, simels, topo, args.seed)
-        res = Simulator(app, _sim_config(args, n, base_compute=base)).run()
+        res = make_engine(args.engine, app,
+                          _sim_config(args, n, base_compute=base)).run()
         dist = _distributions(res)
         rows.append(dict(family="intensivity", n=n, simels=simels,
-                         topology=topo.name,
+                         topology=topo.name, engine=args.engine,
                          rate_per_cpu=res.update_rate_per_cpu, qos=dist))
         print(f"  simels/process={simels}")
         _print_distributions(dist)
@@ -173,7 +189,8 @@ def run_faults(args) -> List[dict]:
     for p in victims:
         clique.update(topo.clique_of(p))
     print(f"[faults] app={args.app} topology={topo.name} n={n} "
-          f"faulty host={host} ({len(victims)} procs, clique of {len(clique)})")
+          f"faulty host={host} ({len(victims)} procs, clique of "
+          f"{len(clique)}) engine={args.engine}")
 
     rows = []
     for label, faults in (("without_fault", None),
@@ -181,7 +198,8 @@ def run_faults(args) -> List[dict]:
                                                      args.fault_compute,
                                                      args.fault_link))):
         app = make_app(args.app, n, args.simels, topo, args.seed)
-        res = Simulator(app, _sim_config(args, n), faults).run()
+        res = make_engine(args.engine, app, _sim_config(args, n),
+                          faults).run()
         groups = {
             "global": res.qos,
             "clique": [q for p in clique for q in res.qos_by_process[p]],
@@ -189,7 +207,7 @@ def run_faults(args) -> List[dict]:
                      for q in res.qos_by_process[p]],
         }
         row = dict(family="faults", label=label, n=n, topology=topo.name,
-                   faulty_host=host,
+                   faulty_host=host, engine=args.engine,
                    qos={g: aggregate_reports(reps, PERCENTILES)
                         for g, reps in groups.items()})
         rows.append(row)
@@ -216,6 +234,12 @@ def build_parser() -> argparse.ArgumentParser:
                     "discrete-event best-effort runtime.")
     p.add_argument("--family", default="weak_scaling",
                    choices=[*FAMILIES, "all"])
+    p.add_argument("--engine", default="event", choices=sorted(ENGINES),
+                   help="simulation backend: event (discrete-event "
+                        "reference) or jax (vectorized windowed-time)")
+    p.add_argument("--replicates", type=int, default=1,
+                   help="seeds per weak-scaling point (one vmapped "
+                        "dispatch on --engine jax)")
     p.add_argument("--topology", default="torus", choices=sorted(TOPOLOGIES))
     p.add_argument("--procs", type=int, nargs="+", default=[64, 256],
                    help="process counts (weak_scaling sweeps them; other "

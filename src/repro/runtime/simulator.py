@@ -83,7 +83,13 @@ class Simulator:
     ``app.topology()`` may return either a plain ``{pid: [neighbors]}`` dict
     or a :class:`repro.runtime.topologies.Topology`; the latter enables the
     hierarchical link model and host-level fault injection.
+
+    Implements the :class:`repro.runtime.engine.Engine` protocol (the
+    reference event-ordered backend; ``runtime/engine_jax.py`` is the
+    vectorized one).
     """
+
+    name = "event"
 
     def __init__(self, app, cfg: SimConfig, faults: Optional[FaultModel] = None):
         self.app = app
@@ -120,6 +126,7 @@ class Simulator:
         self._c_touch = [0] * n
         self._c_att = [0] * n
         self._c_ok = [0] * n
+        self._c_drop = [0] * n
         self._c_laden = [0] * n
         self._c_msgs = [0] * n
 
@@ -182,6 +189,7 @@ class Simulator:
             touch_count=self._c_touch[pid],
             attempted_send_count=self._c_att[pid],
             successful_send_count=self._c_ok[pid],
+            dropped_send_count=self._c_drop[pid],
             laden_pull_count=self._c_laden[pid],
             message_count=self._c_msgs[pid],
             pull_attempt_count=(self._steps[pid] * self._deg[pid]
@@ -216,7 +224,7 @@ class Simulator:
         steps = self._steps
         done = self._done
         c_touch, c_att, c_ok = self._c_touch, self._c_att, self._c_ok
-        c_laden, c_msgs = self._c_laden, self._c_msgs
+        c_drop, c_laden, c_msgs = self._c_drop, self._c_laden, self._c_msgs
         touch = self._touch
         in_ducts = self._in_ducts
         ducts = self.ducts
@@ -268,11 +276,15 @@ class Simulator:
 
             if comm and outputs:
                 n_ok = 0
+                n_drop = 0
                 for nb, payload in outputs.items():
                     if ducts[(pid, nb)].try_send(payload, t, ptouch[nb]):
                         n_ok += 1
+                    else:
+                        n_drop += 1  # counted at the drop site, not derived
                 c_att[pid] += len(outputs)
                 c_ok[pid] += n_ok
+                c_drop[pid] += n_drop
 
             pending = n_msgs * per_msg_cost + pull_costs[pid]
 
@@ -310,14 +322,13 @@ class Simulator:
             all_qos.extend(reps)
 
         sent = sum(self._c_att)
-        ok = sum(self._c_ok)
         return SimResult(
             updates=updates,
             horizon=cfg.duration,
             quality=self.app.quality(self.fragments),
             qos=all_qos,
             qos_by_process=qos_by_proc,
-            dropped=sent - ok,
+            dropped=sum(self._c_drop),
             sent=sent,
         )
 

@@ -27,6 +27,25 @@ from typing import Dict, List, Sequence, Tuple
 from repro.runtime.faults import _splitmix64
 
 
+#: Halo slot order shared by the apps and the vectorized engine.
+DIRS = ("n", "s", "w", "e")
+#: Opposite-slot index (n<->s, w<->e): the edge row a sender publishes for a
+#: receiver whose halo slot for that sender is ``slot`` is ``OPP_IDX[slot]``.
+OPP_IDX = (1, 0, 3, 2)
+
+
+def halo_slot_map(neighbors) -> Dict[int, int]:
+    """Round-robin halo-slot assignment for an injected topology.
+
+    Numeric core of ``apps.graphcolor.direction_map``: sorted neighbors
+    cycle over the four halo slots, so several neighbors may share a slot
+    (last fresh message wins — best-effort staleness semantics).  Both the
+    per-fragment apps and the vectorized engine derive their slot wiring
+    from this one function.
+    """
+    return {nb: i % 4 for i, nb in enumerate(sorted(neighbors))}
+
+
 def near_square(n: int) -> Tuple[int, int]:
     """Near-square factorization of ``n`` (rows <= cols)."""
     a = int(math.sqrt(n))

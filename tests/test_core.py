@@ -40,9 +40,14 @@ def test_simstep_latency_no_touches_best_case():
 
 def test_delivery_failure_rate():
     b = _counters()
-    a = _counters(attempted_send_count=100, successful_send_count=70)
+    a = _counters(attempted_send_count=100, successful_send_count=70,
+                  dropped_send_count=30)
     assert qos.delivery_failure_rate(b, a) == pytest.approx(0.3)
     assert qos.delivery_failure_rate(b, b) == 0.0
+    # the rate comes from the explicit drop counter, never the
+    # attempted - successful derivation (which can straddle a window edge)
+    mid = _counters(attempted_send_count=100, successful_send_count=70)
+    assert qos.delivery_failure_rate(b, mid) == 0.0
 
 
 def test_clumpiness_even_stream_is_zero():

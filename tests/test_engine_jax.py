@@ -1,0 +1,217 @@
+"""Vectorized-engine tests: the parity contract with the event engine.
+
+The jax engine is a windowed-time approximation (DESIGN.md §7); these tests
+pin down what "approximation" is allowed to mean:
+
+  - the duct op agrees slot-for-slot with the numpy oracle
+    (``kernels/duct_exchange/ref.py``), including bounded-buffer drops;
+  - runs are deterministic in the seed, and vmapped replicates are
+    independent and identical to single runs;
+  - median QoS metrics on a 16-process ring agree with the event engine
+    within the documented tolerances.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.modes import AsyncMode  # noqa: E402
+from repro.core.qos import aggregate_reports  # noqa: E402
+from repro.kernels.duct_exchange import (  # noqa: E402
+    duct_exchange,
+    duct_exchange_jnp,
+    duct_exchange_ref,
+)
+from repro.runtime.engine import make_engine  # noqa: E402
+from repro.runtime.engine_jax import JaxEngine  # noqa: E402
+from repro.runtime.faults import FaultModel  # noqa: E402
+from repro.runtime.simulator import SimConfig, Simulator  # noqa: E402
+from repro.runtime.topologies import make_topology  # noqa: E402
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig  # noqa: E402
+
+# documented parity bound (DESIGN.md §7): relative tolerance on medians of
+# (process, window) QoS samples, 16-proc ring, best-effort mode
+PARITY_RTOL = {
+    "simstep_period": 0.10,
+    "simstep_latency": 0.25,
+    "walltime_latency": 0.25,
+    "delivery_failure_rate": 0.25,
+    "delivery_clumpiness": 0.30,   # most sensitive to event ordering
+}
+
+
+def _app(n, simels=1, topology="ring", seed=0):
+    topo = make_topology(topology, n)
+    return GraphColorApp(
+        GraphColorConfig(n_processes=n, nodes_per_process=simels, seed=seed),
+        topology=topo)
+
+
+def _cfg(duration=0.05, **kw):
+    base = dict(duration=duration, snapshot_warmup=duration / 6,
+                snapshot_interval=duration / 12)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Duct op parity against the numpy oracle
+# ---------------------------------------------------------------------------
+def _random_duct_state(rng, E=41, C=8, cap=6):
+    qa = np.full((E, C), np.inf, np.float32)
+    qt = np.zeros((E, C), np.int32)
+    head = rng.integers(0, C, E).astype(np.int32)
+    size = np.zeros(E, np.int32)
+    for e in range(E):
+        s = rng.integers(0, cap + 1)
+        size[e] = s
+        for j in range(s):
+            qa[e, (head[e] + j) % C] = rng.random() * 2
+            qt[e, (head[e] + j) % C] = rng.integers(0, 50)
+    return qa, qt, head, size
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_duct_exchange_matches_ref(impl):
+    rng = np.random.default_rng(7)
+    qa, qt, head, size = _random_duct_state(rng)
+    E = qa.shape[0]
+    args = (qa, qt, head, size,
+            (rng.random(E) * 2).astype(np.float32), rng.random(E) < 0.8,
+            (rng.random(E) * 2).astype(np.float32), rng.random(E) < 0.8,
+            (rng.random(E) * 0.5).astype(np.float32),
+            rng.integers(0, 50, E).astype(np.int32))
+    kw = dict(capacity=6, max_pops=4)
+    ref = duct_exchange_ref(*args, **kw)
+    if impl == "jnp":
+        out = duct_exchange_jnp(*map(jnp.asarray, args), **kw)
+    else:
+        out = duct_exchange(*map(jnp.asarray, args), **kw,
+                            use_pallas=True, interpret=True)
+    for name, a, b in zip(ref._fields, ref, out):
+        np.testing.assert_allclose(
+            np.asarray(b, dtype=np.float64), np.asarray(a, np.float64),
+            err_msg=f"{impl}: field {name}")
+
+
+def test_duct_exchange_drops_when_full():
+    """Bounded-buffer drop parity: a full ring rejects the push."""
+    C, cap = 8, 4
+    qa = np.full((1, C), np.inf, np.float32)
+    qt = np.zeros((1, C), np.int32)
+    head = np.zeros(1, np.int32)
+    for j in range(cap):
+        qa[0, j] = 100.0  # queued but unavailable for a long time
+    size = np.full(1, cap, np.int32)
+    args = (qa, qt, head, size,
+            np.zeros(1, np.float32), np.ones(1, bool),
+            np.zeros(1, np.float32), np.ones(1, bool),
+            np.full(1, 0.1, np.float32), np.zeros(1, np.int32))
+    kw = dict(capacity=cap, max_pops=4)
+    ref = duct_exchange_ref(*args, **kw)
+    out = duct_exchange_jnp(*map(jnp.asarray, args), **kw)
+    assert not bool(ref.accepted[0])
+    assert not bool(out.accepted[0])
+    assert int(out.size[0]) == cap
+    np.testing.assert_array_equal(np.asarray(out.q_avail), ref.q_avail)
+
+
+# ---------------------------------------------------------------------------
+# Engine determinism / replicates
+# ---------------------------------------------------------------------------
+def test_same_seed_determinism():
+    cfg = _cfg(0.02)
+    r1 = JaxEngine(_app(16), cfg).run()
+    r2 = JaxEngine(_app(16), cfg).run()
+    assert r1.updates == r2.updates
+    assert r1.quality == r2.quality
+    assert r1.dropped == r2.dropped and r1.sent == r2.sent
+
+
+def test_vmap_replicates_independent_and_match_single_runs():
+    cfg = _cfg(0.02)
+    eng = JaxEngine(_app(16), cfg)
+    reps = eng.run_replicates([0, 1, 2, 3])
+    single0 = JaxEngine(_app(16), cfg).run()
+    assert reps[0].updates == single0.updates
+    assert reps[0].dropped == single0.dropped
+    # distinct seeds give distinct trajectories
+    assert len({tuple(r.updates) for r in reps}) > 1
+    # every replicate produces a full QoS distribution
+    for r in reps:
+        assert len(r.qos) >= 16 * 3
+
+
+def test_registry_builds_both_engines():
+    cfg = _cfg(0.01)
+    assert make_engine("event", _app(4), cfg).name == "event"
+    assert make_engine("jax", _app(4), cfg).name == "jax"
+    with pytest.raises(ValueError):
+        make_engine("nope", _app(4), cfg)
+
+
+# ---------------------------------------------------------------------------
+# QoS parity with the event engine (the documented contract)
+# ---------------------------------------------------------------------------
+def test_median_qos_parity_16_ring():
+    cfg = _cfg(0.1)
+    res_e = Simulator(_app(16), cfg).run()
+    res_j = JaxEngine(_app(16), cfg).run()
+    med_e = aggregate_reports(res_e.qos)
+    med_j = aggregate_reports(res_j.qos)
+    for metric, rtol in PARITY_RTOL.items():
+        a, b = med_e[metric]["median"], med_j[metric]["median"]
+        assert a is not None and b is not None
+        assert abs(b - a) <= rtol * max(abs(a), 1e-12), \
+            f"{metric}: event={a} jax={b} rtol={rtol}"
+    # total progress agrees tightly
+    assert abs(sum(res_j.updates) - sum(res_e.updates)) \
+        <= 0.02 * sum(res_e.updates)
+
+
+def test_engine_counter_consistency():
+    res = JaxEngine(_app(16), _cfg(0.02)).run()
+    assert res.sent > 0
+    assert 0 <= res.dropped <= res.sent
+    # explicit drop counter backs the failure rate
+    assert res.delivery_failure_rate == res.dropped / res.sent
+
+
+def test_no_comm_sends_nothing():
+    res = JaxEngine(_app(16), _cfg(0.02, mode=AsyncMode.NO_COMM)).run()
+    assert res.sent == 0 and res.dropped == 0
+    for rep in res.qos:
+        assert rep.delivery_failure_rate == 0.0
+
+
+def test_best_effort_beats_barrier_rate_on_jax():
+    r0 = JaxEngine(_app(16), _cfg(0.02, mode=AsyncMode.BARRIER_EVERY_STEP,
+                                  base_latency=100e-6)).run()
+    r3 = JaxEngine(_app(16), _cfg(0.02, mode=AsyncMode.BEST_EFFORT,
+                                  base_latency=100e-6)).run()
+    assert r3.update_rate_per_cpu > 2.0 * r0.update_rate_per_cpu
+    # barrier-every-step stays in lockstep
+    assert max(r0.updates) - min(r0.updates) <= 1
+
+
+def test_drops_with_tiny_buffer_and_slow_consumer():
+    faults = FaultModel(compute_slowdown={1: 20.0})
+    cfg = _cfg(0.05, buffer_capacity=2, base_latency=20e-6)
+    res_j = JaxEngine(_app(2, topology="ring"), cfg, faults).run()
+    res_e = Simulator(_app(2, topology="ring"), cfg, faults).run()
+    assert res_j.dropped > 0
+    assert abs(res_j.delivery_failure_rate - res_e.delivery_failure_rate) \
+        < 0.15
+
+
+def test_block_simels_run_and_quality_definition_matches():
+    """simels > 1 exercises the batched block path on both engines."""
+    cfg = _cfg(0.01)
+    res_e = Simulator(_app(4, simels=16, topology="torus"), cfg).run()
+    res_j = JaxEngine(_app(4, simels=16, topology="torus"), cfg).run()
+    assert sum(res_j.updates) > 0
+    # same quality metric (global conflict count), same order of magnitude
+    assert res_j.quality >= 0 and res_e.quality >= 0
+    assert abs(sum(res_j.updates) - sum(res_e.updates)) \
+        <= 0.05 * sum(res_e.updates)

@@ -9,7 +9,6 @@ pytest.importorskip("hypothesis")  # optional extra; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.decode_attention import decode_attention, decode_attention_ref
-from repro.kernels.decode_attention.kernel import decode_attention_partials
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.quantize import dequantize, quantize, quantize_ref

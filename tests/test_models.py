@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.models import lm, transformer
+from repro.models import lm
 
 KEY = jax.random.PRNGKey(1)
 

@@ -1,6 +1,5 @@
 """Discrete-event runtime tests: channels, engine semantics, paper claims."""
 import numpy as np
-import pytest
 
 from repro.core.modes import AsyncMode
 from repro.runtime.channels import Duct
@@ -19,6 +18,19 @@ def test_duct_drop_on_full_buffer():
     assert not d.try_send("c", 0.0, 0)  # buffer full -> best-effort drop
     assert d.inlet.attempted_send_count == 3
     assert d.inlet.successful_send_count == 2
+    # drops are counted at the drop site, never derived at report time
+    assert d.inlet.dropped_send_count == 1
+
+
+def test_drop_counter_symmetry():
+    """attempted == successful + dropped holds at every point in time."""
+    d = Duct(capacity=1, latency_fn=lambda now: 0.001)
+    for k in range(5):
+        d.try_send(k, 0.0, 0)
+        i = d.inlet
+        assert i.attempted_send_count == (i.successful_send_count
+                                          + i.dropped_send_count)
+    assert d.inlet.dropped_send_count == 4
 
 
 def test_duct_latency_and_bulk_drain():
@@ -81,8 +93,15 @@ def test_drops_happen_with_tiny_buffer_and_slow_consumer():
     faults = FaultModel(compute_slowdown={1: 20.0})
     cfg = SimConfig(mode=AsyncMode.BEST_EFFORT, duration=0.05,
                     buffer_capacity=2, base_latency=20e-6)
-    res = Simulator(app, cfg, faults).run()
+    sim = Simulator(app, cfg, faults)
+    res = sim.run()
     assert res.dropped > 0  # fast producer overflows the slow consumer's duct
+    # SimResult.dropped comes from the explicit per-process drop counters,
+    # and they agree with the duct-level inlet counters
+    assert res.dropped == sum(sim._c_drop)
+    assert res.dropped == sum(d.inlet.dropped_send_count
+                              for d in sim.ducts.values())
+    assert res.sent == res.dropped + sum(sim._c_ok)
 
 
 def test_qos_windows_produced():
