@@ -8,38 +8,57 @@ agree within 2%.
 Run: PYTHONPATH=src:. python benchmarks/bench_engines.py \
          [--procs 256 1024 4096] [--engines event jax] [--duration 0.05]
 
+Sharded points (DESIGN.md §8) partition the population over a device mesh;
+on CPU, force host devices before jax initializes:
+
+    PYTHONPATH=src:. python benchmarks/bench_engines.py \
+        --engines jax --procs 65536 --shards 8 --force-host-devices 8 \
+        --duration 0.01
+
+(the 65k-process torus is the target scale for the sharded path; the
+single-device engine tops out around 16k before window dispatches dominate).
+
 Writes ``benchmarks/results/BENCH_engines.json`` (benchmarks/report.py
 conventions: CSV-ish stdout via ``emit``, JSON artifact via ``save_json``).
+CI's perf job replays the small 256-process jax point and compares
+updates/sec against the checked-in JSON via ``check_regression.py``.
 Event-engine points above ``--event-cap`` processes are skipped by default
 because they take minutes; pass a larger cap to measure the full matrix.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
-from repro.runtime.engine import make_engine
-from repro.runtime.simulator import SimConfig
-from repro.runtime.topologies import make_topology
-
-from benchmarks.common import emit, save_json
 
 PROC_COUNTS = (256, 1024, 4096)
 
 
-def bench_point(engine: str, n: int, duration: float, topology: str):
+def bench_point(engine: str, n: int, duration: float, topology: str,
+                shards: int = 1, warmup: bool = False):
+    from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+    from repro.runtime.engine import make_engine
+    from repro.runtime.simulator import SimConfig
+    from repro.runtime.topologies import make_topology
+
     topo = make_topology(topology, n)
     app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1),
                         topology=topo)
     cfg = SimConfig(duration=duration, snapshot_warmup=duration / 6,
                     snapshot_interval=duration / 12)
-    eng = make_engine(engine, app, cfg)
+    kwargs = {"shards": shards} if shards > 1 else {}
+    eng = make_engine(engine, app, cfg, **kwargs)
+    if warmup and engine == "jax":
+        # first run pays jit compilation; the timed run below reuses the
+        # cached runner, so updates/sec measures simulation throughput —
+        # what the CI regression guard wants to compare across machines
+        eng.run()
     t0 = time.perf_counter()
     res = eng.run()
     wall = time.perf_counter() - t0
     updates = sum(res.updates)
-    return dict(engine=engine, n=n, topology=topo.name, duration=duration,
+    return dict(engine=engine, n=n, shards=shards, topology=topo.name,
+                duration=duration, warm=bool(warmup and engine == "jax"),
                 wall_seconds=wall, updates=updates,
                 updates_per_sec=updates / wall,
                 delivery_failure_rate=res.delivery_failure_rate)
@@ -47,7 +66,9 @@ def bench_point(engine: str, n: int, duration: float, topology: str):
 
 def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
         duration: float = 0.05, topology: str = "torus",
-        event_cap: int = 1024):
+        event_cap: int = 1024, shards: int = 1, warmup: bool = False):
+    from benchmarks.common import emit, save_json
+
     rows = []
     for n in proc_counts:
         for engine in engines:
@@ -56,10 +77,13 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
                      f"skipped (> --event-cap {event_cap}; "
                      "the event engine needs minutes at this scale)")
                 continue
-            row = bench_point(engine, n, duration, topology)
+            point_shards = shards if engine == "jax" else 1
+            row = bench_point(engine, n, duration, topology, point_shards,
+                              warmup)
             rows.append(row)
-            emit(f"engines/{engine}/n{n}",
-                 row["wall_seconds"] * 1e6,
+            tag = f"engines/{engine}/n{n}" + (
+                f"/s{point_shards}" if point_shards > 1 else "")
+            emit(tag, row["wall_seconds"] * 1e6,
                  f"updates={row['updates']} "
                  f"upd_per_sec={row['updates_per_sec']:.0f} "
                  f"fail={row['delivery_failure_rate']:.3f}")
@@ -90,6 +114,19 @@ if __name__ == "__main__":
     p.add_argument("--topology", default="torus")
     p.add_argument("--event-cap", type=int, default=1024,
                    help="skip event-engine points above this process count")
+    p.add_argument("--shards", type=int, default=1,
+                   help="device-mesh shards for the jax engine points")
+    p.add_argument("--force-host-devices", type=int, default=0,
+                   help="set XLA_FLAGS=--xla_force_host_platform_device_"
+                        "count=N (must run before jax initializes devices)")
+    p.add_argument("--warmup", action="store_true",
+                   help="pre-run jax points once so the timed run excludes "
+                        "jit compilation (used by the CI perf guard)")
     a = p.parse_args()
+    if a.force_host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{a.force_host_devices}").strip()
     run(tuple(a.procs), tuple(a.engines), a.duration, a.topology,
-        a.event_cap)
+        a.event_cap, a.shards, a.warmup)

@@ -1,0 +1,80 @@
+"""Perf-regression guard over ``bench_engines`` JSON artifacts.
+
+Compares a freshly measured ``BENCH_engines.json`` against the checked-in
+baseline (``benchmarks/results/BENCH_engines.json``): for every
+``(engine, n, shards)`` point present in BOTH files, the fresh
+``updates_per_sec`` must be at least ``(1 - tolerance)`` of the baseline.
+Points only present on one side are reported and skipped, so the baseline
+can carry a wider matrix than a quick CI replay.
+
+The tolerance is deliberately generous (default 40%): the baseline is
+recorded on a developer machine while CI replays on shared runners, so
+the guard is meant to catch order-of-magnitude path regressions (a fallen
+jit cache, accidental host sync per window, quadratic setup), not a few
+percent of noise.
+
+Run (CI copies the baseline aside first, since the bench overwrites it):
+
+    cp benchmarks/results/BENCH_engines.json /tmp/bench_baseline.json
+    PYTHONPATH=src:. python benchmarks/bench_engines.py \
+        --engines jax --procs 256 --duration 0.02
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench_baseline.json \
+        --fresh benchmarks/results/BENCH_engines.json
+
+Exits non-zero on any regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _points(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    return {(r["engine"], r["n"], r.get("shards", 1)): r for r in rows}
+
+
+def check(baseline_path: str, fresh_path: str,
+          tolerance: float = 0.40, metric: str = "updates_per_sec") -> int:
+    base = _points(baseline_path)
+    fresh = _points(fresh_path)
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print("check_regression: no shared (engine, n, shards) points "
+              f"between {baseline_path} and {fresh_path}")
+        return 2
+    for key in sorted(set(base) - set(fresh)):
+        print(f"  skip {key}: baseline-only point")
+    for key in sorted(set(fresh) - set(base)):
+        print(f"  skip {key}: fresh-only point (new in this run)")
+    failures = 0
+    for key in shared:
+        b, f = base[key][metric], fresh[key][metric]
+        floor = b * (1.0 - tolerance)
+        status = "OK" if f >= floor else "REGRESSION"
+        if f < floor:
+            failures += 1
+        engine, n, shards = key
+        print(f"  {status:<10} {engine}/n{n}/s{shards}: "
+              f"{metric} fresh={f:.0f} baseline={b:.0f} "
+              f"floor={floor:.0f} ({f / b:.2f}x)")
+    if failures:
+        print(f"check_regression: {failures}/{len(shared)} point(s) "
+              f"regressed beyond the {tolerance:.0%} tolerance")
+        return 1
+    print(f"check_regression: {len(shared)} point(s) within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--baseline", required=True)
+    p.add_argument("--fresh", required=True)
+    p.add_argument("--tolerance", type=float, default=0.40)
+    p.add_argument("--metric", default="updates_per_sec")
+    a = p.parse_args()
+    sys.exit(check(a.baseline, a.fresh, a.tolerance, a.metric))

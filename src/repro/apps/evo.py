@@ -212,7 +212,10 @@ class BatchedEvo:
             jnp.pad(r[:, 0, :], pad_w), jnp.pad(r[:, -1, :], pad_w),
             jnp.pad(r[:, :, 0], pad_h), jnp.pad(r[:, :, -1], pad_h)], axis=1)
 
-    def step(self, state, halo, steps, seed):
+    def step(self, state, halo, steps, seed, pids=None):
+        """One population step; ``pids`` are the original process ids of the
+        rows in ``state`` (the sharded engine passes its shard's slice so
+        mutation draws are layout-independent; ``None`` = identity)."""
         import jax.numpy as jnp
         from repro.runtime.engine_jax import STREAM_MUT, hash_uniform
         cfg, H, W = self.cfg, self.H, self.W
@@ -220,8 +223,10 @@ class BatchedEvo:
         G = cfg.genome_len
 
         # reflective unfed slots: mirror our own edge, never drain resource
-        halo_eff = jnp.where(jnp.asarray(self.fed)[:, :, None], halo,
-                             self._own_edges(r))
+        fed = jnp.asarray(self.fed)
+        if pids is not None:
+            fed = fed[pids]  # shard-local rows of the global (n, 4) mask
+        halo_eff = jnp.where(fed[:, :, None], halo, self._own_edges(r))
         hn, hs = halo_eff[:, 0, :W], halo_eff[:, 1, :W]
         hw, he = halo_eff[:, 2, :H], halo_eff[:, 3, :H]
 
@@ -250,8 +255,11 @@ class BatchedEvo:
         fit_rolled = jnp.stack([jnp.roll(fit, s, axis=a + 1)
                                 for s, a in self._SHIFTS])
         weakest = fit_rolled.argmin(axis=0)
-        cell = jnp.arange(self.n * H * W * G, dtype=jnp.int32
-                          ).reshape(self.n, H, W, G)
+        # cells keyed by original pid: shard layouts draw identically
+        if pids is None:
+            pids = jnp.arange(g.shape[0], dtype=jnp.int32)
+        cell = (pids[:, None, None, None] * np.int32(H * W * G)
+                + jnp.arange(H * W * G, dtype=jnp.int32).reshape(H, W, G))
         step_k = steps[:, None, None, None]
         mut = hash_uniform(seed, STREAM_MUT, step_k, cell) < cfg.mutation_rate
         delta = jnp.floor(

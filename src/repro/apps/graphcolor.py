@@ -342,7 +342,11 @@ class BatchedGraphColor:
         state = dict(colors=jnp.asarray(colors), probs=probs)
         return state, jnp.asarray(halo)
 
-    def step(self, state, halo, steps, seed):
+    def step(self, state, halo, steps, seed, pids=None):
+        """One population step.  ``pids`` are the *original* process ids of
+        the rows in ``state`` — the sharded engine passes each shard's slice
+        so counter-hash draws are identical under any shard layout; ``None``
+        means the identity layout (rows 0..n-1)."""
         import jax
         import jax.numpy as jnp
         from repro.runtime.engine_jax import STREAM_APP, hash_uniform
@@ -363,9 +367,12 @@ class BatchedGraphColor:
         fail_p = (1 - b) * probs + b * (1 - onehot) / (C - 1)
         new_probs = jnp.where(conflict[..., None], fail_p, onehot)
         # counter-hash resample draw: ~10 integer ops per node, much
-        # cheaper in the scan hot loop than per-process threefry folding
-        cell = jnp.arange(self.n * H * W, dtype=jnp.int32
-                          ).reshape(self.n, H, W)
+        # cheaper in the scan hot loop than per-process threefry folding.
+        # cells are keyed by original pid so shard layouts draw identically
+        if pids is None:
+            pids = jnp.arange(colors.shape[0], dtype=jnp.int32)
+        cell = (pids[:, None, None] * np.int32(H * W)
+                + jnp.arange(H * W, dtype=jnp.int32).reshape(H, W))
         u = hash_uniform(seed, STREAM_APP, steps[:, None, None],
                          cell)[..., None]
         cdf = jnp.cumsum(new_probs, axis=-1)

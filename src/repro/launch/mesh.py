@@ -25,6 +25,59 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+#: Mesh axis the sharded simulation engine partitions the population over.
+SHARD_AXIS = "shard"
+
+
+def make_shard_mesh(n_shards: int):
+    """1-D mesh over ``SHARD_AXIS`` for the sharded vectorized engine.
+
+    CI forces host-platform devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so this path is
+    exercised continuously without accelerators (DESIGN.md §8).
+    """
+    n_dev = len(jax.devices())
+    if n_shards > n_dev:
+        raise ValueError(
+            f"requested {n_shards} shards but only {n_dev} JAX device(s) "
+            "are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards} before "
+            "importing jax")
+    return jax.make_mesh((n_shards,), (SHARD_AXIS,))
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None):
+    """Version-compat ``shard_map``: top-level ``jax.shard_map`` on current
+    jax, ``jax.experimental.shard_map`` on older releases.  Replication
+    checking is disabled either way — the sharded engine's bodies mix
+    per-shard state with cross-shard collectives, which the static checker
+    over-rejects.
+
+    ``axis_names`` restricts manual axes (partial-auto sharding): passed
+    through on current jax, translated to the legacy ``auto=`` complement
+    on older releases.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if axis_names is None else {"axis_names": axis_names}
+        # the check flag was renamed check_rep -> check_vma across jax
+        # releases; keep checking OFF whichever spelling this jax takes
+        for check_kw in ({"check_vma": False}, {"check_rep": False}, {}):
+            try:
+                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, **check_kw,
+                                     **kwargs)
+            except TypeError:
+                continue
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False, **kwargs)
+
+
 def rules_for(mesh, *, long_context: bool = False,
               pod_stacked: bool = False, profile: str = "2d") -> MeshRules:
     """Logical-role mapping for a mesh.

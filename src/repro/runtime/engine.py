@@ -14,7 +14,10 @@ Registered backends:
   jax     ``runtime/engine_jax.py`` — vectorized windowed-time engine; the
           whole population advances per lockstep window as flat JAX arrays,
           with ``jax.vmap`` over seeds for multi-replicate sweeps
-          (DESIGN.md §7)
+          (DESIGN.md §7).  With ``shards`` > 1 the population is
+          partitioned into contiguous blocks over a 1-D device mesh
+          (``runtime/engine_sharded.py``, DESIGN.md §8); only boundary-edge
+          duct traffic crosses shards
 
 The jax backend additionally offers ``run_replicates(seeds)``; engines that
 lack a native batched form fall back to sequential runs via
@@ -39,13 +42,26 @@ class Engine(Protocol):
         ...
 
 
-def _make_event(app, cfg: SimConfig, faults: Optional[FaultModel]) -> Engine:
+def _make_event(app, cfg: SimConfig, faults: Optional[FaultModel],
+                **kwargs) -> Engine:
+    shards = kwargs.pop("shards", 1)
+    if shards and shards > 1:
+        raise ValueError("the event engine is single-device; "
+                         "--shards requires --engine jax")
+    if kwargs:
+        raise TypeError(f"unknown engine options {sorted(kwargs)}")
     return Simulator(app, cfg, faults)
 
 
-def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel]) -> Engine:
-    from repro.runtime.engine_jax import JaxEngine  # deferred: heavy import
-    return JaxEngine(app, cfg, faults)
+def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel],
+              **kwargs) -> Engine:
+    # deferred imports: heavy jax machinery
+    shards = kwargs.pop("shards", 1)
+    if shards and shards > 1:
+        from repro.runtime.engine_sharded import ShardedJaxEngine
+        return ShardedJaxEngine(app, cfg, faults, shards=shards, **kwargs)
+    from repro.runtime.engine_jax import JaxEngine
+    return JaxEngine(app, cfg, faults, **kwargs)
 
 
 ENGINES = {
@@ -55,34 +71,43 @@ ENGINES = {
 
 
 def make_engine(name: str, app, cfg: SimConfig,
-                faults: Optional[FaultModel] = None) -> Engine:
-    """Build a registered engine by name."""
+                faults: Optional[FaultModel] = None, **kwargs) -> Engine:
+    """Build a registered engine by name.
+
+    ``kwargs`` are backend options: the jax engine accepts ``shards`` (> 1
+    builds the mesh-sharded engine, DESIGN.md §8) plus ``max_pops`` /
+    ``chunk``; the event engine accepts none.
+    """
     try:
         factory = ENGINES[name]
     except KeyError:
         raise ValueError(
             f"unknown engine {name!r}; choose from {sorted(ENGINES)}")
-    return factory(app, cfg, faults)
+    return factory(app, cfg, faults, **kwargs)
 
 
 def run_replicates(engine_name: str, make_app, cfg: SimConfig,
                    seeds: Sequence[int],
-                   faults: Optional[FaultModel] = None) -> List[SimResult]:
+                   faults: Optional[FaultModel] = None,
+                   **engine_kwargs) -> List[SimResult]:
     """Run one replicate per seed, batched where the backend supports it.
 
     ``make_app(seed)`` builds a fresh application per replicate.  Backends
-    exposing a native ``run_replicates`` (the jax engine: one vmapped scan)
-    get all seeds at once; others loop.  ``cfg.seed`` is overridden by
-    each replicate's seed.
+    exposing a native ``run_replicates`` (the jax engine: one vmapped scan,
+    sharded over the device mesh when ``shards`` > 1) get all seeds at
+    once; others loop.  ``cfg.seed`` is overridden by each replicate's
+    seed.
     """
     import dataclasses
     eng = make_engine(engine_name, make_app(int(seeds[0])),
-                      dataclasses.replace(cfg, seed=int(seeds[0])), faults)
+                      dataclasses.replace(cfg, seed=int(seeds[0])), faults,
+                      **engine_kwargs)
     if hasattr(eng, "run_replicates"):
         return eng.run_replicates([int(s) for s in seeds])
     out = [eng.run()]
     for s in seeds[1:]:
         eng = make_engine(engine_name, make_app(int(s)),
-                          dataclasses.replace(cfg, seed=int(s)), faults)
+                          dataclasses.replace(cfg, seed=int(s)), faults,
+                          **engine_kwargs)
         out.append(eng.run())
     return out

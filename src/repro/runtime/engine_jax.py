@@ -173,21 +173,41 @@ class JaxEngine:
         return self.cfg.barrier_base + self.cfg.barrier_per_log2 * math.log2(
             self.n)
 
-    def _step_factor(self, seed, steps):
+    def _step_factor(self, seed, steps, pids=None, cfactor=None):
+        """Per-process compute-time factor; ``pids``/``cfactor`` default to
+        the full-population arrays (the sharded engine passes its shard's
+        slices — draws are keyed by original pid, so identical)."""
         cfg = self.cfg
+        pids = self._pids if pids is None else pids
+        cfactor = self._cfactor if cfactor is None else cfactor
         f = lognormal_factor(cfg.jitter_sigma, seed, STREAM_STEP,
-                             self._pids, steps)
+                             pids, steps)
         if cfg.stall_prob > 0:
-            u = hash_uniform(seed, STREAM_STALL, self._pids, steps)
+            u = hash_uniform(seed, STREAM_STALL, pids, steps)
             f = jnp.where(u < cfg.stall_prob,
                           f * np.float32(cfg.stall_factor), f)
-        return f * self._cfactor
+        return f * cfactor
 
     # ------------------------------------------------------------------
+    def _edge_state(self) -> Dict[str, jax.Array]:
+        """Fresh (empty-ring) edge state.  Every array is constant, so the
+        sharded subclass overrides only the row count (padded per-shard
+        layout) without re-deriving anything."""
+        cfg, E = self.cfg, self.E
+        L = self.bapp.payload_len
+        return dict(
+            ptouch=jnp.zeros(E, jnp.int32),
+            q_avail=jnp.full((E, cfg.buffer_capacity), jnp.inf, jnp.float32),
+            q_touch=jnp.zeros((E, cfg.buffer_capacity), jnp.int32),
+            q_pay=jnp.zeros((E, cfg.buffer_capacity, L),
+                            self.bapp.payload_dtype),
+            q_head=jnp.zeros(E, jnp.int32),
+            q_size=jnp.zeros(E, jnp.int32),
+        )
+
     def _init_carry(self, seed: int) -> Dict[str, jax.Array]:
-        cfg, n, E = self.cfg, self.n, self.E
+        cfg, n = self.cfg, self.n
         bapp = self.bapp
-        L = bapp.payload_len
         base_total = np.float32(
             cfg.base_compute + cfg.work_units * cfg.work_unit_cost)
         seed_arr = jnp.asarray(seed, jnp.int32)
@@ -210,12 +230,7 @@ class JaxEngine:
             c_drop=jnp.zeros(n, jnp.int32),
             c_laden=jnp.zeros(n, jnp.int32),
             c_msgs=jnp.zeros(n, jnp.int32),
-            ptouch=jnp.zeros(E, jnp.int32),
-            q_avail=jnp.full((E, cfg.buffer_capacity), jnp.inf, jnp.float32),
-            q_touch=jnp.zeros((E, cfg.buffer_capacity), jnp.int32),
-            q_pay=jnp.zeros((E, cfg.buffer_capacity, L), bapp.payload_dtype),
-            q_head=jnp.zeros(E, jnp.int32),
-            q_size=jnp.zeros(E, jnp.int32),
+            **self._edge_state(),
             halo=halo,
             app=state,
             snap=jnp.zeros((n, self.S, 8), jnp.float32),
@@ -280,7 +295,7 @@ class JaxEngine:
 
         # --- 2. the application's actual batched compute ------------------
         new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
-                                         seed)
+                                         seed, pids=self._pids)
         app_state = jax.tree_util.tree_map(
             lambda new, old: jnp.where(
                 active.reshape((n,) + (1,) * (new.ndim - 1)), new, old),

@@ -1,0 +1,514 @@
+"""Mesh-sharded vectorized engine (DESIGN.md §8).
+
+The windowed-time engine (``runtime/engine_jax.py``) advances the whole
+population per lockstep window on ONE device.  This subclass partitions the
+flat population arrays into contiguous per-shard process blocks over a 1-D
+device mesh (``launch/mesh.py::make_shard_mesh``) and runs each window's
+drain -> batched compute -> send under ``shard_map``, so only the thin set
+of cross-shard boundary edges ever crosses the device link — Conduit's
+partitioning discipline (arXiv:2105.10486) applied to the simulator itself.
+
+Layout.  ``topologies.contiguous_partition`` reorders pids so each shard's
+processes are contiguous; every duct ring lives on its *receiver's* shard,
+so drains, halo scatters, and receiver-side QoS counters are shard-local.
+Per window, boundary traffic moves in exactly two collective hops per
+distinct shard offset:
+
+  1. payload hop: for each boundary edge the source shard packs
+     (edge payload, availability stamp ``t_src + latency``, touch counter,
+     active bit) into one int32 buffer and ``ppermute``s it to the
+     receiver's shard, which scatters the entries into its local send rows;
+  2. accept hop: after the local ``duct_send`` (drop iff the ring is full)
+     the receiver ``ppermute``s the accept bits back so the source shard
+     can maintain its processes' attempted/ok/dropped send counters.
+
+Barrier modes need two scalar reductions per window (``pmin``/``pmax``
+over the shard axis — psum-style, exact); best-effort windows need none
+beyond the boundary hops.
+
+Parity.  All stochastic draws stay keyed by *original* pid and *canonical*
+edge id (the unsharded enumeration order), and halo-scatter ties resolve
+by canonical edge id, so a run is a pure function of ``(config, seed)``
+regardless of shard count: ``--shards 8`` reproduces ``--shards 1``
+trajectories exactly (``tests/test_engine_sharded.py``).  The replicate
+axis vmaps *inside* each shard, composing ``--replicates`` with
+``--shards``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.modes import AsyncMode
+from repro.kernels.duct_exchange.ops import duct_drain, duct_send
+from repro.launch.mesh import SHARD_AXIS, make_shard_mesh, shard_map
+from repro.runtime.engine_jax import (
+    _BARRIER_MODES,
+    STREAM_LAT,
+    JaxEngine,
+    lognormal_factor,
+)
+from repro.runtime.simulator import SimResult
+from repro.runtime.topologies import contiguous_partition
+
+#: carry keys indexed by the process axis (permuted into shard layout)
+_PROC_KEYS = ("t", "steps", "done", "waiting", "barrier_seq", "last_release",
+              "pending", "c_touch", "c_att", "c_ok", "c_drop", "c_laden",
+              "c_msgs", "snap", "snap_idx", "halo")
+#: carry keys indexed by the edge axis (re-laid-out per shard, padded)
+_EDGE_KEYS = ("ptouch", "q_avail", "q_touch", "q_pay", "q_head", "q_size")
+#: per-replicate scalars (replicated across shards)
+_SCALAR_KEYS = ("seed", "k")
+
+
+def _bits_i32(x: jax.Array) -> jax.Array:
+    """Reinterpret f32 as i32 so one ppermute buffer carries mixed fields."""
+    if x.dtype == jnp.int32:
+        return x
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _from_bits(x: jax.Array, dtype) -> jax.Array:
+    if np.dtype(dtype) == np.dtype(np.int32):
+        return x
+    return jax.lax.bitcast_convert_type(x, dtype)
+
+
+class ShardedJaxEngine(JaxEngine):
+    """Windowed-time engine sharded over a 1-D device mesh.
+
+    Same ``Engine`` contract and same trajectories as :class:`JaxEngine`
+    (canonical RNG/tie keying — see module docstring); built by the
+    registry when ``--shards S`` > 1.
+    """
+
+    def __init__(self, app, cfg, faults=None, *, shards: int,
+                 max_pops: int = 16, chunk: int = 256):
+        super().__init__(app, cfg, faults, max_pops=max_pops, chunk=chunk)
+        if np.dtype(self.bapp.payload_dtype) not in (np.dtype(np.int32),
+                                                     np.dtype(np.float32)):
+            raise ValueError(
+                "sharded engine payloads must be int32/float32 (32-bit "
+                f"ppermute packing), got {self.bapp.payload_dtype}")
+        self.shards = int(shards)
+        self.plan = contiguous_partition(self.topo, self.shards)
+        self.mesh = make_shard_mesh(self.shards)
+        self._m = self.n // self.shards
+        self._build_statics()
+        self._statics_sharded = None
+        self._cspecs = None
+
+    # ------------------------------------------------------------------
+    # Static shard layout: local rows (rings on the receiver's shard) and
+    # per-offset boundary exchange tables.  All numpy, hoisted out of jit.
+    # ------------------------------------------------------------------
+    def _build_statics(self) -> None:
+        S, m, E = self.shards, self._m, self.E
+        esrc = np.asarray(self._esrc)
+        edst = np.asarray(self._edst)
+        slot = np.asarray(self._slot)
+        out_slot = np.asarray(self._out_slot)
+        rev = np.asarray(self._rev)
+        lat_base = np.asarray(self._lat_base)
+        perm = np.asarray(self.plan.perm, np.int64)
+        inv = np.asarray(self.plan.inv, np.int64)
+
+        lsrc, ldst = inv[esrc], inv[edst]     # edge endpoints as positions
+        src_sh, dst_sh = lsrc // m, ldst // m
+        rows_by_shard = [np.where(dst_sh == s)[0] for s in range(S)]
+        ein = max(1, max(len(r) for r in rows_by_shard))
+        self._ein = ein
+        # canonical edge id -> its ring's local row index (ascending
+        # canonical order per shard, so local row order == canonical order
+        # and segment_max tie-breaks match the unsharded engine)
+        row_of = np.full(E, -1, np.int64)
+        for rows in rows_by_shard:
+            row_of[rows] = np.arange(len(rows))
+
+        i32, f32 = np.int32, np.float32
+        row_canon = np.zeros((S, ein), i32)
+        row_valid = np.zeros((S, ein), bool)
+        row_dst = np.full((S, ein), m, i32)
+        row_src = np.full((S, ein), m, i32)       # sentinel m: not interior
+        row_interior = np.zeros((S, ein), bool)
+        row_out_slot = np.zeros((S, ein), i32)
+        row_rev = np.full((S, ein), ein, i32)     # sentinel ein: not local
+        row_halo_key = np.full((S, ein), 4 * m, i32)
+        row_lat = np.zeros((S, ein), f32)
+        for s in range(S):
+            e = rows_by_shard[s]
+            k = len(e)
+            interior = src_sh[e] == s
+            row_canon[s, :k] = e
+            row_valid[s, :k] = True
+            row_dst[s, :k] = ldst[e] - s * m
+            row_src[s, :k] = np.where(interior, lsrc[e] - s * m, m)
+            row_interior[s, :k] = interior
+            row_out_slot[s, :k] = out_slot[e]
+            # rev edge (dst, src) drains at src — local iff this edge is
+            # interior; boundary rows get their touch stamp via exchange
+            row_rev[s, :k] = np.where(interior, row_of[rev[e]], ein)
+            row_halo_key[s, :k] = (ldst[e] - s * m) * 4 + slot[e]
+            row_lat[s, :k] = lat_base[e]
+
+        # boundary edges grouped by shard offset: one ppermute per offset
+        bnd = np.where(src_sh != dst_sh)[0]
+        offs = ((dst_sh[bnd] - src_sh[bnd]) % S).astype(np.int64)
+        self._offsets = sorted(int(d) for d in set(offs.tolist()))
+        bnd_tables: Dict[str, Dict[str, np.ndarray]] = {}
+        for d in self._offsets:
+            sel = bnd[offs == d]
+            per_s = [sel[src_sh[sel] == s] for s in range(S)]  # canon order
+            bd = max(1, max(len(p) for p in per_s))
+            snd_src = np.full((S, bd), m, i32)
+            snd_oslot = np.zeros((S, bd), i32)
+            snd_rev = np.full((S, bd), ein, i32)
+            snd_canon = np.zeros((S, bd), i32)
+            snd_lat = np.zeros((S, bd), f32)
+            rcv_row = np.full((S, bd), ein, i32)
+            for s in range(S):
+                e = per_s[s]
+                k = len(e)
+                snd_src[s, :k] = lsrc[e] - s * m
+                snd_oslot[s, :k] = out_slot[e]
+                snd_rev[s, :k] = row_of[rev[e]]
+                snd_canon[s, :k] = e
+                snd_lat[s, :k] = lat_base[e]
+                # sender s's entry j lands at receiver (s+d)%S, entry j
+                rcv_row[(s + d) % S, :k] = row_of[e]
+            bnd_tables[str(d)] = dict(
+                snd_src=snd_src, snd_oslot=snd_oslot, snd_rev=snd_rev,
+                snd_canon=snd_canon, snd_lat=snd_lat, rcv_row=rcv_row)
+
+        self._statics = jax.tree.map(jnp.asarray, dict(
+            pids=perm.reshape(S, m).astype(i32),
+            cfactor=np.asarray(self._cfactor)[perm].reshape(S, m),
+            deg=np.asarray(self._deg)[perm].reshape(S, m).astype(i32),
+            row_canon=row_canon, row_valid=row_valid, row_dst=row_dst,
+            row_src=row_src, row_interior=row_interior,
+            row_out_slot=row_out_slot, row_rev=row_rev,
+            row_halo_key=row_halo_key, row_lat=row_lat, bnd=bnd_tables))
+        self._perm_np = perm
+        self._inv_np = inv
+
+    # ------------------------------------------------------------------
+    # Layout transforms around the sharded dispatch
+    # ------------------------------------------------------------------
+    def _edge_state(self) -> Dict[str, jax.Array]:
+        """Empty rings in padded per-shard layout: ``S * ein`` rows, row
+        ``s * ein + j`` = shard s's local row j.  All-constant, so no
+        canonical-order gather is needed (and the full-population edge
+        arrays are never allocated)."""
+        cfg = self.cfg
+        rows = self.shards * self._ein
+        L = self.bapp.payload_len
+        return dict(
+            ptouch=jnp.zeros(rows, jnp.int32),
+            q_avail=jnp.full((rows, cfg.buffer_capacity), jnp.inf,
+                             jnp.float32),
+            q_touch=jnp.zeros((rows, cfg.buffer_capacity), jnp.int32),
+            q_pay=jnp.zeros((rows, cfg.buffer_capacity, L),
+                            self.bapp.payload_dtype),
+            q_head=jnp.zeros(rows, jnp.int32),
+            q_size=jnp.zeros(rows, jnp.int32),
+        )
+
+    def _to_sharded_layout(self, carry):
+        """Permute process-axis leaves into shard order (edge leaves are
+        already built in padded per-shard layout by ``_edge_state``)."""
+        perm = self._perm_np
+        out = dict(carry)
+        for key in _PROC_KEYS:
+            out[key] = carry[key][:, perm]
+        out["app"] = jax.tree.map(lambda x: x[:, perm], carry["app"])
+        return out
+
+    def _to_canonical_layout(self, carry):
+        """Undo the process permutation on everything ``_assemble`` reads."""
+        inv = self._inv_np
+        out = dict(carry)
+        for key in _PROC_KEYS:
+            out[key] = carry[key][:, inv]
+        out["app"] = jax.tree.map(lambda x: x[:, inv], carry["app"])
+        return out
+
+    def _carry_specs(self, carry):
+        specs = jax.tree.map(lambda _: P(None, SHARD_AXIS), carry)
+        for key in _SCALAR_KEYS:
+            specs[key] = P(None)
+        return specs
+
+    # ------------------------------------------------------------------
+    # One lockstep window on one shard (m processes, ein edge rows)
+    # ------------------------------------------------------------------
+    def _sharded_window(self, st, carry):
+        cfg, m, ein, S = self.cfg, self._m, self._ein, self.shards
+        bapp = self.bapp
+        mode = cfg.mode
+        comm = mode != AsyncMode.NO_COMM
+        barriered = mode in _BARRIER_MODES
+        rows = jnp.arange(ein, dtype=jnp.int32)
+        seed = carry["seed"]
+        k = carry["k"]
+        t = carry["t"]
+        done, waiting = carry["done"], carry["waiting"]
+        active = ~done & ~waiting
+        halo = carry["halo"]
+        drained_r = jnp.zeros(m, jnp.int32)
+        # sentinel-padded per-process vectors: index m = inactive dummy
+        t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
+        act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
+
+        if comm:
+            # --- 1. drain: every ring lives on its receiver's shard -------
+            d = duct_drain(carry["q_avail"], carry["q_touch"],
+                           carry["q_head"], carry["q_size"],
+                           t_pad[st["row_dst"]], act_pad[st["row_dst"]],
+                           max_pops=self.max_pops, clear_popped=False)
+            delivered = d.drained > 0
+            payload = carry["q_pay"][rows, d.pop_pos]
+            # local rows are in ascending canonical order, so the local
+            # segment_max resolves (dst, slot) ties exactly like the
+            # unsharded engine's canonical-id tie-break
+            winner = jax.ops.segment_max(
+                jnp.where(delivered, rows, -1), st["row_halo_key"],
+                num_segments=4 * m + 1)[:4 * m]
+            has_win = winner >= 0
+            fresh = payload[jnp.where(has_win, winner, 0)]
+            L = halo.shape[-1]
+            halo = jnp.where(has_win[:, None], fresh,
+                             halo.reshape(m * 4, L)).reshape(m, 4, L)
+            new_touch = d.recv_touch + 1
+            dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+            ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+            recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
+                                   dtouch], axis=1)
+            recv_sums = jax.ops.segment_sum(recv_cols, st["row_dst"],
+                                            num_segments=m + 1)[:m]
+            drained_r = recv_sums[:, 0]
+            c_msgs = carry["c_msgs"] + drained_r
+            c_laden = carry["c_laden"] + recv_sums[:, 1]
+            c_touch = carry["c_touch"] + recv_sums[:, 2]
+            q_avail, q_touch = d.q_avail, d.q_touch
+            q_head, q_size = d.head, d.size
+        else:
+            ptouch = carry["ptouch"]
+            c_touch, c_laden, c_msgs = (carry["c_touch"], carry["c_laden"],
+                                        carry["c_msgs"])
+            q_avail, q_touch = carry["q_avail"], carry["q_touch"]
+            q_head, q_size = carry["q_head"], carry["q_size"]
+
+        # --- 2. the application's actual batched compute ------------------
+        new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
+                                         seed, pids=st["pids"])
+        app_state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                active.reshape((m,) + (1,) * (new.ndim - 1)), new, old),
+            new_state, carry["app"])
+        steps = carry["steps"] + active
+
+        if comm:
+            # --- 3a. interior send inputs (same-shard src) ----------------
+            eo_pad = jnp.concatenate(
+                [edges_out, jnp.zeros((1,) + edges_out.shape[1:],
+                                      edges_out.dtype)])
+            ptouch_pad = jnp.concatenate([ptouch, jnp.zeros(1, jnp.int32)])
+            # latency draws keyed by canonical edge id: identical to the
+            # unsharded engine's per-edge stream
+            lat_row = st["row_lat"] * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
+            x_pay = eo_pad[st["row_src"], st["row_out_slot"]]
+            x_avail = t_pad[st["row_src"]] + lat_row
+            x_act = act_pad[st["row_src"]] & st["row_interior"]
+            x_tch = ptouch_pad[st["row_rev"]]
+
+            # --- 3b. boundary payload hop: one packed ppermute/offset -----
+            sent_meta = []
+            pay_dtype = edges_out.dtype
+            for off in self._offsets:
+                b = st["bnd"][str(off)]
+                lat_b = b["snd_lat"] * lognormal_factor(
+                    cfg.latency_sigma, seed, STREAM_LAT, b["snd_canon"], k)
+                pay_b = eo_pad[b["snd_src"], b["snd_oslot"]]
+                avail_b = t_pad[b["snd_src"]] + lat_b
+                att_b = act_pad[b["snd_src"]]
+                tch_b = ptouch_pad[b["snd_rev"]]
+                buf = jnp.concatenate([
+                    _bits_i32(pay_b),
+                    _bits_i32(avail_b)[:, None],
+                    tch_b[:, None],
+                    att_b[:, None].astype(jnp.int32)], axis=1)
+                buf = jax.lax.ppermute(
+                    buf, SHARD_AXIS,
+                    [(i, (i + off) % S) for i in range(S)])
+                Lp = pay_b.shape[1]
+                rr = b["rcv_row"]  # pad entries carry the ein sentinel
+                x_pay = x_pay.at[rr].set(
+                    _from_bits(buf[:, :Lp], pay_dtype), mode="drop")
+                x_avail = x_avail.at[rr].set(
+                    _from_bits(buf[:, Lp], jnp.float32), mode="drop")
+                x_tch = x_tch.at[rr].set(buf[:, Lp + 1], mode="drop")
+                x_act = x_act.at[rr].set(buf[:, Lp + 2].astype(bool),
+                                         mode="drop")
+                sent_meta.append((off, b, att_b))
+
+            # --- 3c. local send attempt (drop iff full) -------------------
+            s = duct_send(q_avail, q_touch, q_head, q_size,
+                          x_avail, x_act, jnp.float32(0.0), x_tch,
+                          capacity=cfg.buffer_capacity)
+            q_pay = carry["q_pay"].at[
+                jnp.where(s.accepted, rows, ein), s.push_pos].set(
+                x_pay, mode="drop")
+            q_avail, q_touch, q_size = s.q_avail, s.q_touch, s.size
+            # interior send counters (boundary rows carry the m sentinel in
+            # row_src, so their contributions drop into the spare segment)
+            send_cols = jnp.stack([
+                x_act.astype(jnp.int32),
+                (x_act & s.accepted).astype(jnp.int32),
+                (x_act & ~s.accepted).astype(jnp.int32)], axis=1)
+            send_sums = jax.ops.segment_sum(send_cols, st["row_src"],
+                                            num_segments=m + 1)[:m]
+
+            # --- 3d. boundary accept hop: bits back to the source shard ---
+            acc_pad = jnp.concatenate([s.accepted, jnp.zeros(1, bool)])
+            for off, b, att_b in sent_meta:
+                acc_back = jax.lax.ppermute(
+                    acc_pad[b["rcv_row"]].astype(jnp.int32), SHARD_AXIS,
+                    [(i, (i - off) % S) for i in range(S)])
+                ok_b = acc_back.astype(bool)
+                cols_b = jnp.stack([
+                    att_b.astype(jnp.int32),
+                    (att_b & ok_b).astype(jnp.int32),
+                    (att_b & ~ok_b).astype(jnp.int32)], axis=1)
+                send_sums = send_sums + jax.ops.segment_sum(
+                    cols_b, b["snd_src"], num_segments=m + 1)[:m]
+
+            c_att = carry["c_att"] + send_sums[:, 0]
+            c_ok = carry["c_ok"] + send_sums[:, 1]
+            c_drop = carry["c_drop"] + send_sums[:, 2]
+        else:
+            q_pay = carry["q_pay"]
+            c_att, c_ok, c_drop = (carry["c_att"], carry["c_ok"],
+                                   carry["c_drop"])
+
+        # --- 4. QoS counters + snapshot scatter (shard-local) -------------
+        pending = (drained_r.astype(jnp.float32) * np.float32(
+            cfg.per_message_cost) +
+            st["deg"].astype(jnp.float32) * np.float32(cfg.per_pull_cost))
+        snap_idx = carry["snap_idx"]
+        thr = (np.float32(cfg.snapshot_warmup) +
+               snap_idx.astype(jnp.float32) * np.float32(
+                   cfg.snapshot_interval))
+        snap_due = active & (t >= thr) & (snap_idx < self.S)
+        row = jnp.stack([
+            steps.astype(jnp.float32), c_touch.astype(jnp.float32),
+            c_att.astype(jnp.float32), c_ok.astype(jnp.float32),
+            c_drop.astype(jnp.float32), c_laden.astype(jnp.float32),
+            c_msgs.astype(jnp.float32), t], axis=1)
+        snap = carry["snap"].at[
+            jnp.where(snap_due, jnp.arange(m, dtype=jnp.int32), m),
+            snap_idx].set(row, mode="drop")
+        snap_idx = snap_idx + snap_due
+
+        # --- termination / barriers / time advance ------------------------
+        newly_done = active & (t >= np.float32(cfg.duration))
+        done = done | newly_done
+        d_next = (np.float32(cfg.base_compute + cfg.work_units *
+                             cfg.work_unit_cost) *
+                  self._step_factor(seed, steps, pids=st["pids"],
+                                    cfactor=st["cfactor"]))
+        barrier_seq = carry["barrier_seq"]
+        last_release = carry["last_release"]
+        pending_saved = carry["pending"]
+
+        if barriered:
+            if mode == AsyncMode.BARRIER_EVERY_STEP:
+                due = active & ~newly_done
+            elif mode == AsyncMode.ROLLING_BARRIER:
+                due = active & ~newly_done & (
+                    (t - last_release) >= np.float32(cfg.rolling_quantum))
+            else:
+                due = active & ~newly_done & (
+                    t >= (barrier_seq + 1).astype(jnp.float32) *
+                    np.float32(cfg.fixed_interval))
+            waiting = waiting | due
+            pending_saved = jnp.where(due, pending, pending_saved)
+            t = jnp.where(active & ~newly_done & ~due,
+                          t + d_next + pending, t)
+            # global barrier state: exact psum-style scalar reductions
+            g_all = jax.lax.pmin(
+                jnp.all(waiting | done).astype(jnp.int32), SHARD_AXIS)
+            g_any = jax.lax.pmax(
+                jnp.any(waiting).astype(jnp.int32), SHARD_AXIS)
+            release_ready = (g_all > 0) & (g_any > 0)
+            release_t = (jax.lax.pmax(
+                jnp.max(jnp.where(waiting, t, -jnp.inf)), SHARD_AXIS) +
+                np.float32(self._barrier_cost()))
+            rel = release_ready & waiting
+            t = jnp.where(rel, release_t + d_next + pending_saved, t)
+            last_release = jnp.where(rel, release_t, last_release)
+            barrier_seq = barrier_seq + rel
+            waiting = waiting & ~release_ready
+        else:
+            t = jnp.where(active & ~newly_done, t + d_next + pending, t)
+
+        return dict(
+            seed=seed, k=k + 1, t=t, steps=steps, done=done, waiting=waiting,
+            barrier_seq=barrier_seq, last_release=last_release,
+            pending=pending_saved,
+            c_touch=c_touch, c_att=c_att, c_ok=c_ok, c_drop=c_drop,
+            c_laden=c_laden, c_msgs=c_msgs, ptouch=ptouch,
+            q_avail=q_avail, q_touch=q_touch, q_pay=q_pay,
+            q_head=q_head, q_size=q_size,
+            halo=halo, app=app_state, snap=snap, snap_idx=snap_idx)
+
+    # ------------------------------------------------------------------
+    def _get_runner(self):
+        if self._runner is None:
+            def chunk_fn(st, carry):
+                st = jax.tree.map(lambda a: a[0], st)  # (1, ...) -> local
+
+                def one(c):
+                    c, _ = jax.lax.scan(
+                        lambda c, _: (self._sharded_window(st, c), None),
+                        c, None, length=self.chunk)
+                    return c
+                # replicate (seed) axis vmaps INSIDE each shard
+                return jax.vmap(one)(carry)
+
+            sspecs = jax.tree.map(lambda _: P(SHARD_AXIS), self._statics)
+            f = shard_map(chunk_fn, self.mesh, in_specs=(sspecs, self._cspecs),
+                          out_specs=self._cspecs)
+            self._runner = jax.jit(f, donate_argnums=1)
+        return self._runner
+
+    # ------------------------------------------------------------------
+    def run_replicates(self, seeds: Sequence[int]) -> List[SimResult]:
+        """One replicate per seed: a single sharded, vmapped dispatch."""
+        carries = [self._init_carry(int(s)) for s in seeds]
+        carry = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *carries)
+        carry = self._to_sharded_layout(carry)
+        if self._cspecs is None:
+            self._cspecs = self._carry_specs(carry)
+        carry = jax.device_put(carry, jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self._cspecs,
+            is_leaf=lambda x: isinstance(x, P)))
+        if self._statics_sharded is None:
+            self._statics_sharded = jax.device_put(
+                self._statics, jax.tree.map(
+                    lambda _: NamedSharding(self.mesh, P(SHARD_AXIS)),
+                    self._statics))
+        runner = self._get_runner()
+        windows = 0
+        while windows < self._max_windows:
+            carry = runner(self._statics_sharded, carry)
+            windows += self.chunk
+            if bool(jnp.all(carry["done"])):
+                break
+        carry = jax.device_get(carry)
+        carry = self._to_canonical_layout(carry)
+        return [self._assemble(carry, r) for r in range(len(seeds))]

@@ -18,7 +18,10 @@ communication the distribution, not a scalar, is the result.
 Every family runs on either simulation backend (``--engine event`` — the
 discrete-event reference, or ``--engine jax`` — the vectorized windowed-time
 engine, DESIGN.md §7); ``--replicates R`` sweeps R seeds, dispatched as one
-vmapped scan on the jax engine.
+vmapped scan on the jax engine.  ``--shards S`` partitions the population
+over an S-device mesh (DESIGN.md §8) with the seed axis vmapped inside
+each shard; any shard count reproduces the single-device trajectories
+exactly.
 
 CLI::
 
@@ -101,6 +104,11 @@ def _topology_for(args, n: int) -> Topology:
     return make_topology(args.topology, n, **kw)
 
 
+def _engine_kwargs(args) -> dict:
+    """Backend options forwarded to ``make_engine`` (currently --shards)."""
+    return {"shards": args.shards} if args.shards > 1 else {}
+
+
 # ---------------------------------------------------------------------------
 # Families
 # ---------------------------------------------------------------------------
@@ -113,7 +121,8 @@ def run_modes(args) -> List[dict]:
     for mode in AsyncMode:
         app = make_app(args.app, n, args.simels, topo, args.seed)
         res = make_engine(args.engine, app,
-                          _sim_config(args, n, mode=mode)).run()
+                          _sim_config(args, n, mode=mode),
+                          **_engine_kwargs(args)).run()
         dist = _distributions(res)
         row = dict(family="modes", mode=int(mode), n=n,
                    topology=topo.name, engine=args.engine,
@@ -131,7 +140,8 @@ def run_modes(args) -> List[dict]:
 def run_weak_scaling(args) -> List[dict]:
     print(f"[weak_scaling] app={args.app} topology={args.topology} "
           f"simels={args.simels} duration={args.duration}s "
-          f"engine={args.engine} replicates={args.replicates}")
+          f"engine={args.engine} replicates={args.replicates} "
+          f"shards={args.shards}")
     rows = []
     for n in args.procs:
         topo = _topology_for(args, n)
@@ -140,7 +150,8 @@ def run_weak_scaling(args) -> List[dict]:
         results = run_replicates(
             args.engine,
             lambda s: make_app(args.app, n, args.simels, topo, s),
-            cfg, seeds=[args.seed + r for r in range(args.replicates)])
+            cfg, seeds=[args.seed + r for r in range(args.replicates)],
+            **_engine_kwargs(args))
         wall = time.perf_counter() - t0
         # QoS distribution pools (process, window) samples over replicates
         all_qos = [q for res in results for q in res.qos]
@@ -149,6 +160,7 @@ def run_weak_scaling(args) -> List[dict]:
         updates = sum(sum(r.updates) for r in results)
         rows.append(dict(family="weak_scaling", n=n, topology=topo.name,
                          simels=args.simels, engine=args.engine,
+                         shards=args.shards,
                          replicates=args.replicates, rate_per_cpu=rate,
                          wall_seconds=wall, qos=dist))
         print(f"  n={n:<5} ({topo.name}, {updates} updates "
@@ -170,7 +182,8 @@ def run_intensivity(args) -> List[dict]:
         base = args.base_compute * (1 + simels / 160)
         app = make_app(args.app, n, simels, topo, args.seed)
         res = make_engine(args.engine, app,
-                          _sim_config(args, n, base_compute=base)).run()
+                          _sim_config(args, n, base_compute=base),
+                          **_engine_kwargs(args)).run()
         dist = _distributions(res)
         rows.append(dict(family="intensivity", n=n, simels=simels,
                          topology=topo.name, engine=args.engine,
@@ -199,7 +212,7 @@ def run_faults(args) -> List[dict]:
                                                      args.fault_link))):
         app = make_app(args.app, n, args.simels, topo, args.seed)
         res = make_engine(args.engine, app, _sim_config(args, n),
-                          faults).run()
+                          faults, **_engine_kwargs(args)).run()
         groups = {
             "global": res.qos,
             "clique": [q for p in clique for q in res.qos_by_process[p]],
@@ -240,6 +253,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--replicates", type=int, default=1,
                    help="seeds per weak-scaling point (one vmapped "
                         "dispatch on --engine jax)")
+    p.add_argument("--shards", type=int, default=1,
+                   help="partition the population over this many mesh "
+                        "devices (--engine jax; the seed axis vmaps inside "
+                        "each shard).  On CPU set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=S")
     p.add_argument("--topology", default="torus", choices=sorted(TOPOLOGIES))
     p.add_argument("--procs", type=int, nargs="+", default=[64, 256],
                    help="process counts (weak_scaling sweeps them; other "
@@ -269,7 +287,10 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
-    args = build_parser().parse_args(argv)
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.shards > 1 and args.engine != "jax":
+        parser.error("--shards requires --engine jax")
     families = list(FAMILIES) if args.family == "all" else [args.family]
     rows: List[dict] = []
     t0 = time.perf_counter()

@@ -194,6 +194,95 @@ def smallworld(n: int, k: int = 4, chords: int = 2, seed: int = 0,
                    _default_nodes(n, procs_per_node))
 
 
+# ---------------------------------------------------------------------------
+# Shard partitioning (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Contiguous-block partition of a topology's processes over shards.
+
+    ``perm`` is the reordering: position ``pos`` in the flat sharded layout
+    holds original process ``perm[pos]``, and shard ``s`` owns positions
+    ``[s*m, (s+1)*m)`` with ``m = n // n_shards``.  ``cut`` counts directed
+    cross-shard edges — the boundary traffic the sharded engine exchanges
+    per window; everything else stays shard-local.
+    """
+
+    n_shards: int
+    perm: Tuple[int, ...]      # position -> original pid
+    inv: Tuple[int, ...]       # original pid -> position
+    shard_of: Tuple[int, ...]  # original pid -> shard
+    cut: int                   # directed cross-shard edge count
+
+    @property
+    def procs_per_shard(self) -> int:
+        return len(self.perm) // self.n_shards
+
+
+def _cut_size(topo: Topology, order: Sequence[int], m: int) -> int:
+    pos = [0] * topo.n
+    for p_at, pid in enumerate(order):
+        pos[pid] = p_at
+    return sum(1 for src in range(topo.n) for dst in topo.neighbors[src]
+               if pos[src] // m != pos[dst] // m)
+
+
+def _bfs_order(topo: Topology) -> List[int]:
+    """BFS ordering (sorted-neighbor tie-break) — clusters graph
+    neighborhoods into consecutive positions for irregular topologies."""
+    seen = [False] * topo.n
+    order: List[int] = []
+    for root in range(topo.n):
+        if seen[root]:
+            continue
+        seen[root] = True
+        frontier = [root]
+        while frontier:
+            order.extend(frontier)
+            nxt = []
+            for p in frontier:
+                for q in topo.neighbors[p]:
+                    if not seen[q]:
+                        seen[q] = True
+                        nxt.append(q)
+            frontier = nxt
+    return order
+
+
+def contiguous_partition(topo: Topology, n_shards: int) -> ShardPlan:
+    """Partition processes into ``n_shards`` contiguous equal blocks.
+
+    Candidate orderings — identity (the builders' native row-major/clique
+    order, already block-local for ring/torus/cliques) and BFS (clusters
+    irregular graphs) — are scored by directed cross-shard edge count and
+    the thinner cut wins (identity on ties, keeping the sharded layout
+    aligned with the unsharded engine wherever possible).
+
+    Reordering changes nothing about the simulated system — RNG streams
+    and halo-scatter tie-breaks stay keyed by *original* pid / canonical
+    edge id (DESIGN.md §8) — only about which shard owns which process.
+    """
+    n = topo.n
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} must divide the process count n={n}")
+    m = n // n_shards
+    identity = list(range(n))
+    order = identity
+    if n_shards > 1:
+        bfs = _bfs_order(topo)
+        if _cut_size(topo, bfs, m) < _cut_size(topo, identity, m):
+            order = bfs
+    inv = [0] * n
+    for p_at, pid in enumerate(order):
+        inv[pid] = p_at
+    shard_of = tuple(inv[pid] // m for pid in range(n))
+    return ShardPlan(n_shards=n_shards, perm=tuple(order), inv=tuple(inv),
+                     shard_of=shard_of, cut=_cut_size(topo, order, m))
+
+
 TOPOLOGIES = {
     "ring": ring,
     "torus": torus,

@@ -1,0 +1,198 @@
+"""Sharded-engine tests: the sharded-vs-unsharded parity contract.
+
+The mesh-sharded engine (DESIGN.md §8) keys every stochastic draw by
+original pid / canonical edge id and resolves halo-scatter ties by
+canonical edge id, so sharding is a pure layout change: the same
+``(config, seed)`` must agree between 1 shard and 8 shards on **total
+updates exactly** and on median QoS within ``SHARD_PARITY_RTOL`` (in
+practice the trajectories are bitwise identical; the tolerance only
+absorbs float aggregation noise).
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main test
+process keeps a single device, like ``tests/test_core_multidevice.py``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.runtime.engine import make_engine  # noqa: E402
+from repro.runtime.engine_jax import JaxEngine  # noqa: E402
+from repro.runtime.engine_sharded import ShardedJaxEngine  # noqa: E402
+from repro.runtime.simulator import SimConfig  # noqa: E402
+from repro.runtime.topologies import make_topology  # noqa: E402
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: documented sharded-vs-unsharded bound on median QoS (DESIGN.md §8)
+SHARD_PARITY_RTOL = 1e-6
+
+
+def run_md(script: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+_PARITY_HELPERS = textwrap.dedent("""
+    import numpy as np
+    from repro.core.qos import aggregate_reports
+    from repro.runtime.simulator import SimConfig
+    from repro.runtime.engine_jax import JaxEngine
+    from repro.runtime.engine_sharded import ShardedJaxEngine
+    from repro.runtime.topologies import make_topology
+    from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+
+    RTOL = {rtol}
+
+    def gc_app(n, topology):
+        topo = make_topology(topology, n)
+        return GraphColorApp(GraphColorConfig(n_processes=n,
+                                              nodes_per_process=1),
+                             topology=topo)
+
+    def cfgf(dur=0.02, **kw):
+        return SimConfig(duration=dur, snapshot_warmup=dur / 6,
+                         snapshot_interval=dur / 12, **kw)
+
+    def check(label, r1, r8):
+        assert r1.updates == r8.updates, label  # exact, per process
+        assert (r1.sent, r1.dropped) == (r8.sent, r8.dropped), label
+        m1 = aggregate_reports(r1.qos)
+        m8 = aggregate_reports(r8.qos)
+        for metric, stats in m1.items():
+            a, b = stats["median"], m8[metric]["median"]
+            assert (a is None) == (b is None), (label, metric)
+            if a is not None:
+                assert abs(b - a) <= RTOL * max(abs(a), 1e-12), (
+                    label, metric, a, b)
+""").format(rtol=SHARD_PARITY_RTOL)
+
+
+def _app(n, topology="ring"):
+    topo = make_topology(topology, n)
+    return GraphColorApp(
+        GraphColorConfig(n_processes=n, nodes_per_process=1), topology=topo)
+
+
+def _cfg(duration=0.02, **kw):
+    base = dict(duration=duration, snapshot_warmup=duration / 6,
+                snapshot_interval=duration / 12)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Single-device cases (shards=1 mesh): run in-process
+# ---------------------------------------------------------------------------
+def test_one_shard_matches_unsharded_exactly():
+    cfg = _cfg()
+    r_plain = JaxEngine(_app(16), cfg).run()
+    r_shard = ShardedJaxEngine(_app(16), cfg, shards=1).run()
+    assert r_plain.updates == r_shard.updates
+    assert r_plain.sent == r_shard.sent
+    assert r_plain.dropped == r_shard.dropped
+    assert r_plain.quality == r_shard.quality
+    periods1 = sorted(q.simstep_period for q in r_plain.qos)
+    periods8 = sorted(q.simstep_period for q in r_shard.qos)
+    assert periods1 == periods8
+
+
+def test_registry_builds_sharded_engine():
+    eng = make_engine("jax", _app(8), _cfg(0.01), shards=1)
+    assert isinstance(eng, JaxEngine) and not isinstance(eng,
+                                                         ShardedJaxEngine)
+    # shards > available devices: actionable error, not a crash
+    if len(jax.devices()) < 8:
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            make_engine("jax", _app(16), _cfg(0.01), shards=8)
+    with pytest.raises(ValueError, match="event engine"):
+        make_engine("event", _app(16), _cfg(0.01), shards=8)
+
+
+def test_shards_must_divide_population():
+    # the partition check fires before the device-count check, so this
+    # fails the same way on any machine
+    with pytest.raises(ValueError, match="divide"):
+        ShardedJaxEngine(_app(10), _cfg(0.01), shards=4)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device parity (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_sharded_parity_best_effort_and_replicates():
+    out = run_md(_PARITY_HELPERS + textwrap.dedent("""
+        # thin-boundary torus, boundary-heavy ring (half the edges cut),
+        # and the two irregular families (multi-offset ppermute routing)
+        for topology, n in (("ring", 16), ("torus", 64),
+                            ("cliques", 32), ("smallworld", 32)):
+            cfg = cfgf()
+            r1 = JaxEngine(gc_app(n, topology), cfg).run()
+            r8 = ShardedJaxEngine(gc_app(n, topology), cfg, shards=8).run()
+            check(f"{topology}{n}", r1, r8)
+
+        # the replicate axis vmaps inside each shard and stays independent
+        reps1 = JaxEngine(gc_app(16, "ring"), cfgf()).run_replicates(
+            [0, 1, 2])
+        reps8 = ShardedJaxEngine(gc_app(16, "ring"), cfgf(),
+                                 shards=8).run_replicates([0, 1, 2])
+        for i, (a, b) in enumerate(zip(reps1, reps8)):
+            check(f"replicate{i}", a, b)
+        assert len({tuple(r.updates) for r in reps8}) > 1
+        print("PARITY-OK")
+    """))
+    assert "PARITY-OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_parity_barriers_faults_and_evo():
+    out = run_md(_PARITY_HELPERS + textwrap.dedent("""
+        from repro.core.modes import AsyncMode
+        from repro.runtime.faults import FaultModel
+        from repro.apps.evo import EvoApp, EvoConfig
+
+        # barrier release needs exact cross-shard pmin/pmax reductions;
+        # rolling/fixed exercise the last_release / barrier_seq due-logic
+        for mode in (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
+                     AsyncMode.FIXED_BARRIER):
+            # fixed_interval < duration so fixed-barrier releases do fire
+            cfg = cfgf(mode=mode, base_latency=100e-6,
+                       rolling_quantum=0.004, fixed_interval=0.005)
+            r1 = JaxEngine(gc_app(16, "ring"), cfg).run()
+            r8 = ShardedJaxEngine(gc_app(16, "ring"), cfg, shards=8).run()
+            check(str(mode), r1, r8)
+            if mode == AsyncMode.BARRIER_EVERY_STEP:
+                assert max(r8.updates) - min(r8.updates) <= 1  # lockstep
+
+        # faults key compute slowdown by original pid, not shard position
+        cfg = cfgf(buffer_capacity=2, base_latency=20e-6)
+        fm = FaultModel(compute_slowdown={3: 20.0})
+        r1 = JaxEngine(gc_app(16, "ring"), cfg, fm).run()
+        r8 = ShardedJaxEngine(gc_app(16, "ring"), cfg, fm, shards=8).run()
+        check("faults", r1, r8)
+        assert r8.dropped > 0
+
+        # evo exercises the float32-payload bitcast boundary hop
+        topo = make_topology("torus", 16)
+        def evo():
+            return EvoApp(EvoConfig(n_processes=16, cells_per_process=4),
+                          topology=topo)
+        cfg = cfgf()
+        r1 = JaxEngine(evo(), cfg).run()
+        r8 = ShardedJaxEngine(evo(), cfg, shards=8).run()
+        check("evo", r1, r8)
+        assert abs(r1.quality - r8.quality) < 1e-9
+        print("MODES-OK")
+    """))
+    assert "MODES-OK" in out

@@ -9,7 +9,8 @@ from repro.core.modes import AsyncMode
 from repro.runtime.faults import faulty_host
 from repro.runtime.simulator import SimConfig, Simulator
 from repro.runtime.topologies import (
-    TOPOLOGIES, cliques, make_topology, near_square, ring, smallworld, torus,
+    TOPOLOGIES, cliques, contiguous_partition, make_topology, near_square,
+    ring, smallworld, torus,
 )
 
 
@@ -179,6 +180,50 @@ def test_scalar_and_block_fragments_share_semantics():
 # ---------------------------------------------------------------------------
 # Experiments driver (tiny end-to-end)
 # ---------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+# Shard partitioning (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topo,shards", [
+    (ring(64), 8), (torus(64), 8), (torus(64), 4),
+    (cliques(32, 8), 4), (smallworld(64), 8),
+])
+def test_contiguous_partition_invariants(topo, shards):
+    plan = contiguous_partition(topo, shards)
+    n, m = topo.n, topo.n // shards
+    assert sorted(plan.perm) == list(range(n))          # a permutation
+    assert all(plan.perm[plan.inv[p]] == p for p in range(n))
+    # contiguity: shard s owns exactly positions [s*m, (s+1)*m)
+    assert all(plan.shard_of[plan.perm[pos]] == pos // m
+               for pos in range(n))
+    assert plan.procs_per_shard == m
+    # reported cut matches a direct recount of cross-shard directed edges
+    cut = sum(1 for src in range(n) for dst in topo.neighbors[src]
+              if plan.shard_of[src] != plan.shard_of[dst])
+    assert plan.cut == cut
+
+
+def test_contiguous_partition_thin_boundaries():
+    # row-major torus blocks cut only the two block-boundary row pairs:
+    # identity order must be kept and the cut stays O(rows), far below E
+    topo = torus(64)  # 8x8, E = 256 directed
+    plan = contiguous_partition(topo, 8)
+    assert plan.perm == tuple(range(64))
+    assert plan.cut == 128  # 8 rows x 8 cols x 2 dirs: every n/s edge cut
+    plan4 = contiguous_partition(topo, 4)
+    assert plan4.cut == 4 * 8 * 2  # one cut row-pair per block boundary
+    # ring blocks touch only at their two endpoints
+    assert contiguous_partition(ring(64), 8).cut == 2 * 8
+
+
+def test_contiguous_partition_errors_and_identity():
+    with pytest.raises(ValueError):
+        contiguous_partition(ring(10), 4)   # 4 does not divide 10
+    with pytest.raises(ValueError):
+        contiguous_partition(ring(8), 0)
+    plan = contiguous_partition(ring(8), 1)
+    assert plan.perm == tuple(range(8)) and plan.cut == 0
+
+
 def test_experiments_weak_scaling_cli(capsys):
     from repro.runtime.experiments import main
     rows = main(["--family", "weak_scaling", "--topology", "ring",
