@@ -1,0 +1,157 @@
+"""Time-resolved QoS under the self-paced superstep scheduler (DESIGN.md §9).
+
+The paper argues that a complete picture of best-effort scalability needs QoS
+*over time*, not just end-of-run aggregates.  This point measures both halves
+of the superstep claim at the sharded torus point:
+
+  * updates/sec with ``superstep_windows`` W=1 (per-window exchange, the
+    hidden barrier) vs W>1 (one packed ppermute per superstep) — the
+    amortization win, with the analytic collectives-per-window count;
+  * the per-interval QoS stream (``core.qos.aggregate_timeseries``) — median
+    period/latency/failure/clumpiness per snapshot interval, which must stay
+    flat across W.
+
+Run: PYTHONPATH=src:. python benchmarks/bench_qos_timeseries.py \
+         --procs 4096 --shards 8 --superstep 1 8 --force-host-devices 8
+
+Writes ``benchmarks/results/BENCH_qos_timeseries.json``.  CI's multidevice
+job replays a small point (256 procs, 8 shards) and uploads the JSON.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def bench_point(
+    n: int,
+    shards: int,
+    superstep: int,
+    duration: float,
+    topology: str = "torus",
+    qos_interval: float | None = None,
+    warmup: bool = True,
+):
+    from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+    from repro.core.qos import aggregate_reports, aggregate_timeseries
+    from repro.runtime.engine import make_engine
+    from repro.runtime.simulator import SimConfig
+    from repro.runtime.topologies import make_topology
+
+    topo = make_topology(topology, n)
+    app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1), topology=topo)
+    interval = qos_interval if qos_interval else duration / 12
+    cfg = SimConfig(duration=duration, snapshot_warmup=duration / 6, snapshot_interval=interval)
+    kwargs = {"shards": shards} if shards > 1 else {}
+    if superstep > 1:
+        kwargs["superstep_windows"] = superstep
+    eng = make_engine("jax", app, cfg, **kwargs)
+    if warmup:
+        eng.run()  # first run pays jit compilation; the timed run below does not
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    updates = sum(res.updates)
+    # 2 collectives (payload hop + accept hop) per boundary shard-offset per
+    # superstep, amortized over the W windows the superstep advances
+    offsets = len(getattr(eng, "_offsets", ()))
+    return dict(
+        n=n,
+        shards=shards,
+        superstep_windows=superstep,
+        topology=topo.name,
+        duration=duration,
+        qos_interval=interval,
+        warm=bool(warmup),
+        wall_seconds=wall,
+        updates=updates,
+        updates_per_sec=updates / wall,
+        delivery_failure_rate=res.delivery_failure_rate,
+        collectives_per_window=2 * offsets / superstep,
+        qos=aggregate_reports(res.qos),
+        qos_timeseries=aggregate_timeseries(res.qos_by_process.values()),
+    )
+
+
+def run(
+    procs=(4096,),
+    shards: int = 8,
+    supersteps=(1, 8),
+    duration: float = 0.02,
+    topology: str = "torus",
+    qos_interval: float | None = None,
+    warmup: bool = True,
+):
+    from benchmarks.common import emit, save_json
+
+    rows = []
+    for n in procs:
+        for w in supersteps:
+            row = bench_point(n, shards, w, duration, topology, qos_interval, warmup)
+            rows.append(row)
+            emit(
+                f"qos_timeseries/n{n}/s{shards}/w{w}",
+                row["wall_seconds"] * 1e6,
+                f"upd_per_sec={row['updates_per_sec']:.0f} "
+                f"collectives_per_window={row['collectives_per_window']:.2f} "
+                f"intervals={len(row['qos_timeseries'])}",
+            )
+    summary = {}
+    for n in procs:
+        base = next((r for r in rows if r["n"] == n and r["superstep_windows"] == 1), None)
+        best = max(
+            (r for r in rows if r["n"] == n and r["superstep_windows"] > 1),
+            key=lambda r: r["superstep_windows"],
+            default=None,
+        )
+        if base and best:
+            w = best["superstep_windows"]
+            med = lambda r: r["qos"]["simstep_period"]["median"]
+            summary[f"n{n}"] = dict(
+                superstep_windows=w,
+                speedup=best["updates_per_sec"] / base["updates_per_sec"],
+                collective_cut=base["collectives_per_window"]
+                / max(best["collectives_per_window"], 1e-12),
+                median_period_drift=abs(med(best) - med(base)) / med(base),
+            )
+            emit(
+                f"qos_timeseries/summary/n{n}",
+                0.0,
+                f"w{w}_over_w1={summary[f'n{n}']['speedup']:.3f}x "
+                f"collective_cut={summary[f'n{n}']['collective_cut']:.1f}x",
+            )
+    save_json("BENCH_qos_timeseries", {"rows": rows, "summary": summary})
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--procs", type=int, nargs="+", default=[4096])
+    p.add_argument("--shards", type=int, default=8)
+    p.add_argument("--superstep", type=int, nargs="+", default=[1, 8])
+    p.add_argument("--duration", type=float, default=0.02)
+    p.add_argument("--topology", default="torus")
+    p.add_argument("--qos-interval", type=float, default=None)
+    p.add_argument(
+        "--force-host-devices",
+        type=int,
+        default=0,
+        help="set XLA_FLAGS=--xla_force_host_platform_device_count=N before jax initializes",
+    )
+    p.add_argument("--no-warmup", action="store_true")
+    a = p.parse_args()
+    if a.force_host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        extra = f"--xla_force_host_platform_device_count={a.force_host_devices}"
+        os.environ["XLA_FLAGS"] = f"{flags} {extra}".strip()
+    run(
+        tuple(a.procs),
+        a.shards,
+        tuple(a.superstep),
+        a.duration,
+        a.topology,
+        a.qos_interval,
+        not a.no_warmup,
+    )

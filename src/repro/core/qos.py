@@ -43,6 +43,11 @@ class QosReport:
     walltime_latency: float        # seconds per one-way delivery
     delivery_failure_rate: float   # fraction of sends dropped
     delivery_clumpiness: float     # 1 - steadiness
+    # observation-window bounds on the process's own virtual clock; stamp
+    # the report so per-interval (time-resolved) aggregation needs no side
+    # channel back to the engine's snapshot buffers
+    t_start: float = 0.0
+    t_end: float = 0.0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -104,6 +109,8 @@ def report(before: Counters, after: Counters) -> QosReport:
         walltime_latency=walltime_latency(before, after),
         delivery_failure_rate=delivery_failure_rate(before, after),
         delivery_clumpiness=delivery_clumpiness(before, after),
+        t_start=before.wall_time,
+        t_end=after.wall_time,
     )
 
 
@@ -140,3 +147,46 @@ def median_of_process_medians(qos_by_process, metric: str):
     meds = [np.median([getattr(q, metric) for q in reps])
             for reps in qos_by_process.values() if reps]
     return float(np.median(meds)) if meds else None
+
+
+# ---------------------------------------------------------------------------
+# Time-resolved QoS stream: the paper argues that "a complete picture of
+# scalability under the best-effort model requires analysis of how quality
+# of service fares over time" — so beyond pooled (process, window)
+# distributions, expose the per-interval trajectory.
+# ---------------------------------------------------------------------------
+def aggregate_timeseries(process_reports, percentiles=(50, 95)):
+    """Per-interval QoS distributions over processes: the time axis.
+
+    Snapshot thresholds are global (``warmup + i * interval`` on each
+    process's own clock), so the i-th observation window of every process
+    covers the same virtual-time interval; pooling column-wise yields a
+    time-resolved stream instead of one end-of-run aggregate.
+
+    ``process_reports`` is an iterable of per-process report lists — e.g.
+    ``result.qos_by_process.values()``, or those of several replicates
+    chained.  Ragged inputs are fine: a process that produced fewer
+    windows simply stops contributing.  Returns one row per interval::
+
+        {"interval": i, "t_start": ..., "t_end": ..., "n_samples": k,
+         "qos": {metric: {"median": ..., "p95": ...}}}
+
+    where the t bounds are medians over the contributing processes' own
+    snapshot clocks.
+    """
+    columns = []
+    for reps in process_reports:
+        for i, r in enumerate(reps):
+            if i >= len(columns):
+                columns.append([])
+            columns[i].append(r)
+    rows = []
+    for i, bucket in enumerate(columns):
+        rows.append({
+            "interval": i,
+            "t_start": float(np.median([r.t_start for r in bucket])),
+            "t_end": float(np.median([r.t_end for r in bucket])),
+            "n_samples": len(bucket),
+            "qos": aggregate_reports(bucket, percentiles),
+        })
+    return rows

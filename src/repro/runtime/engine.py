@@ -45,9 +45,13 @@ class Engine(Protocol):
 def _make_event(app, cfg: SimConfig, faults: Optional[FaultModel],
                 **kwargs) -> Engine:
     shards = kwargs.pop("shards", 1)
+    superstep = kwargs.pop("superstep_windows", 1)
     if shards and shards > 1:
         raise ValueError("the event engine is single-device; "
                          "--shards requires --engine jax")
+    if superstep and superstep > 1:
+        raise ValueError("the event engine has no superstep scheduler; "
+                         "--superstep-windows requires --engine jax")
     if kwargs:
         raise TypeError(f"unknown engine options {sorted(kwargs)}")
     return Simulator(app, cfg, faults)
@@ -57,9 +61,15 @@ def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel],
               **kwargs) -> Engine:
     # deferred imports: heavy jax machinery
     shards = kwargs.pop("shards", 1)
+    superstep = kwargs.pop("superstep_windows", 1)
     if shards and shards > 1:
         from repro.runtime.engine_sharded import ShardedJaxEngine
-        return ShardedJaxEngine(app, cfg, faults, shards=shards, **kwargs)
+        return ShardedJaxEngine(app, cfg, faults, shards=shards,
+                                superstep_windows=superstep, **kwargs)
+    if superstep and superstep > 1:
+        raise ValueError(
+            "superstep_windows > 1 amortizes cross-shard exchanges and "
+            "needs the sharded engine; pass shards > 1 (--shards)")
     from repro.runtime.engine_jax import JaxEngine
     return JaxEngine(app, cfg, faults, **kwargs)
 
@@ -75,8 +85,10 @@ def make_engine(name: str, app, cfg: SimConfig,
     """Build a registered engine by name.
 
     ``kwargs`` are backend options: the jax engine accepts ``shards`` (> 1
-    builds the mesh-sharded engine, DESIGN.md §8) plus ``max_pops`` /
-    ``chunk``; the event engine accepts none.
+    builds the mesh-sharded engine, DESIGN.md §8), ``superstep_windows``
+    (> 1 enables the self-paced superstep scheduler, DESIGN.md §9; needs
+    ``shards`` > 1) plus ``max_pops`` / ``chunk``; the event engine
+    accepts none.
     """
     try:
         factory = ENGINES[name]

@@ -33,6 +33,25 @@ regardless of shard count: ``--shards 8`` reproduces ``--shards 1``
 trajectories exactly (``tests/test_engine_sharded.py``).  The replicate
 axis vmaps *inside* each shard, composing ``--replicates`` with
 ``--shards``.
+
+Self-paced supersteps (DESIGN.md §9).  The per-window exchange above is a
+hidden barrier: every window, every shard stops at the same ppermute.
+With ``superstep_windows=W`` each shard instead advances W lockstep
+windows *entirely shard-locally* per superstep — fault-injected or
+jittered shards drift behind in virtual time exactly as the paper's
+lac-417 node does — while boundary sends are staged sender-side.  The
+superstep-end window then moves all W windows' boundary traffic in ONE
+packed ppermute per shard offset (and one packed reverse hop for the
+accept bits), cutting the collective count per simulated window by ~W×.
+Staged messages carry their sender-window availability stamps and touch
+counters, so latency/clumpiness QoS is computed from exact virtual-time
+metadata; what W>1 changes is only *when* boundary messages enter the
+receiver's ring (superstep boundaries instead of every window), which
+perturbs drop patterns and per-message handling costs within a documented
+tolerance.  Barrier modes release on superstep-granular pmin/pmax: since
+waiting processes' clocks do not advance, release *times* are unchanged —
+releases just land on superstep boundaries.  ``W=1`` reproduces the
+per-window engine bitwise (same staged values, same operation order).
 """
 from __future__ import annotations
 
@@ -87,13 +106,26 @@ class ShardedJaxEngine(JaxEngine):
     """
 
     def __init__(self, app, cfg, faults=None, *, shards: int,
-                 max_pops: int = 16, chunk: int = 256):
+                 superstep_windows: int = 1, max_pops: int = 16,
+                 chunk: int = 256):
         super().__init__(app, cfg, faults, max_pops=max_pops, chunk=chunk)
         if np.dtype(self.bapp.payload_dtype) not in (np.dtype(np.int32),
                                                      np.dtype(np.float32)):
             raise ValueError(
                 "sharded engine payloads must be int32/float32 (32-bit "
                 f"ppermute packing), got {self.bapp.payload_dtype}")
+        self.superstep = int(superstep_windows)
+        if self.superstep < 1:
+            raise ValueError(
+                f"superstep_windows must be >= 1, got {superstep_windows}")
+        if self.superstep > 1 and cfg.mode in _BARRIER_MODES:
+            # releases land only on superstep boundaries, so up to W-1 idle
+            # windows precede each one — same virtual-time trajectory, more
+            # lockstep windows consumed
+            self._max_windows *= self.superstep
+        self._supersteps_per_dispatch = max(1, chunk // self.superstep)
+        self._windows_per_dispatch = (self._supersteps_per_dispatch *
+                                      self.superstep)
         self.shards = int(shards)
         self.plan = contiguous_partition(self.topo, self.shards)
         self.mesh = make_shard_mesh(self.shards)
@@ -243,187 +275,129 @@ class ShardedJaxEngine(JaxEngine):
         return specs
 
     # ------------------------------------------------------------------
-    # One lockstep window on one shard (m processes, ein edge rows)
+    # Window phases shared by the mid-superstep (shard-local) and the
+    # superstep-end (exchanging) window bodies
     # ------------------------------------------------------------------
-    def _sharded_window(self, st, carry):
-        cfg, m, ein, S = self.cfg, self._m, self._ein, self.shards
-        bapp = self.bapp
-        mode = cfg.mode
-        comm = mode != AsyncMode.NO_COMM
-        barriered = mode in _BARRIER_MODES
+    def _drain_phase(self, st, carry, t_pad, act_pad):
+        """Drain every local ring (they live on their receiver's shard),
+        scatter fresh payloads into halos, update receiver counters."""
+        m, ein = self._m, self._ein
         rows = jnp.arange(ein, dtype=jnp.int32)
-        seed = carry["seed"]
-        k = carry["k"]
-        t = carry["t"]
-        done, waiting = carry["done"], carry["waiting"]
-        active = ~done & ~waiting
+        d = duct_drain(carry["q_avail"], carry["q_touch"],
+                       carry["q_head"], carry["q_size"],
+                       t_pad[st["row_dst"]], act_pad[st["row_dst"]],
+                       max_pops=self.max_pops, clear_popped=False)
+        delivered = d.drained > 0
+        payload = carry["q_pay"][rows, d.pop_pos]
+        # local rows are in ascending canonical order, so the local
+        # segment_max resolves (dst, slot) ties exactly like the
+        # unsharded engine's canonical-id tie-break
+        winner = jax.ops.segment_max(
+            jnp.where(delivered, rows, -1), st["row_halo_key"],
+            num_segments=4 * m + 1)[:4 * m]
+        has_win = winner >= 0
+        fresh = payload[jnp.where(has_win, winner, 0)]
         halo = carry["halo"]
-        drained_r = jnp.zeros(m, jnp.int32)
-        # sentinel-padded per-process vectors: index m = inactive dummy
-        t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
-        act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
+        L = halo.shape[-1]
+        halo = jnp.where(has_win[:, None], fresh,
+                         halo.reshape(m * 4, L)).reshape(m, 4, L)
+        new_touch = d.recv_touch + 1
+        dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+        ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+        recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
+                               dtouch], axis=1)
+        recv_sums = jax.ops.segment_sum(recv_cols, st["row_dst"],
+                                        num_segments=m + 1)[:m]
+        return dict(
+            halo=halo, ptouch=ptouch, drained_r=recv_sums[:, 0],
+            c_msgs=carry["c_msgs"] + recv_sums[:, 0],
+            c_laden=carry["c_laden"] + recv_sums[:, 1],
+            c_touch=carry["c_touch"] + recv_sums[:, 2],
+            q_avail=d.q_avail, q_touch=d.q_touch,
+            q_head=d.head, q_size=d.size)
 
-        if comm:
-            # --- 1. drain: every ring lives on its receiver's shard -------
-            d = duct_drain(carry["q_avail"], carry["q_touch"],
-                           carry["q_head"], carry["q_size"],
-                           t_pad[st["row_dst"]], act_pad[st["row_dst"]],
-                           max_pops=self.max_pops, clear_popped=False)
-            delivered = d.drained > 0
-            payload = carry["q_pay"][rows, d.pop_pos]
-            # local rows are in ascending canonical order, so the local
-            # segment_max resolves (dst, slot) ties exactly like the
-            # unsharded engine's canonical-id tie-break
-            winner = jax.ops.segment_max(
-                jnp.where(delivered, rows, -1), st["row_halo_key"],
-                num_segments=4 * m + 1)[:4 * m]
-            has_win = winner >= 0
-            fresh = payload[jnp.where(has_win, winner, 0)]
-            L = halo.shape[-1]
-            halo = jnp.where(has_win[:, None], fresh,
-                             halo.reshape(m * 4, L)).reshape(m, 4, L)
-            new_touch = d.recv_touch + 1
-            dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
-            ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
-            recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
-                                   dtouch], axis=1)
-            recv_sums = jax.ops.segment_sum(recv_cols, st["row_dst"],
-                                            num_segments=m + 1)[:m]
-            drained_r = recv_sums[:, 0]
-            c_msgs = carry["c_msgs"] + drained_r
-            c_laden = carry["c_laden"] + recv_sums[:, 1]
-            c_touch = carry["c_touch"] + recv_sums[:, 2]
-            q_avail, q_touch = d.q_avail, d.q_touch
-            q_head, q_size = d.head, d.size
-        else:
-            ptouch = carry["ptouch"]
-            c_touch, c_laden, c_msgs = (carry["c_touch"], carry["c_laden"],
-                                        carry["c_msgs"])
-            q_avail, q_touch = carry["q_avail"], carry["q_touch"]
-            q_head, q_size = carry["q_head"], carry["q_size"]
-
-        # --- 2. the application's actual batched compute ------------------
-        new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
-                                         seed, pids=st["pids"])
+    def _compute_phase(self, st, carry, active, halo):
+        """The application's actual batched compute, masked by activity."""
+        m = self._m
+        new_state, edges_out = self.bapp.step(carry["app"], halo,
+                                              carry["steps"], carry["seed"],
+                                              pids=st["pids"])
         app_state = jax.tree_util.tree_map(
             lambda new, old: jnp.where(
                 active.reshape((m,) + (1,) * (new.ndim - 1)), new, old),
             new_state, carry["app"])
-        steps = carry["steps"] + active
+        return app_state, edges_out, carry["steps"] + active
 
-        if comm:
-            # --- 3a. interior send inputs (same-shard src) ----------------
-            eo_pad = jnp.concatenate(
-                [edges_out, jnp.zeros((1,) + edges_out.shape[1:],
-                                      edges_out.dtype)])
-            ptouch_pad = jnp.concatenate([ptouch, jnp.zeros(1, jnp.int32)])
+    def _stage_offsets(self, st, t_pad, act_pad, eo_pad, ptouch_pad,
+                       seed, k):
+        """Sender-side staging of this window's boundary sends: one packed
+        ``(bd, L+3)`` i32 buffer per shard offset — payload bits, then the
+        availability stamp ``t_src + latency``, the reverse-edge touch
+        counter, and the sender-active bit.  Stamps are drawn NOW, at the
+        sender's window, so a batched exchange at the superstep boundary
+        still delivers exact virtual-time metadata (latency/clumpiness QoS
+        is computed from these stamps, not from arrival windows)."""
+        cfg = self.cfg
+        staged = {}
+        for off in self._offsets:
+            b = st["bnd"][str(off)]
             # latency draws keyed by canonical edge id: identical to the
             # unsharded engine's per-edge stream
-            lat_row = st["row_lat"] * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
-            x_pay = eo_pad[st["row_src"], st["row_out_slot"]]
-            x_avail = t_pad[st["row_src"]] + lat_row
-            x_act = act_pad[st["row_src"]] & st["row_interior"]
-            x_tch = ptouch_pad[st["row_rev"]]
+            lat_b = b["snd_lat"] * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, b["snd_canon"], k)
+            pay_b = eo_pad[b["snd_src"], b["snd_oslot"]]
+            avail_b = t_pad[b["snd_src"]] + lat_b
+            att_b = act_pad[b["snd_src"]]
+            tch_b = ptouch_pad[b["snd_rev"]]
+            staged[str(off)] = jnp.concatenate([
+                _bits_i32(pay_b),
+                _bits_i32(avail_b)[:, None],
+                tch_b[:, None],
+                att_b[:, None].astype(jnp.int32)], axis=1)
+        return staged
 
-            # --- 3b. boundary payload hop: one packed ppermute/offset -----
-            sent_meta = []
-            pay_dtype = edges_out.dtype
-            for off in self._offsets:
-                b = st["bnd"][str(off)]
-                lat_b = b["snd_lat"] * lognormal_factor(
-                    cfg.latency_sigma, seed, STREAM_LAT, b["snd_canon"], k)
-                pay_b = eo_pad[b["snd_src"], b["snd_oslot"]]
-                avail_b = t_pad[b["snd_src"]] + lat_b
-                att_b = act_pad[b["snd_src"]]
-                tch_b = ptouch_pad[b["snd_rev"]]
-                buf = jnp.concatenate([
-                    _bits_i32(pay_b),
-                    _bits_i32(avail_b)[:, None],
-                    tch_b[:, None],
-                    att_b[:, None].astype(jnp.int32)], axis=1)
-                buf = jax.lax.ppermute(
-                    buf, SHARD_AXIS,
-                    [(i, (i + off) % S) for i in range(S)])
-                Lp = pay_b.shape[1]
-                rr = b["rcv_row"]  # pad entries carry the ein sentinel
-                x_pay = x_pay.at[rr].set(
-                    _from_bits(buf[:, :Lp], pay_dtype), mode="drop")
-                x_avail = x_avail.at[rr].set(
-                    _from_bits(buf[:, Lp], jnp.float32), mode="drop")
-                x_tch = x_tch.at[rr].set(buf[:, Lp + 1], mode="drop")
-                x_act = x_act.at[rr].set(buf[:, Lp + 2].astype(bool),
-                                         mode="drop")
-                sent_meta.append((off, b, att_b))
+    def _close_window(self, st, u, active, drained_r, *, release: bool):
+        """QoS snapshot + termination / barrier / time advance.
 
-            # --- 3c. local send attempt (drop iff full) -------------------
-            s = duct_send(q_avail, q_touch, q_head, q_size,
-                          x_avail, x_act, jnp.float32(0.0), x_tch,
-                          capacity=cfg.buffer_capacity)
-            q_pay = carry["q_pay"].at[
-                jnp.where(s.accepted, rows, ein), s.push_pos].set(
-                x_pay, mode="drop")
-            q_avail, q_touch, q_size = s.q_avail, s.q_touch, s.size
-            # interior send counters (boundary rows carry the m sentinel in
-            # row_src, so their contributions drop into the spare segment)
-            send_cols = jnp.stack([
-                x_act.astype(jnp.int32),
-                (x_act & s.accepted).astype(jnp.int32),
-                (x_act & ~s.accepted).astype(jnp.int32)], axis=1)
-            send_sums = jax.ops.segment_sum(send_cols, st["row_src"],
-                                            num_segments=m + 1)[:m]
-
-            # --- 3d. boundary accept hop: bits back to the source shard ---
-            acc_pad = jnp.concatenate([s.accepted, jnp.zeros(1, bool)])
-            for off, b, att_b in sent_meta:
-                acc_back = jax.lax.ppermute(
-                    acc_pad[b["rcv_row"]].astype(jnp.int32), SHARD_AXIS,
-                    [(i, (i - off) % S) for i in range(S)])
-                ok_b = acc_back.astype(bool)
-                cols_b = jnp.stack([
-                    att_b.astype(jnp.int32),
-                    (att_b & ok_b).astype(jnp.int32),
-                    (att_b & ~ok_b).astype(jnp.int32)], axis=1)
-                send_sums = send_sums + jax.ops.segment_sum(
-                    cols_b, b["snd_src"], num_segments=m + 1)[:m]
-
-            c_att = carry["c_att"] + send_sums[:, 0]
-            c_ok = carry["c_ok"] + send_sums[:, 1]
-            c_drop = carry["c_drop"] + send_sums[:, 2]
-        else:
-            q_pay = carry["q_pay"]
-            c_att, c_ok, c_drop = (carry["c_att"], carry["c_ok"],
-                                   carry["c_drop"])
-
-        # --- 4. QoS counters + snapshot scatter (shard-local) -------------
+        ``release=False`` (mid-superstep windows) skips the cross-shard
+        pmin/pmax release check — waiting processes stay waiting until the
+        superstep boundary.  Their clocks do not advance while waiting, so
+        the release *time* computed at the boundary is identical; only the
+        lockstep window it lands on moves.
+        """
+        cfg, m = self.cfg, self._m
+        mode = cfg.mode
+        barriered = mode in _BARRIER_MODES
+        t, steps = u["t"], u["steps"]
+        done, waiting = u["done"], u["waiting"]
         pending = (drained_r.astype(jnp.float32) * np.float32(
             cfg.per_message_cost) +
             st["deg"].astype(jnp.float32) * np.float32(cfg.per_pull_cost))
-        snap_idx = carry["snap_idx"]
+        snap_idx = u["snap_idx"]
         thr = (np.float32(cfg.snapshot_warmup) +
                snap_idx.astype(jnp.float32) * np.float32(
                    cfg.snapshot_interval))
         snap_due = active & (t >= thr) & (snap_idx < self.S)
         row = jnp.stack([
-            steps.astype(jnp.float32), c_touch.astype(jnp.float32),
-            c_att.astype(jnp.float32), c_ok.astype(jnp.float32),
-            c_drop.astype(jnp.float32), c_laden.astype(jnp.float32),
-            c_msgs.astype(jnp.float32), t], axis=1)
-        snap = carry["snap"].at[
+            steps.astype(jnp.float32), u["c_touch"].astype(jnp.float32),
+            u["c_att"].astype(jnp.float32), u["c_ok"].astype(jnp.float32),
+            u["c_drop"].astype(jnp.float32),
+            u["c_laden"].astype(jnp.float32),
+            u["c_msgs"].astype(jnp.float32), t], axis=1)
+        snap = u["snap"].at[
             jnp.where(snap_due, jnp.arange(m, dtype=jnp.int32), m),
             snap_idx].set(row, mode="drop")
         snap_idx = snap_idx + snap_due
 
-        # --- termination / barriers / time advance ------------------------
         newly_done = active & (t >= np.float32(cfg.duration))
         done = done | newly_done
         d_next = (np.float32(cfg.base_compute + cfg.work_units *
                              cfg.work_unit_cost) *
-                  self._step_factor(seed, steps, pids=st["pids"],
+                  self._step_factor(u["seed"], steps, pids=st["pids"],
                                     cfactor=st["cfactor"]))
-        barrier_seq = carry["barrier_seq"]
-        last_release = carry["last_release"]
-        pending_saved = carry["pending"]
+        barrier_seq = u["barrier_seq"]
+        last_release = u["last_release"]
+        pending_saved = u["pending"]
 
         if barriered:
             if mode == AsyncMode.BARRIER_EVERY_STEP:
@@ -439,43 +413,243 @@ class ShardedJaxEngine(JaxEngine):
             pending_saved = jnp.where(due, pending, pending_saved)
             t = jnp.where(active & ~newly_done & ~due,
                           t + d_next + pending, t)
-            # global barrier state: exact psum-style scalar reductions
-            g_all = jax.lax.pmin(
-                jnp.all(waiting | done).astype(jnp.int32), SHARD_AXIS)
-            g_any = jax.lax.pmax(
-                jnp.any(waiting).astype(jnp.int32), SHARD_AXIS)
-            release_ready = (g_all > 0) & (g_any > 0)
-            release_t = (jax.lax.pmax(
-                jnp.max(jnp.where(waiting, t, -jnp.inf)), SHARD_AXIS) +
-                np.float32(self._barrier_cost()))
-            rel = release_ready & waiting
-            t = jnp.where(rel, release_t + d_next + pending_saved, t)
-            last_release = jnp.where(rel, release_t, last_release)
-            barrier_seq = barrier_seq + rel
-            waiting = waiting & ~release_ready
+            if release:
+                # global barrier state: exact psum-style scalar reductions,
+                # once per superstep
+                g_all = jax.lax.pmin(
+                    jnp.all(waiting | done).astype(jnp.int32), SHARD_AXIS)
+                g_any = jax.lax.pmax(
+                    jnp.any(waiting).astype(jnp.int32), SHARD_AXIS)
+                release_ready = (g_all > 0) & (g_any > 0)
+                release_t = (jax.lax.pmax(
+                    jnp.max(jnp.where(waiting, t, -jnp.inf)), SHARD_AXIS) +
+                    np.float32(self._barrier_cost()))
+                rel = release_ready & waiting
+                t = jnp.where(rel, release_t + d_next + pending_saved, t)
+                last_release = jnp.where(rel, release_t, last_release)
+                barrier_seq = barrier_seq + rel
+                waiting = waiting & ~release_ready
         else:
             t = jnp.where(active & ~newly_done, t + d_next + pending, t)
 
-        return dict(
-            seed=seed, k=k + 1, t=t, steps=steps, done=done, waiting=waiting,
-            barrier_seq=barrier_seq, last_release=last_release,
-            pending=pending_saved,
-            c_touch=c_touch, c_att=c_att, c_ok=c_ok, c_drop=c_drop,
-            c_laden=c_laden, c_msgs=c_msgs, ptouch=ptouch,
-            q_avail=q_avail, q_touch=q_touch, q_pay=q_pay,
-            q_head=q_head, q_size=q_size,
-            halo=halo, app=app_state, snap=snap, snap_idx=snap_idx)
+        out = dict(u)
+        out.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
+                   barrier_seq=barrier_seq, last_release=last_release,
+                   pending=pending_saved, snap=snap, snap_idx=snap_idx)
+        return out
+
+    # ------------------------------------------------------------------
+    # Window bodies
+    # ------------------------------------------------------------------
+    def _local_window(self, st, carry):
+        """One mid-superstep lockstep window: entirely shard-local.
+
+        Interior edges exchange through their (local) rings as usual;
+        boundary sends are packed into per-offset staging buffers and
+        returned for the superstep scan to stack.  No collectives run, so
+        each shard advances at its own jittered pace — fault-injected
+        shards simply fall behind in virtual time.
+        """
+        cfg, m, ein = self.cfg, self._m, self._ein
+        comm = cfg.mode != AsyncMode.NO_COMM
+        rows = jnp.arange(ein, dtype=jnp.int32)
+        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        active = ~carry["done"] & ~carry["waiting"]
+        # sentinel-padded per-process vectors: index m = inactive dummy
+        t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
+        act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
+        u = dict(carry)
+        drained_r = jnp.zeros(m, jnp.int32)
+        staged = {}
+        if comm:
+            dr = self._drain_phase(st, carry, t_pad, act_pad)
+            drained_r = dr.pop("drained_r")
+            u.update(dr)
+        app_state, edges_out, steps = self._compute_phase(
+            st, carry, active, u["halo"])
+        u.update(app=app_state, steps=steps)
+        if comm:
+            eo_pad = jnp.concatenate(
+                [edges_out, jnp.zeros((1,) + edges_out.shape[1:],
+                                      edges_out.dtype)])
+            ptouch_pad = jnp.concatenate([u["ptouch"],
+                                          jnp.zeros(1, jnp.int32)])
+            staged = self._stage_offsets(st, t_pad, act_pad, eo_pad,
+                                         ptouch_pad, seed, k)
+            # interior-only send attempt (drop iff full)
+            lat_row = st["row_lat"] * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
+            x_act = act_pad[st["row_src"]] & st["row_interior"]
+            s = duct_send(u["q_avail"], u["q_touch"], u["q_head"],
+                          u["q_size"], t_pad[st["row_src"]] + lat_row,
+                          x_act, jnp.float32(0.0),
+                          ptouch_pad[st["row_rev"]],
+                          capacity=cfg.buffer_capacity)
+            u["q_pay"] = carry["q_pay"].at[
+                jnp.where(s.accepted, rows, ein), s.push_pos].set(
+                eo_pad[st["row_src"], st["row_out_slot"]], mode="drop")
+            u.update(q_avail=s.q_avail, q_touch=s.q_touch, q_size=s.size)
+            send_cols = jnp.stack([
+                x_act.astype(jnp.int32),
+                (x_act & s.accepted).astype(jnp.int32),
+                (x_act & ~s.accepted).astype(jnp.int32)], axis=1)
+            send_sums = jax.ops.segment_sum(send_cols, st["row_src"],
+                                            num_segments=m + 1)[:m]
+            u.update(c_att=carry["c_att"] + send_sums[:, 0],
+                     c_ok=carry["c_ok"] + send_sums[:, 1],
+                     c_drop=carry["c_drop"] + send_sums[:, 2])
+        return self._close_window(st, u, active, drained_r,
+                                  release=False), staged
+
+    def _final_window(self, st, carry, stage_mid):
+        """The superstep-end window: the only one that talks to peers.
+
+        All staged boundary windows (plus this window's own) move in ONE
+        packed ppermute per shard offset; the receiver pushes them into its
+        rings in sender-window order (drop iff full per push, FIFO
+        preserved), and the accept bits return in one packed reverse
+        ppermute per offset so sender-side attempted/ok/dropped counters
+        stay exact.  With ``superstep_windows=1`` this is operation-for-
+        operation the per-window exchange engine.
+        """
+        cfg, m, ein, S = self.cfg, self._m, self._ein, self.shards
+        W = self.superstep
+        comm = cfg.mode != AsyncMode.NO_COMM
+        rows = jnp.arange(ein, dtype=jnp.int32)
+        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        active = ~carry["done"] & ~carry["waiting"]
+        t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
+        act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
+        u = dict(carry)
+        drained_r = jnp.zeros(m, jnp.int32)
+        if comm:
+            dr = self._drain_phase(st, carry, t_pad, act_pad)
+            drained_r = dr.pop("drained_r")
+            u.update(dr)
+        app_state, edges_out, steps = self._compute_phase(
+            st, carry, active, u["halo"])
+        u.update(app=app_state, steps=steps)
+        if comm:
+            pay_dtype = edges_out.dtype
+            Lp = self.bapp.payload_len
+            eo_pad = jnp.concatenate(
+                [edges_out, jnp.zeros((1,) + edges_out.shape[1:],
+                                      edges_out.dtype)])
+            ptouch_pad = jnp.concatenate([u["ptouch"],
+                                          jnp.zeros(1, jnp.int32)])
+            own = self._stage_offsets(st, t_pad, act_pad, eo_pad,
+                                      ptouch_pad, seed, k)
+            # --- payload hop: ONE packed ppermute per offset for all W ----
+            staged_l, staged_r = {}, {}
+            for off in self._offsets:
+                key = str(off)
+                full = (own[key][None] if stage_mid is None else
+                        jnp.concatenate([stage_mid[key], own[key][None]],
+                                        axis=0))
+                staged_l[key] = full     # sender-local copy: the att bits
+                staged_r[key] = jax.lax.ppermute(
+                    full, SHARD_AXIS,
+                    [(i, (i + off) % S) for i in range(S)])
+
+            # interior send inputs for THIS window
+            lat_row = st["row_lat"] * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
+            int_pay = eo_pad[st["row_src"], st["row_out_slot"]]
+            int_avail = t_pad[st["row_src"]] + lat_row
+            int_act = act_pad[st["row_src"]] & st["row_interior"]
+            int_tch = ptouch_pad[st["row_rev"]]
+
+            # --- W push passes in sender-window order (FIFO per ring).
+            # Boundary rows push staged window j in pass j; interior rows
+            # push their current message in the last pass (their own
+            # window).  Rings are single-writer, so the row sets are
+            # disjoint and pass composition is exact.
+            q_avail, q_touch = u["q_avail"], u["q_touch"]
+            q_head, q_size = u["q_head"], u["q_size"]
+            q_pay = carry["q_pay"]
+            acc = {str(off): [] for off in self._offsets}
+            send_sums = jnp.zeros((m, 3), jnp.int32)
+            for j in range(W):
+                last = j == W - 1
+                x_pay = int_pay if last else jnp.zeros_like(int_pay)
+                x_avail = int_avail if last else jnp.zeros_like(int_avail)
+                x_act = int_act if last else jnp.zeros(ein, bool)
+                x_tch = int_tch if last else jnp.zeros(ein, jnp.int32)
+                for off in self._offsets:
+                    b = st["bnd"][str(off)]
+                    buf = staged_r[str(off)][j]
+                    rr = b["rcv_row"]  # pad entries carry the ein sentinel
+                    x_pay = x_pay.at[rr].set(
+                        _from_bits(buf[:, :Lp], pay_dtype), mode="drop")
+                    x_avail = x_avail.at[rr].set(
+                        _from_bits(buf[:, Lp], jnp.float32), mode="drop")
+                    x_tch = x_tch.at[rr].set(buf[:, Lp + 1], mode="drop")
+                    x_act = x_act.at[rr].set(buf[:, Lp + 2].astype(bool),
+                                             mode="drop")
+                s = duct_send(q_avail, q_touch, q_head, q_size,
+                              x_avail, x_act, jnp.float32(0.0), x_tch,
+                              capacity=cfg.buffer_capacity)
+                q_pay = q_pay.at[
+                    jnp.where(s.accepted, rows, ein), s.push_pos].set(
+                    x_pay, mode="drop")
+                q_avail, q_touch, q_size = s.q_avail, s.q_touch, s.size
+                acc_pad = jnp.concatenate([s.accepted, jnp.zeros(1, bool)])
+                for off in self._offsets:
+                    acc[str(off)].append(
+                        acc_pad[st["bnd"][str(off)]["rcv_row"]])
+                if last:
+                    # interior counters (boundary rows carry the m sentinel
+                    # in row_src: their contributions drop into the spare
+                    # segment)
+                    send_cols = jnp.stack([
+                        x_act.astype(jnp.int32),
+                        (x_act & s.accepted).astype(jnp.int32),
+                        (x_act & ~s.accepted).astype(jnp.int32)], axis=1)
+                    send_sums = jax.ops.segment_sum(
+                        send_cols, st["row_src"], num_segments=m + 1)[:m]
+            u.update(q_avail=q_avail, q_touch=q_touch, q_size=q_size,
+                     q_pay=q_pay)
+
+            # --- accept hop: ONE packed reverse ppermute per offset -------
+            for off in self._offsets:
+                b = st["bnd"][str(off)]
+                acc_back = jax.lax.ppermute(
+                    jnp.stack(acc[str(off)]).astype(jnp.int32), SHARD_AXIS,
+                    [(i, (i - off) % S) for i in range(S)])
+                att = staged_l[str(off)][:, :, Lp + 2].astype(bool)
+                ok = acc_back.astype(bool)
+                cols_b = jnp.stack([
+                    att.astype(jnp.int32).sum(0),
+                    (att & ok).astype(jnp.int32).sum(0),
+                    (att & ~ok).astype(jnp.int32).sum(0)], axis=1)
+                send_sums = send_sums + jax.ops.segment_sum(
+                    cols_b, b["snd_src"], num_segments=m + 1)[:m]
+            u.update(c_att=carry["c_att"] + send_sums[:, 0],
+                     c_ok=carry["c_ok"] + send_sums[:, 1],
+                     c_drop=carry["c_drop"] + send_sums[:, 2])
+        return self._close_window(st, u, active, drained_r, release=True)
 
     # ------------------------------------------------------------------
     def _get_runner(self):
         if self._runner is None:
+            W = self.superstep
+
             def chunk_fn(st, carry):
                 st = jax.tree.map(lambda a: a[0], st)  # (1, ...) -> local
 
+                def superstep(c, _):
+                    if W > 1:
+                        c, stage_mid = jax.lax.scan(
+                            lambda cc, __: self._local_window(st, cc),
+                            c, None, length=W - 1)
+                    else:
+                        stage_mid = None
+                    return self._final_window(st, c, stage_mid), None
+
                 def one(c):
                     c, _ = jax.lax.scan(
-                        lambda c, _: (self._sharded_window(st, c), None),
-                        c, None, length=self.chunk)
+                        superstep, c, None,
+                        length=self._supersteps_per_dispatch)
                     return c
                 # replicate (seed) axis vmaps INSIDE each shard
                 return jax.vmap(one)(carry)
@@ -506,7 +680,7 @@ class ShardedJaxEngine(JaxEngine):
         windows = 0
         while windows < self._max_windows:
             carry = runner(self._statics_sharded, carry)
-            windows += self.chunk
+            windows += self._windows_per_dispatch
             if bool(jnp.all(carry["done"])):
                 break
         carry = jax.device_get(carry)

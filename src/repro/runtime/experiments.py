@@ -21,7 +21,10 @@ engine, DESIGN.md §7); ``--replicates R`` sweeps R seeds, dispatched as one
 vmapped scan on the jax engine.  ``--shards S`` partitions the population
 over an S-device mesh (DESIGN.md §8) with the seed axis vmapped inside
 each shard; any shard count reproduces the single-device trajectories
-exactly.
+exactly.  ``--superstep-windows W`` lets each shard run W windows between
+exchanges (one packed ppermute per superstep, DESIGN.md §9; W=1 is
+bitwise-identical), and ``--qos-interval`` pins the snapshot spacing of
+the time-resolved ``qos_timeseries`` every row carries.
 
 CLI::
 
@@ -39,7 +42,7 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.modes import AsyncMode
-from repro.core.qos import METRICS, aggregate_reports
+from repro.core.qos import METRICS, aggregate_reports, aggregate_timeseries
 from repro.runtime.engine import ENGINES, make_engine, run_replicates
 from repro.runtime.faults import faulty_host
 from repro.runtime.simulator import SimConfig
@@ -68,9 +71,11 @@ def make_app(name: str, n: int, simels: int, topology: Optional[Topology],
 
 def _sim_config(args, n: int, mode: AsyncMode = AsyncMode.BEST_EFFORT,
                 **overrides) -> SimConfig:
-    # windows shrink with the horizon so every scale yields >= ~6 windows
+    # windows shrink with the horizon so every scale yields >= ~6 windows;
+    # --qos-interval pins the snapshot spacing instead (time-resolved QoS)
     warmup = args.duration / 6
-    interval = args.duration / 12
+    interval = (args.qos_interval if args.qos_interval
+                else args.duration / 12)
     base = dict(mode=mode, duration=args.duration,
                 base_compute=args.base_compute,
                 base_latency=args.base_latency,
@@ -105,8 +110,14 @@ def _topology_for(args, n: int) -> Topology:
 
 
 def _engine_kwargs(args) -> dict:
-    """Backend options forwarded to ``make_engine`` (currently --shards)."""
-    return {"shards": args.shards} if args.shards > 1 else {}
+    """Backend options forwarded to ``make_engine``
+    (--shards / --superstep-windows)."""
+    kw = {}
+    if args.shards > 1:
+        kw["shards"] = args.shards
+    if args.superstep_windows > 1:
+        kw["superstep_windows"] = args.superstep_windows
+    return kw
 
 
 # ---------------------------------------------------------------------------
@@ -141,7 +152,7 @@ def run_weak_scaling(args) -> List[dict]:
     print(f"[weak_scaling] app={args.app} topology={args.topology} "
           f"simels={args.simels} duration={args.duration}s "
           f"engine={args.engine} replicates={args.replicates} "
-          f"shards={args.shards}")
+          f"shards={args.shards} superstep={args.superstep_windows}")
     rows = []
     for n in args.procs:
         topo = _topology_for(args, n)
@@ -156,15 +167,22 @@ def run_weak_scaling(args) -> List[dict]:
         # QoS distribution pools (process, window) samples over replicates
         all_qos = [q for res in results for q in res.qos]
         dist = aggregate_reports(all_qos, percentiles=PERCENTILES)
+        # time-resolved stream: interval i pools every replicate's
+        # processes' i-th observation window
+        series = aggregate_timeseries(
+            [reps for res in results for reps in res.qos_by_process.values()],
+            percentiles=PERCENTILES)
         rate = sum(r.update_rate_per_cpu for r in results) / len(results)
         updates = sum(sum(r.updates) for r in results)
         rows.append(dict(family="weak_scaling", n=n, topology=topo.name,
                          simels=args.simels, engine=args.engine,
                          shards=args.shards,
+                         superstep_windows=args.superstep_windows,
                          replicates=args.replicates, rate_per_cpu=rate,
-                         wall_seconds=wall, qos=dist))
+                         wall_seconds=wall, qos=dist,
+                         qos_timeseries=series))
         print(f"  n={n:<5} ({topo.name}, {updates} updates "
-              f"in {wall:.1f}s wall)")
+              f"in {wall:.1f}s wall, {len(series)} QoS intervals)")
         _print_distributions(dist)
     return rows
 
@@ -219,10 +237,19 @@ def run_faults(args) -> List[dict]:
             "rest": [q for p in range(n) if p not in clique
                      for q in res.qos_by_process[p]],
         }
+        by_proc = {
+            "global": list(res.qos_by_process.values()),
+            "clique": [res.qos_by_process[p] for p in sorted(clique)],
+            "rest": [res.qos_by_process[p] for p in range(n)
+                     if p not in clique],
+        }
         row = dict(family="faults", label=label, n=n, topology=topo.name,
                    faulty_host=host, engine=args.engine,
                    qos={g: aggregate_reports(reps, PERCENTILES)
-                        for g, reps in groups.items()})
+                        for g, reps in groups.items()},
+                   qos_timeseries={
+                       g: aggregate_timeseries(reps, PERCENTILES)
+                       for g, reps in by_proc.items()})
         rows.append(row)
         print(f"  {label}:")
         for g in ("global", "clique", "rest"):
@@ -258,6 +285,18 @@ def build_parser() -> argparse.ArgumentParser:
                         "devices (--engine jax; the seed axis vmaps inside "
                         "each shard).  On CPU set XLA_FLAGS="
                         "--xla_force_host_platform_device_count=S")
+    p.add_argument("--superstep-windows", type=int, default=1,
+                   help="windows each shard advances per superstep "
+                        "(self-paced scheduler, DESIGN.md §9): boundary "
+                        "traffic batches into one packed ppermute per "
+                        "superstep, cutting the collective count ~W x.  "
+                        "1 = per-window exchange (bitwise-identical "
+                        "trajectories); needs --shards > 1")
+    p.add_argument("--qos-interval", type=float, default=None,
+                   help="QoS snapshot spacing in virtual seconds for the "
+                        "time-resolved stream (default: duration/12); "
+                        "rows carry a qos_timeseries with per-interval "
+                        "distributions")
     p.add_argument("--topology", default="torus", choices=sorted(TOPOLOGIES))
     p.add_argument("--procs", type=int, nargs="+", default=[64, 256],
                    help="process counts (weak_scaling sweeps them; other "
@@ -291,6 +330,13 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     args = parser.parse_args(argv)
     if args.shards > 1 and args.engine != "jax":
         parser.error("--shards requires --engine jax")
+    if args.superstep_windows < 1:
+        parser.error("--superstep-windows must be >= 1")
+    if args.superstep_windows > 1 and args.shards <= 1:
+        parser.error("--superstep-windows > 1 requires --shards > 1 "
+                     "(it amortizes cross-shard exchanges)")
+    if args.qos_interval is not None and args.qos_interval <= 0:
+        parser.error("--qos-interval must be positive")
     families = list(FAMILIES) if args.family == "all" else [args.family]
     rows: List[dict] = []
     t0 = time.perf_counter()

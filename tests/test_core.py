@@ -78,7 +78,36 @@ def test_report_bundle():
     r = qos.report(b, a)
     assert set(r.as_dict()) == {"simstep_period", "simstep_latency",
                                 "walltime_latency", "delivery_failure_rate",
-                                "delivery_clumpiness"}
+                                "delivery_clumpiness", "t_start", "t_end"}
+    # the observation-window bounds ride along for the time-resolved stream
+    assert (r.t_start, r.t_end) == (b.wall_time, a.wall_time)
+
+
+def test_aggregate_timeseries_pools_interval_columns():
+    def reports(periods):
+        # one report per interval, with simstep_period == updates' inverse
+        out = []
+        for i, per in enumerate(periods):
+            b = _counters(update_count=i * 10, wall_time=i * per * 10)
+            a = _counters(update_count=(i + 1) * 10,
+                          wall_time=(i + 1) * per * 10)
+            out.append(qos.report(b, a))
+        return out
+
+    # two processes with three intervals, one straggler with a single one
+    series = qos.aggregate_timeseries([
+        reports([1.0, 2.0, 3.0]),
+        reports([3.0, 4.0, 5.0]),
+        reports([10.0]),
+    ])
+    assert [row["interval"] for row in series] == [0, 1, 2]
+    assert [row["n_samples"] for row in series] == [3, 2, 2]
+    # interval 1 pools only the two full processes: median of (2, 4)
+    assert series[1]["qos"]["simstep_period"]["median"] == pytest.approx(3.0)
+    # time bounds are medians of the contributing processes' own clocks
+    assert series[0]["t_start"] == 0.0
+    assert series[1]["t_end"] == pytest.approx(
+        (2 * 2.0 * 10 + 2 * 4.0 * 10) / 2)
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: documented sharded-vs-unsharded bound on median QoS (DESIGN.md §8)
 SHARD_PARITY_RTOL = 1e-6
 
+#: documented superstep (W>1) bound on median QoS vs W=1 (DESIGN.md §9):
+#: batching boundary deliveries to superstep boundaries perturbs drop
+#: patterns and per-message handling costs, never the virtual-time stamps
+SUPERSTEP_QOS_RTOL = 0.15
+
 
 def run_md(script: str):
     env = dict(os.environ)
@@ -127,6 +132,27 @@ def test_shards_must_divide_population():
         ShardedJaxEngine(_app(10), _cfg(0.01), shards=4)
 
 
+def test_superstep_requires_sharded_jax_engine():
+    with pytest.raises(ValueError, match="shards"):
+        make_engine("jax", _app(8), _cfg(0.01), superstep_windows=8)
+    with pytest.raises(ValueError, match="superstep"):
+        make_engine("event", _app(8), _cfg(0.01), superstep_windows=8)
+    with pytest.raises(ValueError, match=">= 1"):
+        ShardedJaxEngine(_app(8), _cfg(0.01), shards=1, superstep_windows=0)
+
+
+def test_superstep_one_shard_is_exact():
+    # with one shard every edge is interior: nothing is staged, so any W
+    # must reproduce the W=1 trajectories exactly
+    cfg = _cfg()
+    r_plain = JaxEngine(_app(16), cfg).run()
+    r_w4 = ShardedJaxEngine(_app(16), cfg, shards=1,
+                            superstep_windows=4).run()
+    assert r_plain.updates == r_w4.updates
+    assert (r_plain.sent, r_plain.dropped) == (r_w4.sent, r_w4.dropped)
+    assert r_plain.quality == r_w4.quality
+
+
 # ---------------------------------------------------------------------------
 # Multi-device parity (8 forced host devices, subprocess)
 # ---------------------------------------------------------------------------
@@ -196,3 +222,90 @@ def test_sharded_parity_barriers_faults_and_evo():
         print("MODES-OK")
     """))
     assert "MODES-OK" in out
+
+
+@pytest.mark.slow
+def test_superstep_parity_and_amortization():
+    """Acceptance contract for the self-paced superstep scheduler:
+
+    - W=1 reproduces the unsharded trajectories bitwise across all 4
+      topologies AND under fault injection (same helpers as the per-window
+      parity tests: exact per-process updates, sent/dropped, medians);
+    - W=8 stays within SUPERSTEP_QOS_RTOL on median QoS with matching
+      total updates;
+    - the traced collective count per superstep does not grow with W, so
+      collectives per *window* drop by ~W x;
+    - barrier modes release on superstep-granular reductions without
+      changing update counts (waiting clocks freeze).
+    """
+    snippet = _PARITY_HELPERS + f"\nW_RTOL = {SUPERSTEP_QOS_RTOL}\n"
+    out = run_md(snippet + textwrap.dedent("""
+        import jax
+        from repro.core.modes import AsyncMode
+        from repro.runtime.faults import FaultModel
+
+        def median_close(ra, rb, label):
+            ma, mb = aggregate_reports(ra.qos), aggregate_reports(rb.qos)
+            for metric, stats in ma.items():
+                a, b = stats["median"], mb[metric]["median"]
+                assert (a is None) == (b is None), (label, metric)
+                if a is not None:
+                    assert abs(b - a) <= W_RTOL * max(abs(a), 1e-9), (
+                        label, metric, a, b)
+
+        calls = [0]
+        real = jax.lax.ppermute
+        def counting(*a, **k):
+            calls[0] += 1
+            return real(*a, **k)
+        jax.lax.ppermute = counting
+
+        for topology, n in (("ring", 16), ("torus", 64),
+                            ("cliques", 32), ("smallworld", 32)):
+            cfg = cfgf()
+            r1 = JaxEngine(gc_app(n, topology), cfg).run()
+            calls[0] = 0
+            rw1 = ShardedJaxEngine(gc_app(n, topology), cfg, shards=8,
+                                   superstep_windows=1).run()
+            c1 = calls[0]
+            check(f"{topology}{n}-W1", r1, rw1)
+            calls[0] = 0
+            rw8 = ShardedJaxEngine(gc_app(n, topology), cfg, shards=8,
+                                   superstep_windows=8).run()
+            c8 = calls[0]
+            # same collectives per traced superstep while covering 8x the
+            # windows: the ~W x amortization
+            assert c8 == c1 and c1 > 0, (topology, c1, c8)
+            du = (abs(sum(rw8.updates) - sum(r1.updates))
+                  / max(sum(r1.updates), 1))
+            assert du < 0.01, (topology, du)
+            median_close(r1, rw8, topology)
+        jax.lax.ppermute = real
+
+        # fault injection: W=1 exact, W=8 within tolerance.  Paper-scale
+        # latency (the default 500us ~ 30 windows) keeps the 8-window
+        # superstep span below the wire latency, where amortization is
+        # QoS-neutral (DESIGN.md 9)
+        fm = FaultModel(compute_slowdown={3: 20.0})
+        cfg = cfgf()
+        r1 = JaxEngine(gc_app(16, "ring"), cfg, fm).run()
+        rw1 = ShardedJaxEngine(gc_app(16, "ring"), cfg, fm, shards=8,
+                               superstep_windows=1).run()
+        check("faults-W1", r1, rw1)
+        rw8 = ShardedJaxEngine(gc_app(16, "ring"), cfg, fm, shards=8,
+                               superstep_windows=8).run()
+        median_close(r1, rw8, "faults-W8")
+
+        # barrier releases land on superstep boundaries but release TIMES
+        # are computed from frozen waiting clocks: update counts stay equal
+        for mode in (AsyncMode.BARRIER_EVERY_STEP,
+                     AsyncMode.ROLLING_BARRIER):
+            cfg = cfgf(mode=mode, base_latency=100e-6,
+                       rolling_quantum=0.004)
+            r1 = JaxEngine(gc_app(16, "ring"), cfg).run()
+            rw4 = ShardedJaxEngine(gc_app(16, "ring"), cfg, shards=8,
+                                   superstep_windows=4).run()
+            assert r1.updates == rw4.updates, mode
+        print("SUPERSTEP-OK")
+    """))
+    assert "SUPERSTEP-OK" in out
