@@ -3,13 +3,19 @@
 The acceptance gate for the vectorized engine (DESIGN.md §7): the
 4096-process torus weak-scaling point must complete >= 10x faster than the
 discrete-event engine on the same machine, while total simulated updates
-agree within 2%.
+agree within 2%.  The dense duct layout (DESIGN.md §10) adds a second
+gate: at the same 4096-process torus point, ``--layout dense`` must reach
+>= 1.3x the updates/sec of ``--layout edge`` in the same run, with update
+counts agreeing bitwise.
 
 Run: PYTHONPATH=src:. python benchmarks/bench_engines.py \
-         [--procs 256 1024 4096] [--engines event jax] [--duration 0.05]
+         [--procs 256 1024 4096] [--engines event jax] [--duration 0.05] \
+         [--layout edge dense]
 
-Sharded points (DESIGN.md §8) partition the population over a device mesh;
-on CPU, force host devices before jax initializes:
+``--layout`` takes one or more layouts; each jax point runs once per
+layout (the event engine has no layout axis and runs once).  Sharded
+points (DESIGN.md §8) partition the population over a device mesh; on
+CPU, force host devices before jax initializes:
 
     PYTHONPATH=src:. python benchmarks/bench_engines.py \
         --engines jax --procs 65536 --shards 8 --force-host-devices 8 \
@@ -20,8 +26,9 @@ single-device engine tops out around 16k before window dispatches dominate).
 
 Writes ``benchmarks/results/BENCH_engines.json`` (benchmarks/report.py
 conventions: CSV-ish stdout via ``emit``, JSON artifact via ``save_json``).
-CI's perf job replays the small 256-process jax point and compares
-updates/sec against the checked-in JSON via ``check_regression.py``.
+CI's perf job replays the small 256-process jax point per layout and
+compares updates/sec against the checked-in JSON via ``check_regression.py``
+(points key on engine/n/shards/layout).
 Event-engine points above ``--event-cap`` processes are skipped by default
 because they take minutes; pass a larger cap to measure the full matrix.
 """
@@ -35,7 +42,8 @@ PROC_COUNTS = (256, 1024, 4096)
 
 
 def bench_point(engine: str, n: int, duration: float, topology: str,
-                shards: int = 1, warmup: bool = False):
+                shards: int = 1, warmup: bool = False,
+                layout: str = "auto"):
     from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
     from repro.runtime.engine import make_engine
     from repro.runtime.simulator import SimConfig
@@ -46,7 +54,11 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
                         topology=topo)
     cfg = SimConfig(duration=duration, snapshot_warmup=duration / 6,
                     snapshot_interval=duration / 12)
-    kwargs = {"shards": shards} if shards > 1 else {}
+    kwargs = {}
+    if shards > 1:
+        kwargs["shards"] = shards
+    if engine == "jax" and layout != "auto":
+        kwargs["layout"] = layout
     eng = make_engine(engine, app, cfg, **kwargs)
     if warmup and engine == "jax":
         # first run pays jit compilation; the timed run below reuses the
@@ -57,7 +69,10 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
     res = eng.run()
     wall = time.perf_counter() - t0
     updates = sum(res.updates)
+    resolved = getattr(eng, "layout", "event")
     return dict(engine=engine, n=n, shards=shards, topology=topo.name,
+                layout=layout if engine == "jax" else "event",
+                resolved_layout=resolved,
                 duration=duration, warm=bool(warmup and engine == "jax"),
                 wall_seconds=wall, updates=updates,
                 updates_per_sec=updates / wall,
@@ -66,7 +81,8 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
 
 def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
         duration: float = 0.05, topology: str = "torus",
-        event_cap: int = 1024, shards: int = 1, warmup: bool = False):
+        event_cap: int = 1024, shards: int = 1, warmup: bool = False,
+        layouts=("auto",)):
     from benchmarks.common import emit, save_json
 
     rows = []
@@ -78,29 +94,53 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
                      "the event engine needs minutes at this scale)")
                 continue
             point_shards = shards if engine == "jax" else 1
-            row = bench_point(engine, n, duration, topology, point_shards,
-                              warmup)
-            rows.append(row)
-            tag = f"engines/{engine}/n{n}" + (
-                f"/s{point_shards}" if point_shards > 1 else "")
-            emit(tag, row["wall_seconds"] * 1e6,
-                 f"updates={row['updates']} "
-                 f"upd_per_sec={row['updates_per_sec']:.0f} "
-                 f"fail={row['delivery_failure_rate']:.3f}")
-    # speedup summary wherever both engines ran the same point
+            point_layouts = layouts if engine == "jax" else ("event",)
+            for layout in point_layouts:
+                row = bench_point(engine, n, duration, topology,
+                                  point_shards, warmup, layout)
+                rows.append(row)
+                tag = f"engines/{engine}/n{n}" + (
+                    f"/s{point_shards}" if point_shards > 1 else "") + (
+                    f"/{layout}" if engine == "jax" else "")
+                emit(tag, row["wall_seconds"] * 1e6,
+                     f"updates={row['updates']} "
+                     f"upd_per_sec={row['updates_per_sec']:.0f} "
+                     f"fail={row['delivery_failure_rate']:.3f}")
     summary = {}
     for n in proc_counts:
+        # event-vs-jax speedup wherever both engines ran the same point;
+        # with several layouts benched, the jax side is chosen by a fixed
+        # preference (auto, then edge, then dense) — independent of the
+        # --layout CLI order — and recorded in the summary
         ev = next((r for r in rows
                    if r["engine"] == "event" and r["n"] == n), None)
-        jx = next((r for r in rows
-                   if r["engine"] == "jax" and r["n"] == n), None)
+        jx = next((r for pick in ("auto", "edge", "dense") for r in rows
+                   if r["engine"] == "jax" and r["n"] == n
+                   and r["layout"] == pick), None)
         if ev and jx:
             summary[f"n{n}"] = dict(
                 speedup=ev["wall_seconds"] / jx["wall_seconds"],
+                jax_layout=jx["layout"],
                 updates_agree=abs(jx["updates"] - ev["updates"])
                 <= 0.02 * ev["updates"])
             emit(f"engines/speedup/n{n}", 0.0,
-                 f"jax_over_event={summary[f'n{n}']['speedup']:.1f}x")
+                 f"jax_over_event={summary[f'n{n}']['speedup']:.1f}x "
+                 f"(jax layout {jx['layout']})")
+        # dense-vs-edge layout speedup in the same run (DESIGN.md §10 gate:
+        # >= 1.3x at the 4096-proc torus point, update counts bitwise)
+        de = next((r for r in rows if r["engine"] == "jax"
+                   and r["n"] == n and r["layout"] == "dense"), None)
+        ed = next((r for r in rows if r["engine"] == "jax"
+                   and r["n"] == n and r["layout"] == "edge"), None)
+        if de and ed:
+            summary[f"n{n}_dense_over_edge"] = dict(
+                speedup=de["updates_per_sec"] / ed["updates_per_sec"],
+                updates_agree=de["updates"] == ed["updates"])
+            emit(f"engines/layout_speedup/n{n}", 0.0,
+                 f"dense_over_edge="
+                 f"{summary[f'n{n}_dense_over_edge']['speedup']:.2f}x "
+                 f"updates_bitwise="
+                 f"{summary[f'n{n}_dense_over_edge']['updates_agree']}")
     save_json("BENCH_engines", {"rows": rows, "summary": summary})
     return rows
 
@@ -116,6 +156,11 @@ if __name__ == "__main__":
                    help="skip event-engine points above this process count")
     p.add_argument("--shards", type=int, default=1,
                    help="device-mesh shards for the jax engine points")
+    p.add_argument("--layout", nargs="+", default=["auto"],
+                   choices=["auto", "dense", "edge"],
+                   help="duct layouts to bench per jax point (DESIGN.md "
+                        "§10); pass 'edge dense' to measure the dense-"
+                        "layout speedup in one run")
     p.add_argument("--force-host-devices", type=int, default=0,
                    help="set XLA_FLAGS=--xla_force_host_platform_device_"
                         "count=N (must run before jax initializes devices)")
@@ -129,4 +174,4 @@ if __name__ == "__main__":
             f"{flags} --xla_force_host_platform_device_count="
             f"{a.force_host_devices}").strip()
     run(tuple(a.procs), tuple(a.engines), a.duration, a.topology,
-        a.event_cap, a.shards, a.warmup)
+        a.event_cap, a.shards, a.warmup, tuple(a.layout))

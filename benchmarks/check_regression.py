@@ -2,10 +2,13 @@
 
 Compares a freshly measured ``BENCH_engines.json`` against the checked-in
 baseline (``benchmarks/results/BENCH_engines.json``): for every
-``(engine, n, shards)`` point present in BOTH files, the fresh
+``(engine, n, shards, layout)`` point present in BOTH files, the fresh
 ``updates_per_sec`` must be at least ``(1 - tolerance)`` of the baseline.
-Points only present on one side are reported and skipped, so the baseline
-can carry a wider matrix than a quick CI replay.
+The layout component uses each row's *resolved* duct layout (DESIGN.md
+§10), so default ``--layout auto`` replays compare against the explicit
+edge/dense baseline points.  Points only present on one side are reported
+and skipped, so the baseline can carry a wider matrix than a quick CI
+replay.
 
 The tolerance is deliberately generous (default 40%): the baseline is
 recorded on a developer machine while CI replays on shared runners, so
@@ -35,7 +38,23 @@ def _points(path: str) -> dict:
     with open(path) as f:
         data = json.load(f)
     rows = data["rows"] if isinstance(data, dict) else data
-    return {(r["engine"], r["n"], r.get("shards", 1)): r for r in rows}
+    # layout joined the point key with the dense duct layout (DESIGN.md
+    # §10).  Key on the RESOLVED layout so a default `--layout auto` run
+    # still shares points with a baseline recorded via explicit layouts
+    # (auto resolves to dense on the bench torus); rows from pre-layout
+    # baselines key as "auto" and simply stop being shared once replaced.
+    points = {}
+    for r in rows:
+        key = (r["engine"], r["n"], r.get("shards", 1),
+               r.get("resolved_layout", r.get("layout", "auto")))
+        if key in points:
+            # e.g. a run benching both "auto" and the layout it resolves
+            # to — keep the later row, but say so instead of silently
+            # dropping a measurement from the comparison
+            print(f"  note {key}: duplicate resolved point in {path}; "
+                  "keeping the last row")
+        points[key] = r
+    return points
 
 
 def check(baseline_path: str, fresh_path: str,
@@ -44,8 +63,8 @@ def check(baseline_path: str, fresh_path: str,
     fresh = _points(fresh_path)
     shared = sorted(set(base) & set(fresh))
     if not shared:
-        print("check_regression: no shared (engine, n, shards) points "
-              f"between {baseline_path} and {fresh_path}")
+        print("check_regression: no shared (engine, n, shards, layout) "
+              f"points between {baseline_path} and {fresh_path}")
         return 2
     for key in sorted(set(base) - set(fresh)):
         print(f"  skip {key}: baseline-only point")
@@ -58,8 +77,8 @@ def check(baseline_path: str, fresh_path: str,
         status = "OK" if f >= floor else "REGRESSION"
         if f < floor:
             failures += 1
-        engine, n, shards = key
-        print(f"  {status:<10} {engine}/n{n}/s{shards}: "
+        engine, n, shards, layout = key
+        print(f"  {status:<10} {engine}/n{n}/s{shards}/{layout}: "
               f"{metric} fresh={f:.0f} baseline={b:.0f} "
               f"floor={floor:.0f} ({f / b:.2f}x)")
     if failures:

@@ -1,7 +1,13 @@
 from repro.kernels.duct_exchange.ops import (  # noqa: F401
+    dense_halo_select,
     duct_drain,
     duct_exchange,
     duct_exchange_jnp,
     duct_send,
+    duct_window,
+    duct_window_jnp,
 )
-from repro.kernels.duct_exchange.ref import duct_exchange_ref  # noqa: F401
+from repro.kernels.duct_exchange.ref import (  # noqa: F401
+    duct_exchange_ref,
+    duct_window_ref,
+)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.duct_exchange.ops import dense_halo_select
+
 _BLOCK_EDGES = 256
 
 # jax renamed TPUCompilerParams -> CompilerParams across releases
@@ -74,6 +76,122 @@ def _duct_kernel(qa_ref, qt_ref, head_ref, size_ref,
     pop_pos_out[...] = pop_pos
     accepted_out[...] = acc.astype(jnp.int32)
     push_pos_out[...] = push_pos
+
+
+def _window_kernel(qa_ref, qt_ref, qp_ref, head_ref, size_ref,
+                   ppos_ref, pacc_ref, pav_ref, ptch_ref, ppay_ref,
+                   rnow_ref, ract_ref,
+                   qa_out, qt_out, qp_out, head_out, size_out,
+                   drained_out, rtouch_out, hpay_out, hwin_out,
+                   *, max_pops: int):
+    """Fused dense-layout window: push-apply -> drain -> halo-select, one
+    VMEM-resident sweep over a block of receivers' (d, C) ring tiles.
+
+    The push phase only applies sends the engine already accepted (the
+    drop-iff-full decision and occupancy bump happened eagerly at stage
+    time), so the whole window's ring-state HBM traffic is this single
+    read-modify-write pass.
+    """
+    qa = qa_ref[...]                 # (B, d, C) availability times
+    qt = qt_ref[...]                 # (B, d, C) touch stamps
+    qp = qp_ref[...]                 # (B, d, C, L) payloads
+    head = head_ref[...]             # (B, d)
+    size = size_ref[...]             # (B, d) — staged pushes already counted
+    ppos, pacc = ppos_ref[...], pacc_ref[...]
+    pav, ptch, ppay = pav_ref[...], ptch_ref[...], ppay_ref[...]
+    rnow, ract = rnow_ref[...], ract_ref[...]   # (B, 1)
+    B, d, C = qa.shape
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (B, d, C), dimension=2)
+    # --- push: masked writes at the staged slots --------------------------
+    at = (pacc > 0)[:, :, None] & (col == ppos[:, :, None])
+    qa = jnp.where(at, pav[:, :, None], qa)
+    qt = jnp.where(at, ptch[:, :, None], qt)
+    qp = jnp.where(at[..., None], ppay[:, :, None, :], qp)
+    # --- drain: longest available FIFO prefix, head-blocking, bounded -----
+    off = (col - head[:, :, None]) % C
+    valid = off < size[:, :, None]
+    blocked = valid & (qa > rnow[:, :, None])
+    blocked_off = jnp.min(jnp.where(blocked, off, C), axis=2)
+    dr = jnp.minimum(jnp.minimum(blocked_off, size), max_pops)
+    dr = jnp.where(ract > 0, dr, 0)
+    popped = valid & (off < dr[:, :, None])
+    fresh = popped & (off == dr[:, :, None] - 1)
+    rtouch = jnp.sum(jnp.where(fresh, qt, 0), axis=2)
+    fpay = jnp.sum(jnp.where(fresh[..., None], qp,
+                             jnp.zeros((), qp.dtype)), axis=2)  # (B, d, L)
+    qa = jnp.where(popped, jnp.inf, qa)
+    # --- halo select: the shared ascending-j unrolled select --------------
+    hpay, hwin = dense_halo_select(dr > 0, fpay)
+
+    qa_out[...] = qa
+    qt_out[...] = qt
+    qp_out[...] = qp
+    head_out[...] = (head + dr) % C
+    size_out[...] = size - dr
+    drained_out[...] = dr
+    rtouch_out[...] = rtouch
+    hpay_out[...] = hpay
+    hwin_out[...] = hwin.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_pops", "interpret"))
+def duct_window_kernel(q_avail, q_touch, q_pay, head, size,
+                       push_pos, push_acc, push_avail, push_touch, push_pay,
+                       recv_now, recv_active,
+                       *, max_pops: int, interpret: bool = False):
+    """Fused window megakernel over all receivers.  Returns the same tuple
+    layout as ``ops.WindowResult`` (halo_win as bool)."""
+    n, d, C = q_avail.shape
+    L = q_pay.shape[-1]
+    B = max(1, min(_BLOCK_EDGES // max(d, 1), n))
+    pad = (-n) % B
+    nb = (n + pad) // B
+
+    def prep(x, dtype, tail=()):
+        x = jnp.asarray(x, dtype).reshape((n,) + tail)
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * len(tail))
+
+    args = (prep(q_avail, jnp.float32, (d, C)),
+            prep(q_touch, jnp.int32, (d, C)),
+            prep(q_pay, q_pay.dtype, (d, C, L)),
+            prep(head, jnp.int32, (d,)), prep(size, jnp.int32, (d,)),
+            prep(push_pos, jnp.int32, (d,)),
+            prep(push_acc, jnp.int32, (d,)),
+            prep(push_avail, jnp.float32, (d,)),
+            prep(push_touch, jnp.int32, (d,)),
+            prep(push_pay, q_pay.dtype, (d, L)),
+            prep(recv_now, jnp.float32, (1,)),
+            prep(recv_active, jnp.int32, (1,)))
+
+    spec = lambda *tail: pl.BlockSpec((B,) + tail,  # noqa: E731
+                                      lambda i: (i,) + (0,) * len(tail))
+    out = pl.pallas_call(
+        functools.partial(_window_kernel, max_pops=max_pops),
+        grid=(nb,),
+        in_specs=[spec(d, C), spec(d, C), spec(d, C, L), spec(d), spec(d),
+                  spec(d), spec(d), spec(d), spec(d), spec(d, L),
+                  spec(1), spec(1)],
+        out_specs=[spec(d, C), spec(d, C), spec(d, C, L), spec(d), spec(d),
+                   spec(d), spec(d), spec(4, L), spec(4)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad, d, C), jnp.float32),
+            jax.ShapeDtypeStruct((n + pad, d, C), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad, d, C, L), q_pay.dtype),
+            jax.ShapeDtypeStruct((n + pad, d), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad, d), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad, d), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad, d), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad, 4, L), q_pay.dtype),
+            jax.ShapeDtypeStruct((n + pad, 4), jnp.int32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    qa2, qt2, qp2, head2, size2, drained, rtouch, hpay, hwin = out
+    return (qa2[:n], qt2[:n], qp2[:n], head2[:n], size2[:n], drained[:n],
+            rtouch[:n], hpay[:n], hwin[:n].astype(bool))
 
 
 @functools.partial(jax.jit,

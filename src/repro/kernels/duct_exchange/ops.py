@@ -117,6 +117,121 @@ def _auto_interpret(interpret):
     return interpret
 
 
+# ---------------------------------------------------------------------------
+# Fused dense-layout window megakernel (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+class WindowResult(NamedTuple):
+    q_avail: jax.Array     # (n, d, C)
+    q_touch: jax.Array     # (n, d, C)
+    q_pay: jax.Array       # (n, d, C, L)
+    head: jax.Array        # (n, d)
+    size: jax.Array        # (n, d)
+    drained: jax.Array     # (n, d) i32 messages popped
+    recv_touch: jax.Array  # (n, d) i32 touch of freshest popped (0 if none)
+    halo_pay: jax.Array    # (n, 4, L) freshest payload per halo slot
+    halo_win: jax.Array    # (n, 4) bool: slot refreshed this window
+
+
+def dense_halo_select(delivered, payload):
+    """Per-receiver halo merge for the dense layout: slot ``s`` takes the
+    payload of the highest delivering row ``j`` with ``j % 4 == s``.
+
+    Rows are in sorted-source order, which for a fixed receiver is
+    canonical-edge-id order, so "highest j wins" reproduces the edge-major
+    path's segment_max tie-break as a d-step unrolled select — no scatter.
+    ``delivered``: (n, d) bool; ``payload``: (n, d, L).  Returns
+    ``(halo_pay (n, 4, L), halo_win (n, 4))``.
+    """
+    n, d = delivered.shape
+    L = payload.shape[-1]
+    pay_cols, win_cols = [], []
+    for s in range(4):
+        pay_s = jnp.zeros((n, L), payload.dtype)
+        win_s = jnp.zeros((n,), bool)
+        for j in range(s, d, 4):
+            pay_s = jnp.where(delivered[:, j, None], payload[:, j], pay_s)
+            win_s = win_s | delivered[:, j]
+        pay_cols.append(pay_s)
+        win_cols.append(win_s)
+    return jnp.stack(pay_cols, axis=1), jnp.stack(win_cols, axis=1)
+
+
+def duct_window_jnp(q_avail, q_touch, q_pay, head, size,
+                    push_pos, push_acc, push_avail, push_touch, push_pay,
+                    recv_now, recv_active,
+                    *, max_pops: int) -> WindowResult:
+    """jnp twin of the fused window op: push-apply -> drain -> halo-select.
+
+    Same contract as ``ref.duct_window_ref``: the push phase only *applies*
+    sends the caller already accepted (drop-iff-full and the slot position
+    were decided eagerly at stage time, and ``size`` counts them), then the
+    drain pops the longest available FIFO prefix per ring via the lane
+    formulation (blocked-offset row-min — gather-free, the same shape of
+    work the Pallas kernel does), and the freshest payloads merge into the
+    (n, 4, L) halo with ascending-row selects.
+    """
+    n, d, C = q_avail.shape
+    L = q_pay.shape[-1]
+    R = n * d
+    qa = q_avail.reshape(R, C)
+    qt = q_touch.reshape(R, C)
+    qp = q_pay.reshape(R, C, L)
+    head_f = head.reshape(R)
+    size_f = size.reshape(R)
+    col = jnp.arange(C, dtype=jnp.int32)[None, :]
+    # --- push: masked writes at the staged slots ----------------------
+    at = push_acc.reshape(R)[:, None] & (col == push_pos.reshape(R)[:, None])
+    qa = jnp.where(at, push_avail.reshape(R)[:, None], qa)
+    qt = jnp.where(at, push_touch.reshape(R)[:, None], qt)
+    qp = jnp.where(at[:, :, None], push_pay.reshape(R, 1, L), qp)
+    # --- drain: longest available FIFO prefix, head-blocking, bounded --
+    off = (col - head_f[:, None]) % C
+    valid = off < size_f[:, None]
+    rnow = jnp.broadcast_to(recv_now[:, None], (n, d)).reshape(R)
+    ract = jnp.broadcast_to(recv_active[:, None], (n, d)).reshape(R)
+    blocked = valid & (qa > rnow[:, None])
+    blocked_off = jnp.min(jnp.where(blocked, off, C), axis=1)
+    dr = jnp.minimum(jnp.minimum(blocked_off, size_f), max_pops)
+    dr = jnp.where(ract, dr, 0).astype(jnp.int32)
+    popped = valid & (off < dr[:, None])
+    fresh = popped & (off == dr[:, None] - 1)
+    recv_touch = jnp.sum(jnp.where(fresh, qt, 0), axis=1)
+    fresh_pay = jnp.sum(jnp.where(fresh[:, :, None], qp,
+                                  jnp.zeros((), qp.dtype)), axis=1)
+    qa = jnp.where(popped, jnp.inf, qa)
+    head2 = (head_f + dr) % C
+    size2 = size_f - dr
+    halo_pay, halo_win = dense_halo_select(
+        (dr > 0).reshape(n, d), fresh_pay.reshape(n, d, L))
+    return WindowResult(
+        qa.reshape(n, d, C), qt.reshape(n, d, C), qp.reshape(n, d, C, L),
+        head2.reshape(n, d), size2.reshape(n, d), dr.reshape(n, d),
+        recv_touch.reshape(n, d), halo_pay, halo_win)
+
+
+def duct_window(q_avail, q_touch, q_pay, head, size,
+                push_pos, push_acc, push_avail, push_touch, push_pay,
+                recv_now, recv_active,
+                *, max_pops: int,
+                use_pallas: bool = None,
+                interpret=None) -> WindowResult:
+    """Backend dispatch for the fused window op: Pallas megakernel on TPU
+    (one VMEM-resident sweep per receiver block), jnp twin elsewhere."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return duct_window_jnp(
+            q_avail, q_touch, q_pay, head, size,
+            push_pos, push_acc, push_avail, push_touch, push_pay,
+            recv_now, recv_active, max_pops=max_pops)
+    from repro.kernels.duct_exchange.kernel import duct_window_kernel
+    return WindowResult(*duct_window_kernel(
+        q_avail, q_touch, q_pay, head, size,
+        push_pos, push_acc, push_avail, push_touch, push_pay,
+        recv_now, recv_active, max_pops=max_pops,
+        interpret=_auto_interpret(interpret)))
+
+
 def duct_exchange(q_avail, q_touch, head, size,
                   recv_now, recv_active,
                   send_now, send_active, send_lat, send_touch,

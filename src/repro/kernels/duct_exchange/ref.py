@@ -71,3 +71,80 @@ def duct_exchange_ref(q_avail, q_touch, head, size,
                 accepted[e] = True
     return ExchangeResult(q_avail, q_touch, head, size, drained,
                           recv_touch, pop_pos, accepted, push_pos)
+
+
+class WindowResult(NamedTuple):
+    q_avail: np.ndarray    # (n, d, C) availability times
+    q_touch: np.ndarray    # (n, d, C) touch stamps
+    q_pay: np.ndarray      # (n, d, C, L) payloads
+    head: np.ndarray       # (n, d) FIFO head slot
+    size: np.ndarray       # (n, d) occupancy (push already counted by caller)
+    drained: np.ndarray    # (n, d) messages popped this window
+    recv_touch: np.ndarray  # (n, d) touch of the freshest popped (0 if none)
+    halo_pay: np.ndarray   # (n, 4, L) freshest payload per halo slot
+    halo_win: np.ndarray   # (n, 4) bool: slot refreshed this window
+
+
+def duct_window_ref(q_avail, q_touch, q_pay, head, size,
+                    push_pos, push_acc, push_avail, push_touch, push_pay,
+                    recv_now, recv_active,
+                    *, max_pops: int) -> WindowResult:
+    """Oracle for the fused dense-layout window op (DESIGN.md §10).
+
+    One lockstep window over a degree-regular receiver-major layout:
+    receiver ``p`` owns rows ``(p, 0..d-1)``, its in-edge rings in
+    sorted-source (= canonical edge id) order.  Three fused phases:
+
+      push    apply the *previous* window's staged sends.  The send
+              decision (drop-iff-full against post-drain occupancy, slot
+              position, occupancy bump) was made eagerly by the caller at
+              stage time, so the op only writes the accepted slots —
+              ``size`` on entry already counts them
+      drain   bounded FIFO pops at the receiver's clock (head-blocking)
+      select  per receiver and halo slot ``s``, the freshest payload of
+              the highest delivering row ``j`` with ``j % 4 == s`` —
+              canonical-id tie-breaking as a register select
+
+    Regrouping windows as (send_{k-1}; drain_k) pairs leaves the global
+    drain/send sequence identical to the two-phase engine, so trajectories
+    agree bitwise with the edge-major path.
+    """
+    q_avail = np.array(q_avail, dtype=np.float32, copy=True)
+    q_touch = np.array(q_touch, dtype=np.int32, copy=True)
+    q_pay = np.array(q_pay, copy=True)
+    head = np.array(head, dtype=np.int32, copy=True)
+    size = np.array(size, dtype=np.int32, copy=True)
+    n, d, C = q_avail.shape
+    L = q_pay.shape[-1]
+    drained = np.zeros((n, d), np.int32)
+    recv_touch = np.zeros((n, d), np.int32)
+    halo_pay = np.zeros((n, 4, L), q_pay.dtype)
+    halo_win = np.zeros((n, 4), bool)
+
+    for p in range(n):
+        for j in range(d):
+            # -- push: apply the staged (already-accepted) write ----------
+            if push_acc[p, j]:
+                pos = int(push_pos[p, j])
+                q_avail[p, j, pos] = push_avail[p, j]
+                q_touch[p, j, pos] = push_touch[p, j]
+                q_pay[p, j, pos] = push_pay[p, j]
+            # -- drain: FIFO pops, head-blocking, bounded per window ------
+            fresh_pay = None
+            if recv_active[p]:
+                while (drained[p, j] < min(size[p, j], max_pops)
+                       and q_avail[p, j, (head[p, j] + drained[p, j]) % C]
+                       <= recv_now[p]):
+                    pos = (head[p, j] + drained[p, j]) % C
+                    recv_touch[p, j] = q_touch[p, j, pos]
+                    fresh_pay = q_pay[p, j, pos].copy()
+                    q_avail[p, j, pos] = np.inf
+                    drained[p, j] += 1
+                head[p, j] = (head[p, j] + drained[p, j]) % C
+                size[p, j] -= drained[p, j]
+            # -- select: ascending j, so the highest delivering row wins --
+            if fresh_pay is not None:
+                halo_pay[p, j % 4] = fresh_pay
+                halo_win[p, j % 4] = True
+    return WindowResult(q_avail, q_touch, q_pay, head, size, drained,
+                        recv_touch, halo_pay, halo_win)

@@ -46,12 +46,17 @@ def _make_event(app, cfg: SimConfig, faults: Optional[FaultModel],
                 **kwargs) -> Engine:
     shards = kwargs.pop("shards", 1)
     superstep = kwargs.pop("superstep_windows", 1)
+    layout = kwargs.pop("layout", "auto")
     if shards and shards > 1:
         raise ValueError("the event engine is single-device; "
                          "--shards requires --engine jax")
     if superstep and superstep > 1:
         raise ValueError("the event engine has no superstep scheduler; "
                          "--superstep-windows requires --engine jax")
+    if layout != "auto":
+        raise ValueError("--layout selects the vectorized engines' duct "
+                         "layout (DESIGN.md §10); the event engine has "
+                         "none — use --engine jax")
     if kwargs:
         raise TypeError(f"unknown engine options {sorted(kwargs)}")
     return Simulator(app, cfg, faults)
@@ -87,8 +92,10 @@ def make_engine(name: str, app, cfg: SimConfig,
     ``kwargs`` are backend options: the jax engine accepts ``shards`` (> 1
     builds the mesh-sharded engine, DESIGN.md §8), ``superstep_windows``
     (> 1 enables the self-paced superstep scheduler, DESIGN.md §9; needs
-    ``shards`` > 1) plus ``max_pops`` / ``chunk``; the event engine
-    accepts none.
+    ``shards`` > 1), ``layout`` (``auto``/``dense``/``edge`` duct layout,
+    DESIGN.md §10 — ``auto`` picks the dense receiver-major fast path for
+    degree-regular topologies) plus ``max_pops`` / ``chunk``; the event
+    engine accepts none.
     """
     try:
         factory = ENGINES[name]

@@ -18,6 +18,14 @@ in-graph, so a run is a pure function of ``(config, seed)`` and
 ``jax.vmap`` over the seed axis dispatches a whole replicate sweep in one
 scan (``run_replicates``).
 
+Two duct layouts share these semantics (``layout=`` / ``--layout``,
+DESIGN.md §10): the general *edge-major* path above, and the *dense
+receiver-major* fast path for degree-regular topologies (ring, torus),
+where each process owns its ``d`` in-edge rings contiguously as
+``(n, d, C)`` arrays and the whole window's ring traffic runs through one
+fused ``duct_window`` pass — zero segment/scatter ops, bitwise-identical
+trajectories (``tests/test_layout_dense.py``).
+
 Where it diverges from the event engine — and why that is acceptable for
 median/p95 QoS — is documented in DESIGN.md §7.  Parity on small configs is
 enforced by ``tests/test_engine_jax.py``.
@@ -32,11 +40,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.modes import AsyncMode
-from repro.core.qos import Counters, QosReport, report
-from repro.kernels.duct_exchange.ops import duct_drain, duct_send
+from repro.core.qos import QosReport
+from repro.kernels.duct_exchange.ops import duct_drain, duct_send, duct_window
 from repro.runtime.faults import FaultModel
 from repro.runtime.simulator import SimConfig, SimResult
-from repro.runtime.topologies import OPP_IDX, Topology, halo_slot_map
+from repro.runtime.topologies import (
+    OPP_IDX,
+    Topology,
+    canonical_edges,
+    halo_slot_map,
+    plan_layout,
+)
 
 _BARRIER_MODES = (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
                   AsyncMode.FIXED_BARRIER)
@@ -107,7 +121,8 @@ class JaxEngine:
 
     def __init__(self, app, cfg: SimConfig,
                  faults: Optional[FaultModel] = None,
-                 *, max_pops: int = 16, chunk: int = 256):
+                 *, max_pops: int = 16, chunk: int = 256,
+                 layout: str = "auto"):
         self.app = app
         self.cfg = cfg
         self.faults = faults or FaultModel()
@@ -123,13 +138,7 @@ class JaxEngine:
         self.bapp = app.batched()
 
         # --- static edge plumbing (numpy, hoisted out of the scan) --------
-        esrc, edst, slot = [], [], []
-        index = {}
-        for src in range(n):
-            for dst in topo.neighbors[src]:
-                index[(src, dst)] = len(esrc)
-                esrc.append(src)
-                edst.append(dst)
+        esrc, edst, index = canonical_edges(topo)
         slot_maps = [halo_slot_map(topo.neighbors[p]) for p in range(n)]
         slot = [slot_maps[d][s] for s, d in zip(esrc, edst)]
         rev = [index[(d, s)] for s, d in zip(esrc, edst)]
@@ -157,6 +166,22 @@ class JaxEngine:
         self._deg = jnp.asarray([topo.degree(p) for p in range(n)], jnp.int32)
         self._cfactor = jnp.asarray(
             [self.faults.compute_factor(p) for p in range(n)], jnp.float32)
+
+        # --- duct layout (DESIGN.md §10): dense receiver-major fast path --
+        # for degree-regular topologies, or the general edge-major path
+        self.lplan = plan_layout(topo, layout)
+        self.layout = self.lplan.kind
+        if self.layout == "dense":
+            lp = self.lplan
+            dd = lp.degree
+            self._d_src = jnp.asarray(lp.src)   # (n, d) source pid per row
+            self._d_rev = jnp.asarray(lp.rev)   # (n, d) flat out-edge rows
+            self._d_eid = jnp.asarray(lp.eid)   # (n, d) canonical edge ids
+            self._d_out_slot = jnp.asarray(np.broadcast_to(
+                np.asarray([OPP_IDX[j % 4] for j in range(dd)], np.int32),
+                (n, dd)))
+            self._d_lat = jnp.asarray(
+                lat[lp.eid.reshape(-1)].reshape(n, dd))
 
         warmup, interval = cfg.snapshot_warmup, cfg.snapshot_interval
         self.S = max(1, int((cfg.duration - warmup) / interval) + 3)
@@ -192,9 +217,29 @@ class JaxEngine:
     def _edge_state(self) -> Dict[str, jax.Array]:
         """Fresh (empty-ring) edge state.  Every array is constant, so the
         sharded subclass overrides only the row count (padded per-shard
-        layout) without re-deriving anything."""
+        layout) without re-deriving anything.
+
+        The dense layout shapes rings receiver-major ``(n, d, C)`` and adds
+        the staged-send buffers: the send *decision* happens eagerly at
+        stage time, the ring *writes* ride into the next window's fused
+        ``duct_window`` pass (DESIGN.md §10)."""
         cfg, E = self.cfg, self.E
         L = self.bapp.payload_len
+        if self.layout == "dense":
+            n, dd, C = self.n, self.lplan.degree, cfg.buffer_capacity
+            return dict(
+                ptouch=jnp.zeros((n, dd), jnp.int32),
+                q_avail=jnp.full((n, dd, C), jnp.inf, jnp.float32),
+                q_touch=jnp.zeros((n, dd, C), jnp.int32),
+                q_pay=jnp.zeros((n, dd, C, L), self.bapp.payload_dtype),
+                q_head=jnp.zeros((n, dd), jnp.int32),
+                q_size=jnp.zeros((n, dd), jnp.int32),
+                stage_pos=jnp.zeros((n, dd), jnp.int32),
+                stage_acc=jnp.zeros((n, dd), bool),
+                stage_avail=jnp.zeros((n, dd), jnp.float32),
+                stage_touch=jnp.zeros((n, dd), jnp.int32),
+                stage_pay=jnp.zeros((n, dd, L), self.bapp.payload_dtype),
+            )
         return dict(
             ptouch=jnp.zeros(E, jnp.int32),
             q_avail=jnp.full((E, cfg.buffer_capacity), jnp.inf, jnp.float32),
@@ -241,9 +286,7 @@ class JaxEngine:
     def _window_body(self, carry, _):
         cfg, n, E = self.cfg, self.n, self.E
         bapp = self.bapp
-        mode = cfg.mode
-        comm = mode != AsyncMode.NO_COMM
-        barriered = mode in _BARRIER_MODES
+        comm = cfg.mode != AsyncMode.NO_COMM
         rows = self._eids
         esrc, edst = self._esrc, self._edst
         seed = carry["seed"]
@@ -327,22 +370,124 @@ class JaxEngine:
             q_pay = carry["q_pay"]
             c_att, c_ok, c_drop = carry["c_att"], carry["c_ok"], carry["c_drop"]
 
-        # --- 4. incremental QoS counters + snapshot scatter ---------------
+        u = dict(carry, steps=steps, halo=halo, app=app_state, ptouch=ptouch,
+                 c_touch=c_touch, c_att=c_att, c_ok=c_ok, c_drop=c_drop,
+                 c_laden=c_laden, c_msgs=c_msgs,
+                 q_avail=q_avail, q_touch=q_touch, q_pay=q_pay,
+                 q_head=q_head, q_size=q_size)
+        return self._finish_window(u, active, drained_r), None
+
+    # ------------------------------------------------------------------
+    def _window_body_dense(self, carry, _):
+        """One lockstep window on the dense receiver-major layout.
+
+        Same window semantics as ``_window_body``, regrouped so one fused
+        ``duct_window`` pass per window touches the ring state
+        (DESIGN.md §10): the op applies the *previous* window's staged
+        sends, drains at this window's clocks, and merges halos — all per
+        receiver row, zero segment/scatter ops.  This window's sends are
+        then *decided* eagerly against the post-drain rings (drop iff
+        full, slot position, occupancy bump, all sender counters) and only
+        their ring writes are staged for the next pass.  The global
+        drain/send sequence — and with it every trajectory and QoS
+        counter — is bitwise identical to the edge-major path.
+        """
+        cfg, n = self.cfg, self.n
+        dd = self.lplan.degree
+        bapp = self.bapp
+        comm = cfg.mode != AsyncMode.NO_COMM
+        seed = carry["seed"]
+        k = carry["k"]
+        t = carry["t"]
+        active = ~carry["done"] & ~carry["waiting"]
+        halo = carry["halo"]
+        drained_r = jnp.zeros(n, jnp.int32)
+        u = dict(carry)
+
+        if comm:
+            # --- 1. fused push-apply -> drain -> halo-select --------------
+            w = duct_window(
+                carry["q_avail"], carry["q_touch"], carry["q_pay"],
+                carry["q_head"], carry["q_size"],
+                carry["stage_pos"], carry["stage_acc"],
+                carry["stage_avail"], carry["stage_touch"],
+                carry["stage_pay"], t, active, max_pops=self.max_pops)
+            delivered = w.drained > 0
+            halo = jnp.where(w.halo_win[:, :, None], w.halo_pay, halo)
+            new_touch = w.recv_touch + 1
+            dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+            ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+            # receiver counters: plain row reductions over the d in-edges
+            drained_r = w.drained.sum(axis=1)
+            u.update(ptouch=ptouch,
+                     c_msgs=carry["c_msgs"] + drained_r,
+                     c_laden=carry["c_laden"] +
+                     delivered.astype(jnp.int32).sum(axis=1),
+                     c_touch=carry["c_touch"] + dtouch.sum(axis=1),
+                     q_avail=w.q_avail, q_touch=w.q_touch, q_pay=w.q_pay,
+                     q_head=w.head, q_size=w.size)
+
+        # --- 2. the application's actual batched compute ------------------
+        new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
+                                         seed, pids=self._pids)
+        app_state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                active.reshape((n,) + (1,) * (new.ndim - 1)), new, old),
+            new_state, carry["app"])
+        u.update(halo=halo, app=app_state, steps=carry["steps"] + active)
+
+        if comm:
+            # --- 3. stage this window's sends; decide drop-iff-full NOW ---
+            # (against the post-drain rings — exactly what the edge-major
+            # send attempt sees — so counters land in this window)
+            lat = self._d_lat * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, self._d_eid, k)
+            s_avail = t[self._d_src] + lat
+            s_act = active[self._d_src]
+            s_touch = u["ptouch"].reshape(-1)[self._d_rev]
+            s_pay = edges_out[self._d_src, self._d_out_slot]
+            q_size = u["q_size"]
+            s_acc = s_act & (q_size < cfg.buffer_capacity)
+            s_pos = (u["q_head"] + q_size) % cfg.buffer_capacity
+            # sender counters through the out-edge table: gathers, no
+            # scatters (row (p, j)'s sender is p by construction)
+            ok_r = s_acc.reshape(-1)[self._d_rev].astype(
+                jnp.int32).sum(axis=1)
+            att_r = jnp.where(active, dd, 0)
+            u.update(q_size=q_size + s_acc,
+                     c_att=carry["c_att"] + att_r,
+                     c_ok=carry["c_ok"] + ok_r,
+                     c_drop=carry["c_drop"] + att_r - ok_r,
+                     stage_pos=s_pos, stage_acc=s_acc, stage_avail=s_avail,
+                     stage_touch=s_touch, stage_pay=s_pay)
+        return self._finish_window(u, active, drained_r), None
+
+    # ------------------------------------------------------------------
+    def _finish_window(self, u, active, drained_r):
+        """Shared window tail (both layouts): QoS snapshot scatter,
+        termination, barrier release, and virtual-time advance."""
+        cfg, n = self.cfg, self.n
+        mode = cfg.mode
+        barriered = mode in _BARRIER_MODES
+        seed, t = u["seed"], u["t"]
+        steps = u["steps"]
+        done, waiting = u["done"], u["waiting"]
         pending = (drained_r.astype(jnp.float32) * np.float32(
             cfg.per_message_cost) +
             self._deg.astype(jnp.float32) * np.float32(cfg.per_pull_cost))
-        snap_idx = carry["snap_idx"]
+        snap_idx = u["snap_idx"]
         thr = (np.float32(cfg.snapshot_warmup) +
                snap_idx.astype(jnp.float32) * np.float32(
                    cfg.snapshot_interval))
         snap_due = active & (t >= thr) & (snap_idx < self.S)
         row = jnp.stack([
-            steps.astype(jnp.float32), c_touch.astype(jnp.float32),
-            c_att.astype(jnp.float32), c_ok.astype(jnp.float32),
-            c_drop.astype(jnp.float32), c_laden.astype(jnp.float32),
-            c_msgs.astype(jnp.float32), t], axis=1)
-        snap = carry["snap"].at[jnp.where(snap_due, self._pids, n),
-                                snap_idx].set(row, mode="drop")
+            steps.astype(jnp.float32), u["c_touch"].astype(jnp.float32),
+            u["c_att"].astype(jnp.float32), u["c_ok"].astype(jnp.float32),
+            u["c_drop"].astype(jnp.float32),
+            u["c_laden"].astype(jnp.float32),
+            u["c_msgs"].astype(jnp.float32), t], axis=1)
+        snap = u["snap"].at[jnp.where(snap_due, self._pids, n),
+                            snap_idx].set(row, mode="drop")
         snap_idx = snap_idx + snap_due
 
         # --- termination / barriers / time advance ------------------------
@@ -351,9 +496,9 @@ class JaxEngine:
         d_next = (np.float32(cfg.base_compute + cfg.work_units *
                              cfg.work_unit_cost) *
                   self._step_factor(seed, steps))
-        barrier_seq = carry["barrier_seq"]
-        last_release = carry["last_release"]
-        pending_saved = carry["pending"]
+        barrier_seq = u["barrier_seq"]
+        last_release = u["last_release"]
+        pending_saved = u["pending"]
 
         if barriered:
             if mode == AsyncMode.BARRIER_EVERY_STEP:
@@ -380,22 +525,20 @@ class JaxEngine:
         else:
             t = jnp.where(active & ~newly_done, t + d_next + pending, t)
 
-        carry = dict(
-            seed=seed, k=k + 1, t=t, steps=steps, done=done, waiting=waiting,
-            barrier_seq=barrier_seq, last_release=last_release,
-            pending=pending_saved,
-            c_touch=c_touch, c_att=c_att, c_ok=c_ok, c_drop=c_drop,
-            c_laden=c_laden, c_msgs=c_msgs, ptouch=ptouch,
-            q_avail=q_avail, q_touch=q_touch, q_pay=q_pay,
-            q_head=q_head, q_size=q_size,
-            halo=halo, app=app_state, snap=snap, snap_idx=snap_idx)
-        return carry, None
+        u = dict(u)
+        u.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
+                 barrier_seq=barrier_seq, last_release=last_release,
+                 pending=pending_saved, snap=snap, snap_idx=snap_idx)
+        return u
 
     # ------------------------------------------------------------------
     def _get_runner(self):
         if self._runner is None:
+            body = (self._window_body_dense if self.layout == "dense"
+                    else self._window_body)
+
             def chunk(carry):
-                carry, _ = jax.lax.scan(self._window_body, carry, None,
+                carry, _ = jax.lax.scan(body, carry, None,
                                         length=self.chunk)
                 return carry
             # donation lets XLA reuse the ring/state buffers across chunks
@@ -413,43 +556,65 @@ class JaxEngine:
             lambda *xs: jnp.stack(xs), *carries)
         runner = self._get_runner()
         windows = 0
+        prev_done = None
         while windows < self._max_windows:
             carry = runner(carry)
             windows += self.chunk
-            if bool(jnp.all(carry["done"])):
+            # pipelined early-exit probe: enqueue this chunk's tiny done
+            # reduction, but only *read* the previous chunk's — the host
+            # blocks on a result whose chunk already finished while the
+            # next chunk keeps the device busy, so the dispatch pipeline
+            # never drains.  Costs one extra (state-invariant: every
+            # process is inactive) chunk after the run completes.
+            all_done = jnp.all(carry["done"])
+            if prev_done is not None and bool(prev_done):
                 break
+            prev_done = all_done
         carry = jax.device_get(carry)
         return [self._assemble(carry, r) for r in range(len(seeds))]
 
     # ------------------------------------------------------------------
     def _assemble(self, carry, r: int) -> SimResult:
+        """Numpy-vectorized QoS assembly: all report fields for all
+        (process, window) samples come from whole-array ops over the
+        snapshot deltas — the python loop only constructs the result
+        objects.  The math mirrors ``core.qos.report`` exactly (same
+        guards, same operation order), so values are bit-identical to the
+        per-pair path it replaces."""
         cfg, n = self.cfg, self.n
         comm = cfg.mode != AsyncMode.NO_COMM
-        deg = np.asarray(self._deg)
-        snap = np.asarray(carry["snap"][r])
+        deg = np.asarray(self._deg, np.int64)
+        snap = np.asarray(carry["snap"][r], np.float64)      # (n, S, 8)
         snap_idx = np.asarray(carry["snap_idx"][r])
         steps = np.asarray(carry["steps"][r])
 
-        def counters(p, row):
-            up = int(row[0])
-            return Counters(
-                update_count=up,
-                touch_count=int(row[1]),
-                attempted_send_count=int(row[2]),
-                successful_send_count=int(row[3]),
-                dropped_send_count=int(row[4]),
-                laden_pull_count=int(row[5]),
-                message_count=int(row[6]),
-                pull_attempt_count=up * int(deg[p]) if comm else 0,
-                wall_time=float(row[7]),
-            )
+        nwin = np.maximum(snap_idx - 1, 0)                   # reports/proc
+        d = snap[:, 1:, :] - snap[:, :-1, :]                 # (n, S-1, 8)
+        dup, dtch, datt = d[..., 0], d[..., 1], d[..., 2]
+        ddrop, dladen, dmsg, dwall = (d[..., 4], d[..., 5], d[..., 6],
+                                      d[..., 7])
+        period = dwall / np.maximum(dup, 1)
+        lat = dup / np.maximum(dtch, 1)
+        wall_lat = lat * period
+        fail = np.where(datt > 0, ddrop / np.maximum(datt, 1), 0.0)
+        dpull = dup * deg[:, None] if comm else np.zeros_like(dup)
+        opp = np.minimum(dmsg, dpull)
+        clump = np.where(
+            opp > 0, 1.0 - np.minimum(dladen / np.maximum(opp, 1), 1.0),
+            0.0)
+        t0, t1 = snap[:, :-1, 7], snap[:, 1:, 7]
 
         qos_by_proc: Dict[int, List[QosReport]] = {}
         all_qos: List[QosReport] = []
         for p in range(n):
-            rows = snap[p, :snap_idx[p]]
-            cs = [counters(p, row) for row in rows]
-            reps = [report(c0, c1) for c0, c1 in zip(cs, cs[1:])]
+            reps = [QosReport(
+                simstep_period=float(period[p, i]),
+                simstep_latency=float(lat[p, i]),
+                walltime_latency=float(wall_lat[p, i]),
+                delivery_failure_rate=float(fail[p, i]),
+                delivery_clumpiness=float(clump[p, i]),
+                t_start=float(t0[p, i]), t_end=float(t1[p, i]))
+                for i in range(int(nwin[p]))]
             qos_by_proc[p] = reps
             all_qos.extend(reps)
 

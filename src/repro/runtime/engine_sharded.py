@@ -11,6 +11,12 @@ partitioning discipline (arXiv:2105.10486) applied to the simulator itself.
 Layout.  ``topologies.contiguous_partition`` reorders pids so each shard's
 processes are contiguous; every duct ring lives on its *receiver's* shard,
 so drains, halo scatters, and receiver-side QoS counters are shard-local.
+The duct layout itself follows ``layout=`` (DESIGN.md §10): edge-major
+local rows in ascending canonical order, or — for degree-regular
+topologies — dense receiver-major rows (``m * d`` per shard, no padding)
+whose halo merges and receiver counters are plain per-receiver reshape
+reductions; the boundary machinery below is layout-agnostic and simply
+indexes whichever rows the plan laid out.
 Per window, boundary traffic moves in exactly two collective hops per
 distinct shard offset:
 
@@ -63,7 +69,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.modes import AsyncMode
-from repro.kernels.duct_exchange.ops import duct_drain, duct_send
+from repro.kernels.duct_exchange.ops import (
+    dense_halo_select,
+    duct_drain,
+    duct_send,
+)
 from repro.launch.mesh import SHARD_AXIS, make_shard_mesh, shard_map
 from repro.runtime.engine_jax import (
     _BARRIER_MODES,
@@ -107,8 +117,9 @@ class ShardedJaxEngine(JaxEngine):
 
     def __init__(self, app, cfg, faults=None, *, shards: int,
                  superstep_windows: int = 1, max_pops: int = 16,
-                 chunk: int = 256):
-        super().__init__(app, cfg, faults, max_pops=max_pops, chunk=chunk)
+                 chunk: int = 256, layout: str = "auto"):
+        super().__init__(app, cfg, faults, max_pops=max_pops, chunk=chunk,
+                         layout=layout)
         if np.dtype(self.bapp.payload_dtype) not in (np.dtype(np.int32),
                                                      np.dtype(np.float32)):
             raise ValueError(
@@ -152,14 +163,26 @@ class ShardedJaxEngine(JaxEngine):
         lsrc, ldst = inv[esrc], inv[edst]     # edge endpoints as positions
         src_sh, dst_sh = lsrc // m, ldst // m
         rows_by_shard = [np.where(dst_sh == s)[0] for s in range(S)]
-        ein = max(1, max(len(r) for r in rows_by_shard))
+        if self.lplan.kind == "dense":
+            # dense receiver-major local rows (DESIGN.md §10): edge e lives
+            # at (local receiver index) * d + j on its receiver's shard,
+            # where j is its sorted-source position there — no padding, and
+            # each receiver's rows stay in canonical-edge-id order, so the
+            # dense halo select ties break like the unsharded engine
+            dd = self.lplan.degree
+            ein = m * dd
+            jof = np.empty(E, np.int64)
+            jof[self.lplan.eid.reshape(-1)] = np.tile(np.arange(dd), self.n)
+            row_of = (ldst % m) * dd + jof
+        else:
+            # canonical edge id -> its ring's local row index (ascending
+            # canonical order per shard, so local row order == canonical
+            # order and segment_max tie-breaks match the unsharded engine)
+            ein = max(1, max(len(r) for r in rows_by_shard))
+            row_of = np.full(E, -1, np.int64)
+            for rows in rows_by_shard:
+                row_of[rows] = np.arange(len(rows))
         self._ein = ein
-        # canonical edge id -> its ring's local row index (ascending
-        # canonical order per shard, so local row order == canonical order
-        # and segment_max tie-breaks match the unsharded engine)
-        row_of = np.full(E, -1, np.int64)
-        for rows in rows_by_shard:
-            row_of[rows] = np.arange(len(rows))
 
         i32, f32 = np.int32, np.float32
         row_canon = np.zeros((S, ein), i32)
@@ -173,19 +196,19 @@ class ShardedJaxEngine(JaxEngine):
         row_lat = np.zeros((S, ein), f32)
         for s in range(S):
             e = rows_by_shard[s]
-            k = len(e)
+            r = row_of[e]   # packed ascending (edge) or receiver-major
             interior = src_sh[e] == s
-            row_canon[s, :k] = e
-            row_valid[s, :k] = True
-            row_dst[s, :k] = ldst[e] - s * m
-            row_src[s, :k] = np.where(interior, lsrc[e] - s * m, m)
-            row_interior[s, :k] = interior
-            row_out_slot[s, :k] = out_slot[e]
+            row_canon[s, r] = e
+            row_valid[s, r] = True
+            row_dst[s, r] = ldst[e] - s * m
+            row_src[s, r] = np.where(interior, lsrc[e] - s * m, m)
+            row_interior[s, r] = interior
+            row_out_slot[s, r] = out_slot[e]
             # rev edge (dst, src) drains at src — local iff this edge is
             # interior; boundary rows get their touch stamp via exchange
-            row_rev[s, :k] = np.where(interior, row_of[rev[e]], ein)
-            row_halo_key[s, :k] = (ldst[e] - s * m) * 4 + slot[e]
-            row_lat[s, :k] = lat_base[e]
+            row_rev[s, r] = np.where(interior, row_of[rev[e]], ein)
+            row_halo_key[s, r] = (ldst[e] - s * m) * 4 + slot[e]
+            row_lat[s, r] = lat_base[e]
 
         # boundary edges grouped by shard offset: one ppermute per offset
         bnd = np.where(src_sh != dst_sh)[0]
@@ -289,25 +312,38 @@ class ShardedJaxEngine(JaxEngine):
                        max_pops=self.max_pops, clear_popped=False)
         delivered = d.drained > 0
         payload = carry["q_pay"][rows, d.pop_pos]
-        # local rows are in ascending canonical order, so the local
-        # segment_max resolves (dst, slot) ties exactly like the
-        # unsharded engine's canonical-id tie-break
-        winner = jax.ops.segment_max(
-            jnp.where(delivered, rows, -1), st["row_halo_key"],
-            num_segments=4 * m + 1)[:4 * m]
-        has_win = winner >= 0
-        fresh = payload[jnp.where(has_win, winner, 0)]
-        halo = carry["halo"]
-        L = halo.shape[-1]
-        halo = jnp.where(has_win[:, None], fresh,
-                         halo.reshape(m * 4, L)).reshape(m, 4, L)
+        L = carry["halo"].shape[-1]
+        if self.lplan.kind == "dense":
+            # receiver-major rows: halo merge and receiver sums are plain
+            # per-receiver reductions over the d in-edge rows (ascending j
+            # = ascending canonical id, the same tie-break)
+            dd = self.lplan.degree
+            halo_pay, halo_win = dense_halo_select(
+                delivered.reshape(m, dd), payload.reshape(m, dd, L))
+            halo = jnp.where(halo_win[:, :, None], halo_pay, carry["halo"])
+        else:
+            # local rows are in ascending canonical order, so the local
+            # segment_max resolves (dst, slot) ties exactly like the
+            # unsharded engine's canonical-id tie-break
+            winner = jax.ops.segment_max(
+                jnp.where(delivered, rows, -1), st["row_halo_key"],
+                num_segments=4 * m + 1)[:4 * m]
+            has_win = winner >= 0
+            fresh = payload[jnp.where(has_win, winner, 0)]
+            halo = jnp.where(has_win[:, None], fresh,
+                             carry["halo"].reshape(m * 4, L)).reshape(
+                m, 4, L)
         new_touch = d.recv_touch + 1
         dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
         ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
         recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
                                dtouch], axis=1)
-        recv_sums = jax.ops.segment_sum(recv_cols, st["row_dst"],
-                                        num_segments=m + 1)[:m]
+        if self.lplan.kind == "dense":
+            recv_sums = recv_cols.reshape(m, self.lplan.degree, 3).sum(
+                axis=1)
+        else:
+            recv_sums = jax.ops.segment_sum(recv_cols, st["row_dst"],
+                                            num_segments=m + 1)[:m]
         return dict(
             halo=halo, ptouch=ptouch, drained_r=recv_sums[:, 0],
             c_msgs=carry["c_msgs"] + recv_sums[:, 0],
@@ -678,11 +714,18 @@ class ShardedJaxEngine(JaxEngine):
                     self._statics))
         runner = self._get_runner()
         windows = 0
+        prev_done = None
         while windows < self._max_windows:
             carry = runner(self._statics_sharded, carry)
             windows += self._windows_per_dispatch
-            if bool(jnp.all(carry["done"])):
+            # pipelined early-exit probe (same pattern as JaxEngine): only
+            # the *previous* dispatch's done reduction is read, so the host
+            # never stalls the mesh on a fresh round-trip — at the cost of
+            # one state-invariant extra dispatch after the run completes
+            all_done = jnp.all(carry["done"])
+            if prev_done is not None and bool(prev_done):
                 break
+            prev_done = all_done
         carry = jax.device_get(carry)
         carry = self._to_canonical_layout(carry)
         return [self._assemble(carry, r) for r in range(len(seeds))]

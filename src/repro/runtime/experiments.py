@@ -111,12 +111,14 @@ def _topology_for(args, n: int) -> Topology:
 
 def _engine_kwargs(args) -> dict:
     """Backend options forwarded to ``make_engine``
-    (--shards / --superstep-windows)."""
+    (--shards / --superstep-windows / --layout)."""
     kw = {}
     if args.shards > 1:
         kw["shards"] = args.shards
     if args.superstep_windows > 1:
         kw["superstep_windows"] = args.superstep_windows
+    if args.layout != "auto":
+        kw["layout"] = args.layout
     return kw
 
 
@@ -292,6 +294,15 @@ def build_parser() -> argparse.ArgumentParser:
                         "superstep, cutting the collective count ~W x.  "
                         "1 = per-window exchange (bitwise-identical "
                         "trajectories); needs --shards > 1")
+    p.add_argument("--layout", default="auto",
+                   choices=["auto", "dense", "edge"],
+                   help="duct ring layout for --engine jax (DESIGN.md "
+                        "§10): dense = receiver-major fast path for "
+                        "degree-regular topologies (ring, torus — zero "
+                        "segment/scatter ops per window), edge = the "
+                        "general edge-major path; auto picks dense when "
+                        "eligible and logs the fallback otherwise.  "
+                        "Trajectories are bitwise identical either way")
     p.add_argument("--qos-interval", type=float, default=None,
                    help="QoS snapshot spacing in virtual seconds for the "
                         "time-resolved stream (default: duration/12); "
@@ -337,6 +348,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
                      "(it amortizes cross-shard exchanges)")
     if args.qos_interval is not None and args.qos_interval <= 0:
         parser.error("--qos-interval must be positive")
+    if args.layout != "auto" and args.engine != "jax":
+        parser.error("--layout requires --engine jax")
     families = list(FAMILIES) if args.family == "all" else [args.family]
     rows: List[dict] = []
     t0 = time.perf_counter()

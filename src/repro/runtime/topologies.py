@@ -21,10 +21,15 @@ objects) and validated: symmetric, self-loop-free, connected.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.runtime.faults import _splitmix64
+
+logger = logging.getLogger(__name__)
 
 
 #: Halo slot order shared by the apps and the vectorized engine.
@@ -281,6 +286,137 @@ def contiguous_partition(topo: Topology, n_shards: int) -> ShardPlan:
     shard_of = tuple(inv[pid] // m for pid in range(n))
     return ShardPlan(n_shards=n_shards, perm=tuple(order), inv=tuple(inv),
                      shard_of=shard_of, cut=_cut_size(topo, order, m))
+
+
+# ---------------------------------------------------------------------------
+# Duct layout planning (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#: layouts a caller may request; "auto" resolves to dense or edge per topology
+LAYOUTS = ("auto", "dense", "edge")
+
+#: auto picks dense only when every process has at most this many in-edges:
+#: one ring row per halo slot keeps the megakernel's receiver tiles square
+#: and avoids slot aliasing on the fast path (cliques, though degree-regular,
+#: exceed it and stay edge-major under auto — force layout="dense" to alias)
+DENSE_AUTO_MAX_DEGREE = 4
+
+
+def regular_degree(topo: Topology) -> Optional[int]:
+    """The common in-degree if every process has the same one, else None."""
+    degs = {len(nbs) for nbs in topo.neighbors}
+    return degs.pop() if len(degs) == 1 else None
+
+
+def canonical_edges(topo: Topology):
+    """Source-major enumeration of directed edges — THE canonical edge id
+    order every engine keys per-edge RNG streams and halo tie-breaks by
+    (DESIGN.md §7/§8/§10).  Returns ``(esrc, edst, index)`` lists/dict with
+    ``index[(src, dst)]`` the canonical id.  Single definition so the
+    engines and the dense layout plan can never drift apart."""
+    esrc: List[int] = []
+    edst: List[int] = []
+    index: Dict[Tuple[int, int], int] = {}
+    for src in range(topo.n):
+        for dst in topo.neighbors[src]:
+            index[(src, dst)] = len(esrc)
+            esrc.append(src)
+            edst.append(dst)
+    return esrc, edst, index
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LayoutPlan:
+    """How the vectorized engines lay duct rings out in memory.
+
+    ``edge`` is the fully general edge-major layout: one ring per directed
+    edge in canonical enumeration order, receiver bookkeeping via
+    segment_sum/segment_max over edge rows.  ``dense`` is the
+    receiver-major layout for degree-regular topologies: receiver ``p``
+    owns rows ``(p, 0..d-1)`` — its ``d`` in-edge rings contiguous, in
+    sorted-source order.  That order is *canonical-edge-id order per
+    receiver* (canonical ids are source-major), so the edge-major halo
+    tie-break "highest canonical edge id wins" becomes "highest row ``j``
+    wins" — a per-receiver unrolled select — and every receiver counter is
+    a row reduction over axis ``d``; no segment/scatter op survives.
+
+    Dense tables (``None`` for the edge layout), all ``(n, d)`` int32:
+
+      src   source pid of the in-edge stored at row ``(p, j)``
+      rev   flat dense row of the reverse edge ``(p -> src)``; because the
+            topology is symmetric this doubles as the *out-edge table*:
+            sender ``p``'s d outgoing rings are rows ``rev[p, :]``
+      eid   canonical edge id of row ``(p, j)`` — keys the per-edge latency
+            RNG stream identically to the edge-major path
+
+    The halo slot of row ``(p, j)`` is ``j % 4`` (halo_slot_map round-robins
+    sorted neighbors) and needs no table.
+    """
+
+    kind: str
+    degree: int
+    src: Optional[np.ndarray] = None
+    rev: Optional[np.ndarray] = None
+    eid: Optional[np.ndarray] = None
+
+
+def _dense_plan(topo: Topology) -> LayoutPlan:
+    n = topo.n
+    d = regular_degree(topo)
+    assert d is not None
+    src = np.empty((n, d), np.int32)
+    eid = np.empty((n, d), np.int32)
+    rev = np.empty((n, d), np.int32)
+    _, _, eindex = canonical_edges(topo)
+    jindex: Dict[Tuple[int, int], int] = {}
+    for p in range(n):
+        for j, s in enumerate(sorted(topo.neighbors[p])):
+            src[p, j] = s
+            eid[p, j] = eindex[(s, p)]
+            jindex[(s, p)] = j
+    for p in range(n):
+        for j in range(d):
+            s = int(src[p, j])
+            rev[p, j] = s * d + jindex[(p, s)]
+    return LayoutPlan(kind="dense", degree=d, src=src, rev=rev, eid=eid)
+
+
+def plan_layout(topo: Topology, layout: str = "auto") -> LayoutPlan:
+    """Resolve a requested layout against a topology.
+
+    ``auto`` picks dense for degree-regular topologies with degree <=
+    ``DENSE_AUTO_MAX_DEGREE`` (ring, torus) and logs an actionable line
+    when it falls back to edge-major (smallworld: irregular; cliques:
+    degree > 4).  ``dense`` forces the dense layout and raises on
+    irregular topologies; ``edge`` always uses the general path.
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(
+            f"unknown layout {layout!r}; choose from {LAYOUTS}")
+    d = regular_degree(topo)
+    if layout == "edge":
+        return LayoutPlan(kind="edge", degree=0)
+    if layout == "dense":
+        if d is None:
+            raise ValueError(
+                f"layout='dense' needs a degree-regular topology, but "
+                f"{topo.name} has mixed in-degrees; use layout='edge' "
+                "(or 'auto', which falls back automatically)")
+        return _dense_plan(topo)
+    # auto — the fallback lines log at WARNING so they reach stderr through
+    # logging's last-resort handler even when the caller configures nothing
+    if d is None:
+        logger.warning(
+            "layout auto: %s has irregular in-degrees; using the edge-major "
+            "layout (dense requires a degree-regular topology)", topo.name)
+        return LayoutPlan(kind="edge", degree=0)
+    if d > DENSE_AUTO_MAX_DEGREE:
+        logger.warning(
+            "layout auto: %s is degree-regular but d=%d exceeds the %d halo "
+            "slots; using the edge-major layout (pass layout='dense' to "
+            "force the aliased dense layout)", topo.name, d,
+            DENSE_AUTO_MAX_DEGREE)
+        return LayoutPlan(kind="edge", degree=0)
+    return _dense_plan(topo)
 
 
 TOPOLOGIES = {

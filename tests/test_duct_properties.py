@@ -24,8 +24,8 @@ import pytest
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp
 
-from repro.kernels.duct_exchange.ops import duct_exchange_jnp
-from repro.kernels.duct_exchange.ref import duct_exchange_ref
+from repro.kernels.duct_exchange.ops import duct_exchange_jnp, duct_window_jnp
+from repro.kernels.duct_exchange.ref import duct_exchange_ref, duct_window_ref
 
 try:
     from hypothesis import given, settings, strategies as hyp_st
@@ -144,6 +144,141 @@ def test_duct_properties_seeded(seed, E, C, max_pops, steps):
     run_sequence(seed, E, C, max_pops, steps)
 
 
+def run_window_sequence(seed: int, n: int, d: int, C: int, max_pops: int, steps: int):
+    """Drive the fused dense-layout window op (DESIGN.md §10) through an
+    engine-style staging cycle: the send decision (drop-iff-full, slot,
+    occupancy bump) is made eagerly each step, the ring writes ride into the
+    *next* step's ``duct_window`` pass.  Checks jnp-vs-ref slot-exact
+    agreement plus mirror-queue invariants every step:
+
+      drop-iff-full   a staged send is accepted iff the post-drain ring
+                      has room at stage time
+      FIFO order      drains pop in push order, never past a
+                      not-yet-available head, at most ``max_pops``
+      halo select     slot ``s`` carries the freshest payload of the
+                      highest delivering row ``j`` with ``j % 4 == s``
+      conservation    accepted == drained + in-flight (staged included)
+                      and attempted == accepted + dropped, every step
+    """
+    rng = np.random.default_rng(seed)
+    qa = np.full((n, d, C), np.inf, np.float32)
+    qt = np.zeros((n, d, C), np.int32)
+    qp = np.zeros((n, d, C, 1), np.int32)
+    head = np.zeros((n, d), np.int32)
+    size = np.zeros((n, d), np.int32)
+    stage = dict(
+        pos=np.zeros((n, d), np.int32),
+        acc=np.zeros((n, d), bool),
+        avail=np.zeros((n, d), np.float32),
+        touch=np.zeros((n, d), np.int32),
+        pay=np.zeros((n, d, 1), np.int32),
+    )
+    # mirror[p][j]: FIFO of (availability, touch, payload) per ring
+    mirror = [[collections.deque() for _ in range(d)] for _ in range(n)]
+    accepted_tot = np.zeros((n, d), np.int64)
+    attempted_tot = np.zeros((n, d), np.int64)
+    dropped_tot = np.zeros((n, d), np.int64)
+    drained_tot = np.zeros((n, d), np.int64)
+    now = np.zeros(n, np.float32)
+
+    for _ in range(steps):
+        now = (now + rng.uniform(0.5, 1.5, n)).astype(np.float32)
+        ract = rng.random(n) < 0.8
+        args = (
+            qa,
+            qt,
+            qp,
+            head,
+            size,
+            stage["pos"],
+            stage["acc"],
+            stage["avail"],
+            stage["touch"],
+            stage["pay"],
+            now,
+            ract,
+        )
+        r = duct_window_ref(*args, max_pops=max_pops)
+        j = duct_window_jnp(*(jnp.asarray(a) for a in args), max_pops=max_pops)
+        for name in r._fields:
+            got = np.asarray(getattr(j, name))
+            np.testing.assert_array_equal(got, getattr(r, name), err_msg=name)
+
+        # the staged pushes enter the mirror queues (accepted at stage time)
+        for p in range(n):
+            for q in range(d):
+                if stage["acc"][p, q]:
+                    entry = (stage["avail"][p, q], stage["touch"][p, q], stage["pay"][p, q, 0])
+                    mirror[p][q].append(entry)
+        for p in range(n):
+            fresh_pay = {}
+            for q in range(d):
+                # FIFO + head-blocking: pops must equal a front-of-queue
+                # walk stopping at the first unavailable message
+                if ract[p]:
+                    expect = 0
+                    for avail, _tch, _pay in list(mirror[p][q])[:max_pops]:
+                        if avail <= now[p]:
+                            expect += 1
+                        else:
+                            break
+                    assert r.drained[p, q] == expect, (p, q, r.drained[p, q], expect)
+                else:
+                    assert r.drained[p, q] == 0
+                last = None
+                for _ in range(int(r.drained[p, q])):
+                    last = mirror[p][q].popleft()
+                if r.drained[p, q] > 0:
+                    assert r.recv_touch[p, q] == last[1]
+                    fresh_pay[q] = last[2]
+                assert len(mirror[p][q]) == r.size[p, q]
+            # halo select: the highest delivering row of each slot wins
+            for s in range(4):
+                js = [q for q in range(s, d, 4) if r.drained[p, q] > 0]
+                assert bool(r.halo_win[p, s]) == bool(js)
+                if js:
+                    assert r.halo_pay[p, s, 0] == fresh_pay[max(js)]
+
+        qa, qt, qp = r.q_avail, r.q_touch, r.q_pay
+        head, size = r.head, r.size
+        drained_tot += r.drained
+
+        # stage the next step's sends, engine-style: decide drop-iff-full
+        # against the post-drain occupancy NOW, write next step
+        sact = rng.random((n, d)) < 0.8
+        sacc = sact & (size < C)
+        attempted_tot += sact
+        accepted_tot += sacc
+        dropped_tot += sact & ~sacc
+        stage = dict(
+            pos=((head + size) % C).astype(np.int32),
+            acc=sacc,
+            avail=(now[:, None] + rng.uniform(0.0, 4.0, (n, d))).astype(np.float32),
+            touch=rng.integers(1, 100, (n, d)).astype(np.int32),
+            pay=rng.integers(0, 99, (n, d, 1)).astype(np.int32),
+        )
+        size = (size + sacc).astype(np.int32)
+        # conservation: every accepted message is drained, staged, or queued
+        assert np.all(accepted_tot == drained_tot + size)
+        assert np.all(attempted_tot == accepted_tot + dropped_tot)
+
+
+# capacity-1 rings, degree 1 and 5 (slot aliasing), single-pop drains
+WINDOW_FALLBACK_CASES = [
+    (0, 1, 1, 1, 1, 20),
+    (1, 2, 2, 1, 2, 20),
+    (2, 1, 4, 4, 1, 20),
+    (3, 3, 2, 3, 2, 15),
+    (4, 2, 5, 4, 4, 25),
+    (5, 2, 4, 2, 3, 15),
+]
+
+
+@pytest.mark.parametrize("seed,n,d,C,max_pops,steps", WINDOW_FALLBACK_CASES)
+def test_duct_window_properties_seeded(seed, n, d, C, max_pops, steps):
+    run_window_sequence(seed, n, d, C, max_pops, steps)
+
+
 if HAVE_HYPOTHESIS:
     @given(
         seed=hyp_st.integers(0, 2**31 - 1),
@@ -155,3 +290,15 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=12, deadline=None)
     def test_duct_properties_hypothesis(seed, E, C, max_pops, steps):
         run_sequence(seed, E, C, max_pops, steps)
+
+    @given(
+        seed=hyp_st.integers(0, 2**31 - 1),
+        n=hyp_st.integers(1, 3),
+        d=hyp_st.integers(1, 5),
+        C=hyp_st.integers(1, 4),
+        max_pops=hyp_st.integers(1, 3),
+        steps=hyp_st.integers(2, 12),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_duct_window_properties_hypothesis(seed, n, d, C, max_pops, steps):
+        run_window_sequence(seed, n, d, C, max_pops, steps)

@@ -182,6 +182,33 @@ def test_sharded_parity_best_effort_and_replicates():
 
 
 @pytest.mark.slow
+def test_sharded_dense_layout_parity():
+    """Dense duct layout under the mesh (DESIGN.md §10): the receiver-major
+    interior rows plus the unchanged packed-ppermute boundary path must
+    reproduce the edge-major 8-shard run bitwise on ring and torus, and the
+    unsharded edge-major trajectories transitively."""
+    out = run_md(_PARITY_HELPERS + textwrap.dedent("""
+        for topology, n in (("ring", 16), ("torus", 64)):
+            cfg = cfgf()
+            r1 = JaxEngine(gc_app(n, topology), cfg, layout="edge").run()
+            rd = ShardedJaxEngine(gc_app(n, topology), cfg, shards=8,
+                                  layout="dense").run()
+            check(f"dense-{topology}{n}", r1, rd)
+            re_ = ShardedJaxEngine(gc_app(n, topology), cfg, shards=8,
+                                   layout="edge").run()
+            check(f"edge-{topology}{n}", rd, re_)
+        # dense composes with the superstep scheduler (W=1 stays bitwise)
+        cfg = cfgf()
+        r1 = JaxEngine(gc_app(64, "torus"), cfg).run()
+        rw = ShardedJaxEngine(gc_app(64, "torus"), cfg, shards=8,
+                              layout="dense", superstep_windows=1).run()
+        check("dense-superstep-w1", r1, rw)
+        print("DENSE-OK")
+    """))
+    assert "DENSE-OK" in out
+
+
+@pytest.mark.slow
 def test_sharded_parity_barriers_faults_and_evo():
     out = run_md(_PARITY_HELPERS + textwrap.dedent("""
         from repro.core.modes import AsyncMode

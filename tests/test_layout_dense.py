@@ -1,0 +1,232 @@
+"""Dense duct-layout tests (DESIGN.md §10).
+
+The dense receiver-major layout is a pure memory-layout change: for any
+degree-regular topology the engine must reproduce the edge-major path
+bitwise — update trajectories, send/drop totals, and every (process,
+window) QoS sample — because the fused ``duct_window`` pass replays the
+exact drain/send op sequence, just regrouped as (send_{k-1}; drain_k)
+pairs.  These tests pin that contract across topologies, asynchronicity
+modes, and fault injection, plus the layout planner's auto/fallback rules
+and interpret-mode Pallas parity for the megakernel.
+"""
+
+import logging
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.modes import AsyncMode  # noqa: E402
+from repro.core.qos import METRICS, aggregate_reports  # noqa: E402
+from repro.kernels.duct_exchange import (  # noqa: E402
+    duct_window,
+    duct_window_jnp,
+    duct_window_ref,
+)
+from repro.runtime.engine import make_engine  # noqa: E402
+from repro.runtime.engine_jax import JaxEngine  # noqa: E402
+from repro.runtime.faults import FaultModel  # noqa: E402
+from repro.runtime.simulator import SimConfig  # noqa: E402
+from repro.runtime.topologies import make_topology, plan_layout, regular_degree  # noqa: E402
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig  # noqa: E402
+
+#: the dense layout replays the edge-major op sequence exactly, so medians
+#: may differ only by float aggregation noise
+DENSE_PARITY_RTOL = 1e-12
+
+MODES = [
+    AsyncMode.BEST_EFFORT,
+    AsyncMode.BARRIER_EVERY_STEP,
+    AsyncMode.ROLLING_BARRIER,
+    AsyncMode.FIXED_BARRIER,
+]
+
+
+def _app(n, topology="ring", simels=1):
+    topo = make_topology(topology, n)
+    cfg = GraphColorConfig(n_processes=n, nodes_per_process=simels)
+    return GraphColorApp(cfg, topology=topo)
+
+
+def _cfg(duration=0.02, **kw):
+    base = dict(
+        duration=duration,
+        snapshot_warmup=duration / 6,
+        snapshot_interval=duration / 12,
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _assert_bitwise_parity(res_edge, res_dense):
+    assert res_edge.updates == res_dense.updates
+    assert res_edge.sent == res_dense.sent
+    assert res_edge.dropped == res_dense.dropped
+    assert res_edge.quality == res_dense.quality
+    med_e = aggregate_reports(res_edge.qos)
+    med_d = aggregate_reports(res_dense.qos)
+    for metric in METRICS:
+        a, b = med_e[metric]["median"], med_d[metric]["median"]
+        assert (a is None) == (b is None), metric
+        if a is not None:
+            assert abs(b - a) <= DENSE_PARITY_RTOL * max(abs(a), 1e-12), (metric, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Layout planner
+# ---------------------------------------------------------------------------
+def test_plan_dense_for_regular_topologies():
+    for name, n, want_d in (("ring", 16, 2), ("torus", 16, 4)):
+        topo = make_topology(name, n)
+        plan = plan_layout(topo, "auto")
+        assert plan.kind == "dense"
+        assert plan.degree == want_d
+        assert regular_degree(topo) == want_d
+        # row (p, j) holds in-edge j of receiver p in sorted-source order
+        for p in range(n):
+            assert list(plan.src[p]) == sorted(topo.neighbors[p])
+        # rev is an involution: the reverse of the reverse is the row itself
+        flat_rev = plan.rev.reshape(-1)
+        np.testing.assert_array_equal(flat_rev[flat_rev], np.arange(n * want_d))
+
+
+def test_plan_auto_falls_back_with_actionable_log(caplog):
+    # WARNING level: visible on stderr via logging's last-resort handler
+    # even when the caller never configures logging
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.topologies"):
+        plan = plan_layout(make_topology("smallworld", 16), "auto")
+    assert plan.kind == "edge"
+    assert "irregular" in caplog.text and "edge-major" in caplog.text
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.topologies"):
+        plan = plan_layout(make_topology("cliques", 16), "auto")
+    assert plan.kind == "edge"
+    assert "halo" in caplog.text and "layout='dense'" in caplog.text
+
+
+def test_plan_forced_dense_raises_on_irregular():
+    with pytest.raises(ValueError, match="degree-regular"):
+        plan_layout(make_topology("smallworld", 16), "dense")
+    with pytest.raises(ValueError, match="unknown layout"):
+        plan_layout(make_topology("ring", 8), "banana")
+
+
+def test_event_engine_rejects_layout():
+    with pytest.raises(ValueError, match="engine jax"):
+        make_engine("event", _app(8), _cfg(0.01), layout="dense")
+
+
+# ---------------------------------------------------------------------------
+# Megakernel parity: jnp twin and interpret-mode Pallas vs the numpy ref
+# ---------------------------------------------------------------------------
+def _random_window_state(rng, n=6, d=3, C=5, L=2, cap=5):
+    qa = np.full((n, d, C), np.inf, np.float32)
+    qt = np.zeros((n, d, C), np.int32)
+    qp = np.zeros((n, d, C, L), np.int32)
+    head = rng.integers(0, C, (n, d)).astype(np.int32)
+    size = np.zeros((n, d), np.int32)
+    for p in range(n):
+        for j in range(d):
+            s = rng.integers(0, cap)
+            size[p, j] = s
+            for k in range(s):
+                pos = (head[p, j] + k) % C
+                qa[p, j, pos] = rng.random() * 2
+                qt[p, j, pos] = rng.integers(0, 50)
+                qp[p, j, pos] = rng.integers(0, 99, L)
+    # staged push, engine-style: eager drop-iff-full against carried size
+    pacc = (rng.random((n, d)) < 0.7) & (size < cap)
+    ppos = ((head + size) % C).astype(np.int32)
+    size = (size + pacc).astype(np.int32)
+    pav = (rng.random((n, d)) * 2).astype(np.float32)
+    ptch = rng.integers(0, 50, (n, d)).astype(np.int32)
+    ppay = rng.integers(0, 99, (n, d, L)).astype(np.int32)
+    rnow = (rng.random(n) * 2).astype(np.float32)
+    ract = rng.random(n) < 0.8
+    return (qa, qt, qp, head, size, ppos, pacc, pav, ptch, ppay, rnow, ract)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_duct_window_matches_ref(impl):
+    rng = np.random.default_rng(11)
+    args = _random_window_state(rng)
+    ref = duct_window_ref(*args, max_pops=3)
+    if impl == "jnp":
+        out = duct_window_jnp(*map(jnp.asarray, args), max_pops=3)
+    else:
+        out = duct_window(
+            *map(jnp.asarray, args),
+            max_pops=3,
+            use_pallas=True,
+            interpret=True,
+        )
+    for name, a, b in zip(ref._fields, ref, out):
+        np.testing.assert_array_equal(
+            np.asarray(b),
+            np.asarray(a),
+            err_msg=f"{impl}: field {name}",
+        )
+
+
+def test_duct_window_degree_one_and_empty_rings():
+    rng = np.random.default_rng(5)
+    args = _random_window_state(rng, n=3, d=1, C=1, L=1, cap=1)
+    ref = duct_window_ref(*args, max_pops=1)
+    out = duct_window_jnp(*map(jnp.asarray, args), max_pops=1)
+    for name, a, b in zip(ref._fields, ref, out):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a), err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: dense must reproduce edge-major bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topology", ["ring", "torus", "cliques"])
+@pytest.mark.parametrize("mode", MODES)
+def test_dense_matches_edge_bitwise(topology, mode):
+    cfg = _cfg(0.02, mode=mode)
+    res_edge = JaxEngine(_app(16, topology), cfg, layout="edge").run()
+    res_dense = JaxEngine(_app(16, topology), cfg, layout="dense").run()
+    _assert_bitwise_parity(res_edge, res_dense)
+
+
+@pytest.mark.parametrize("topology", ["ring", "torus"])
+def test_dense_matches_edge_under_faults(topology):
+    faults = FaultModel(
+        compute_slowdown={1: 20.0, 3: 5.0},
+        link_slowdown={(1, 2): 10.0, (2, 1): 10.0},
+    )
+    cfg = _cfg(0.02, buffer_capacity=4)
+    res_edge = JaxEngine(_app(16, topology), cfg, faults, layout="edge").run()
+    res_dense = JaxEngine(_app(16, topology), cfg, faults, layout="dense").run()
+    assert res_dense.dropped > 0  # the tiny buffer under faults drops
+    _assert_bitwise_parity(res_edge, res_dense)
+
+
+def test_dense_matches_edge_with_block_simels():
+    """Payload length > 1 exercises the megakernel's payload lanes."""
+    cfg = _cfg(0.01)
+    res_edge = JaxEngine(_app(16, "torus", simels=9), cfg, layout="edge").run()
+    res_dense = JaxEngine(_app(16, "torus", simels=9), cfg, layout="dense").run()
+    _assert_bitwise_parity(res_edge, res_dense)
+
+
+def test_dense_engine_replicates_and_registry():
+    cfg = _cfg(0.01)
+    eng = make_engine("jax", _app(16, "torus"), cfg, layout="dense")
+    assert eng.layout == "dense"
+    reps = eng.run_replicates([0, 1])
+    base = make_engine("jax", _app(16, "torus"), cfg, layout="edge")
+    singles = base.run_replicates([0, 1])
+    for rd, re_ in zip(reps, singles):
+        assert rd.updates == re_.updates
+    # distinct seeds give distinct trajectories on the dense path too
+    assert reps[0].updates != reps[1].updates
+
+
+def test_auto_layout_resolves_per_topology():
+    cfg = _cfg(0.01)
+    assert JaxEngine(_app(16, "torus"), cfg).layout == "dense"
+    assert JaxEngine(_app(16, "smallworld"), cfg).layout == "edge"
+    assert JaxEngine(_app(16, "cliques"), cfg).layout == "edge"
