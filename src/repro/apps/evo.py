@@ -217,7 +217,7 @@ class BatchedEvo:
         rows in ``state`` (the sharded engine passes its shard's slice so
         mutation draws are layout-independent; ``None`` = identity)."""
         import jax.numpy as jnp
-        from repro.runtime.engine_jax import STREAM_MUT, hash_uniform
+        from repro.runtime.window_core import STREAM_MUT, hash_uniform
         cfg, H, W = self.cfg, self.H, self.W
         g, r = state["genomes"], state["resource"]
         G = cfg.genome_len

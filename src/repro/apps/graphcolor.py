@@ -349,7 +349,7 @@ class BatchedGraphColor:
         means the identity layout (rows 0..n-1)."""
         import jax
         import jax.numpy as jnp
-        from repro.runtime.engine_jax import STREAM_APP, hash_uniform
+        from repro.runtime.window_core import STREAM_APP, hash_uniform
         H, W, L = self.H, self.W, self.L
         b, C = self.cfg.b, self.cfg.n_colors
         colors, probs = state["colors"], state["probs"]

@@ -115,6 +115,38 @@ def report(before: Counters, after: Counters) -> QosReport:
 
 
 # ---------------------------------------------------------------------------
+# Canonical result signature for engine conformance (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+def qos_signature(result) -> dict:
+    """A canonical, exactly-comparable digest of a ``SimResult``.
+
+    Flattens every per-process counter and every per-(process, window)
+    ``QosReport`` field into plain Python lists of ints/floats, keyed by
+    stable names.  Two engines are *bitwise conformant* on a scenario iff
+    their signatures compare equal with ``==`` — no tolerance, no metric
+    subset.  ``tests/test_engine_conformance.py`` asserts exactly this for
+    every registered engine against the event-ordered oracle (and for
+    every sharded configuration against ``shards=1``), and serializes the
+    signature into the parity-table artifact, so a semantic drift in any
+    engine shows up as a field-level diff rather than a tolerance breach.
+    """
+    sig = {
+        "updates": [int(u) for u in result.updates],
+        "sent": int(result.sent),
+        "dropped": int(result.dropped),
+        "quality": float(result.quality),
+        "qos": {},
+    }
+    fields = METRICS + ("t_start", "t_end")
+    for f in fields:
+        sig["qos"][f] = {
+            int(pid): [float(getattr(r, f)) for r in reps]
+            for pid, reps in sorted(result.qos_by_process.items())
+        }
+    return sig
+
+
+# ---------------------------------------------------------------------------
 # Distribution aggregation across processes and windows (paper §III reports
 # medians + tails, not means: under best-effort QoS the distribution IS the
 # result).

@@ -1,5 +1,6 @@
 from repro.kernels.duct_exchange.ops import (  # noqa: F401
     dense_halo_select,
+    dense_stage,
     duct_drain,
     duct_exchange,
     duct_exchange_jnp,

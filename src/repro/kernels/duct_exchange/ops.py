@@ -156,6 +156,20 @@ def dense_halo_select(delivered, payload):
     return jnp.stack(pay_cols, axis=1), jnp.stack(win_cols, axis=1)
 
 
+def dense_stage(head, size, active, *, capacity: int):
+    """Eager stage decision for the dense layout: drop iff the ring is
+    full *now*, against post-drain occupancy — the same judgement
+    ``duct_send`` makes on the edge-major path, made one window early so
+    the ring writes can ride into the next fused ``duct_window`` pass.
+    Returns ``(pos, accepted)``: the slot each accepted push will land in
+    and the per-ring accept mask.  The caller owns the occupancy bump
+    (``size + accepted``) so its counters stay in this window.
+    """
+    accepted = active & (size < capacity)
+    pos = (head + size) % capacity
+    return pos, accepted
+
+
 def duct_window_jnp(q_avail, q_touch, q_pay, head, size,
                     push_pos, push_acc, push_avail, push_touch, push_pay,
                     recv_now, recv_active,

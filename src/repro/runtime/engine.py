@@ -1,4 +1,4 @@
-"""Engine protocol + registry: one contract, two simulation backends.
+"""Engine protocol + registry: one contract, N simulation backends.
 
 Every backend consumes the same inputs (an application exposing
 ``n_processes`` / ``topology()`` / fragments or a batched step, a
@@ -6,6 +6,14 @@ Every backend consumes the same inputs (an application exposing
 :class:`~repro.runtime.faults.FaultModel`) and produces the same
 :class:`~repro.runtime.simulator.SimResult`, so experiment families,
 benchmarks, and tests are backend-agnostic.
+
+Each backend registers an :class:`EngineSpec` declaring its capability
+surface — which duct layouts it understands, which window schedulers it
+offers, whether it shards over a device mesh — so callers (the CLI, the
+conformance suite in ``tests/test_engine_conformance.py``) can enumerate
+and validate options *before* any JAX tracing starts: a bad combination
+fails with one actionable ``ValueError``, never a shape error from inside
+a ``shard_map``.
 
 Registered backends:
 
@@ -17,7 +25,17 @@ Registered backends:
           (DESIGN.md §7).  With ``shards`` > 1 the population is
           partitioned into contiguous blocks over a 1-D device mesh
           (``runtime/engine_sharded.py``, DESIGN.md §8); only boundary-edge
-          duct traffic crosses shards
+          duct traffic crosses shards.  Both variants compose the shared
+          window-phase core (``runtime/window_core.py``, DESIGN.md §11)
+
+Orthogonal strategy axes (DESIGN.md §11):
+
+  layout     ``auto`` / ``edge`` / ``dense`` — how duct rings are laid out
+             in memory (resolved per topology by ``plan_layout``)
+  scheduler  ``auto`` / ``window`` / ``superstep`` — when cross-shard
+             boundary exchanges run: every lockstep window, or batched
+             every ``superstep_windows`` windows (self-paced supersteps,
+             DESIGN.md §9; sharded engine only)
 
 The jax backend additionally offers ``run_replicates(seeds)``; engines that
 lack a native batched form fall back to sequential runs via
@@ -25,10 +43,18 @@ lack a native batched form fall back to sequential runs via
 """
 from __future__ import annotations
 
-from typing import List, Optional, Protocol, Sequence, runtime_checkable
+import dataclasses
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
 
 from repro.runtime.faults import FaultModel
 from repro.runtime.simulator import SimConfig, SimResult, Simulator
+
+#: window schedulers an engine may declare (EngineSpec.schedulers)
+SCHEDULERS: Tuple[str, ...] = ("window", "superstep")
+#: duct layouts an engine may declare (EngineSpec.layouts); resolution
+#: against a concrete topology lives in ``topologies.plan_layout``
+LAYOUTS: Tuple[str, ...] = ("edge", "dense")
 
 
 @runtime_checkable
@@ -42,21 +68,44 @@ class Engine(Protocol):
         ...
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """A registered backend plus its declared capability surface.
+
+    The registry — not the factory — rejects unsupported combinations, so
+    every mis-configuration surfaces as one actionable ``ValueError`` with
+    the registered vocabulary in the message.  The conformance suite
+    iterates :func:`engine_specs` to build its parity matrix, so a newly
+    registered engine is conformance-tested by construction.
+    """
+
+    name: str
+    factory: Callable[..., Engine]
+    description: str
+    #: duct layouts the backend accepts (beyond the implicit "auto")
+    layouts: Tuple[str, ...] = ()
+    #: window schedulers the backend offers; "window" = per-window
+    schedulers: Tuple[str, ...] = ("window",)
+    #: accepts shards > 1 (mesh-sharded dispatch)
+    shardable: bool = False
+    #: vectorized windowed-time semantics (vs exact event ordering)
+    vectorized: bool = False
+
+    def __post_init__(self):
+        bad = set(self.layouts) - set(LAYOUTS)
+        if bad:
+            raise ValueError(
+                f"engine {self.name!r} declares unknown layouts {sorted(bad)}; "
+                f"known: {LAYOUTS}")
+        bad = set(self.schedulers) - set(SCHEDULERS)
+        if bad:
+            raise ValueError(
+                f"engine {self.name!r} declares unknown schedulers "
+                f"{sorted(bad)}; known: {SCHEDULERS}")
+
+
 def _make_event(app, cfg: SimConfig, faults: Optional[FaultModel],
                 **kwargs) -> Engine:
-    shards = kwargs.pop("shards", 1)
-    superstep = kwargs.pop("superstep_windows", 1)
-    layout = kwargs.pop("layout", "auto")
-    if shards and shards > 1:
-        raise ValueError("the event engine is single-device; "
-                         "--shards requires --engine jax")
-    if superstep and superstep > 1:
-        raise ValueError("the event engine has no superstep scheduler; "
-                         "--superstep-windows requires --engine jax")
-    if layout != "auto":
-        raise ValueError("--layout selects the vectorized engines' duct "
-                         "layout (DESIGN.md §10); the event engine has "
-                         "none — use --engine jax")
     if kwargs:
         raise TypeError(f"unknown engine options {sorted(kwargs)}")
     return Simulator(app, cfg, faults)
@@ -66,43 +115,142 @@ def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel],
               **kwargs) -> Engine:
     # deferred imports: heavy jax machinery
     shards = kwargs.pop("shards", 1)
-    superstep = kwargs.pop("superstep_windows", 1)
     if shards and shards > 1:
         from repro.runtime.engine_sharded import ShardedJaxEngine
-        return ShardedJaxEngine(app, cfg, faults, shards=shards,
-                                superstep_windows=superstep, **kwargs)
-    if superstep and superstep > 1:
-        raise ValueError(
-            "superstep_windows > 1 amortizes cross-shard exchanges and "
-            "needs the sharded engine; pass shards > 1 (--shards)")
+        return ShardedJaxEngine(app, cfg, faults, shards=shards, **kwargs)
+    kwargs.pop("superstep_windows", None)
     from repro.runtime.engine_jax import JaxEngine
     return JaxEngine(app, cfg, faults, **kwargs)
 
 
-ENGINES = {
-    "event": _make_event,
-    "jax": _make_jax,
-}
+_REGISTRY: Dict[str, EngineSpec] = {}
+
+
+def register_engine(spec: EngineSpec) -> EngineSpec:
+    """Register (or replace) a backend under ``spec.name``."""
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def engine_specs() -> Tuple[EngineSpec, ...]:
+    """All registered backends, in registration order."""
+    return tuple(_REGISTRY.values())
+
+
+def get_engine_spec(name: str) -> EngineSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; choose from {sorted(_REGISTRY)}")
+
+
+register_engine(EngineSpec(
+    name="event",
+    factory=_make_event,
+    description="discrete-event heap loop; exact event ordering "
+                "(the reference semantics, DESIGN.md §1)",
+))
+register_engine(EngineSpec(
+    name="jax",
+    factory=_make_jax,
+    description="vectorized windowed-time engine over the shared "
+                "window-phase core; shards > 1 partitions the population "
+                "over a device mesh (DESIGN.md §7/§8/§11)",
+    layouts=LAYOUTS,
+    schedulers=SCHEDULERS,
+    shardable=True,
+    vectorized=True,
+))
+
+#: backward-compat view: engine name -> factory (tests and callers that
+#: only need the names should prefer :func:`engine_specs`)
+ENGINES = {name: spec.factory for name, spec in _REGISTRY.items()}
+
+
+def _validate(spec: EngineSpec, kwargs: dict) -> dict:
+    """Resolve strategy kwargs against ``spec``; mutates a copy of kwargs.
+
+    Understands the three orthogonal axes — ``shards`` (partitioning),
+    ``layout`` (duct memory layout), ``scheduler`` + ``superstep_windows``
+    (exchange cadence) — and raises one actionable error per bad
+    combination.  Remaining kwargs pass through to the factory untouched.
+    """
+    kwargs = dict(kwargs)
+    shards = kwargs.get("shards", 1) or 1
+    superstep = kwargs.get("superstep_windows", 1) or 1
+    layout = kwargs.get("layout", "auto")
+    scheduler = kwargs.pop("scheduler", "auto")
+
+    if shards > 1 and not spec.shardable:
+        raise ValueError(
+            f"the {spec.name} engine is single-device; --shards requires a "
+            "shardable engine (--engine jax)")
+    if layout != "auto" and layout not in spec.layouts:
+        if not spec.layouts:
+            raise ValueError(
+                f"--layout selects the vectorized engines' duct layout "
+                f"(DESIGN.md §10); the {spec.name} engine has none — use "
+                "--engine jax")
+        raise ValueError(
+            f"unknown layout {layout!r} for engine {spec.name!r}; choose "
+            f"from {('auto',) + spec.layouts}")
+
+    if scheduler == "auto":
+        scheduler = "superstep" if superstep > 1 else "window"
+    if scheduler not in SCHEDULERS:
+        raise ValueError(
+            f"unknown scheduler {scheduler!r}; choose from "
+            f"{('auto',) + SCHEDULERS}")
+    if scheduler not in spec.schedulers:
+        raise ValueError(
+            f"the {spec.name} engine has no {scheduler!r} scheduler "
+            f"(offers: {spec.schedulers}); --superstep-windows requires "
+            "--engine jax" if scheduler == "superstep" else
+            f"the {spec.name} engine has no {scheduler!r} scheduler "
+            f"(offers: {spec.schedulers})")
+    if scheduler == "superstep":
+        if superstep <= 1:
+            raise ValueError(
+                "scheduler='superstep' batches W windows of boundary "
+                "exchange into one collective; pass superstep_windows > 1 "
+                "(--superstep-windows W) to choose W")
+        if shards <= 1:
+            raise ValueError(
+                "superstep_windows > 1 amortizes cross-shard exchanges and "
+                "needs the sharded engine; pass shards > 1 (--shards)")
+    elif superstep > 1:
+        raise ValueError(
+            "scheduler='window' exchanges every lockstep window, but "
+            f"superstep_windows={superstep} was given; drop it or pass "
+            "scheduler='superstep'")
+
+    # the event factory takes no strategy kwargs at all; strip the
+    # defaults we resolved so TypeError stays reserved for true unknowns
+    if not spec.vectorized:
+        for key in ("shards", "superstep_windows", "layout"):
+            kwargs.pop(key, None)
+    return kwargs
 
 
 def make_engine(name: str, app, cfg: SimConfig,
                 faults: Optional[FaultModel] = None, **kwargs) -> Engine:
     """Build a registered engine by name.
 
-    ``kwargs`` are backend options: the jax engine accepts ``shards`` (> 1
-    builds the mesh-sharded engine, DESIGN.md §8), ``superstep_windows``
-    (> 1 enables the self-paced superstep scheduler, DESIGN.md §9; needs
-    ``shards`` > 1), ``layout`` (``auto``/``dense``/``edge`` duct layout,
-    DESIGN.md §10 — ``auto`` picks the dense receiver-major fast path for
-    degree-regular topologies) plus ``max_pops`` / ``chunk``; the event
-    engine accepts none.
+    ``kwargs`` are backend options, validated against the engine's
+    :class:`EngineSpec` before the factory runs: ``shards`` (> 1 builds the
+    mesh-sharded engine, DESIGN.md §8), ``layout``
+    (``auto``/``dense``/``edge`` duct layout, DESIGN.md §10 — ``auto``
+    picks the dense receiver-major fast path for degree-regular
+    topologies), ``scheduler`` (``auto``/``window``/``superstep`` exchange
+    cadence, DESIGN.md §9 — ``auto`` follows ``superstep_windows``) with
+    ``superstep_windows`` (> 1 batches that many windows per cross-shard
+    exchange; needs ``shards`` > 1), plus backend extras such as
+    ``max_pops`` / ``chunk``.  The event engine accepts none.
     """
-    try:
-        factory = ENGINES[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown engine {name!r}; choose from {sorted(ENGINES)}")
-    return factory(app, cfg, faults, **kwargs)
+    spec = get_engine_spec(name)
+    kwargs = _validate(spec, kwargs)
+    return spec.factory(app, cfg, faults, **kwargs)
 
 
 def run_replicates(engine_name: str, make_app, cfg: SimConfig,
@@ -117,7 +265,6 @@ def run_replicates(engine_name: str, make_app, cfg: SimConfig,
     once; others loop.  ``cfg.seed`` is overridden by each replicate's
     seed.
     """
-    import dataclasses
     eng = make_engine(engine_name, make_app(int(seeds[0])),
                       dataclasses.replace(cfg, seed=int(seeds[0])), faults,
                       **engine_kwargs)

@@ -5,13 +5,15 @@ a time from a heap — exact, but serial.  This engine advances the *entire
 process population per lockstep window* as flat JAX arrays: window k is
 every process's k-th simstep, executed at per-process virtual times that
 drift apart exactly as the paper describes (jitter, stalls, faults,
-barriers).  Per window it performs
+barriers).  Per window it composes the shared window-phase core
+(``runtime/window_core.py``, DESIGN.md §11):
 
-  1. edge-parallel duct drain   (kernels/duct_exchange: bounded FIFO rings,
-                                 latency-delayed availability)
-  2. halo scatter + the application's *actual* batched compute
-  3. edge-parallel send attempt (capacity drop, latency stamp)
-  4. incremental QoS counter updates + O(1) snapshot scatter
+  1. drain      edge-parallel duct drain (bounded FIFO rings,
+                latency-delayed availability) + halo-winner select
+  2. compute    halo scatter + the application's *actual* batched compute
+  3. send       edge-parallel send attempt (capacity drop, latency stamp)
+  4. close      incremental QoS counters + O(1) snapshot scatter,
+                termination, barriers, virtual-time advance
 
 All stochastic draws are counter-based splitmix-style hashes evaluated
 in-graph, so a run is a pure function of ``(config, seed)`` and
@@ -24,15 +26,14 @@ receiver-major* fast path for degree-regular topologies (ring, torus),
 where each process owns its ``d`` in-edge rings contiguously as
 ``(n, d, C)`` arrays and the whole window's ring traffic runs through one
 fused ``duct_window`` pass — zero segment/scatter ops, bitwise-identical
-trajectories (``tests/test_layout_dense.py``).
+trajectories.
 
 Where it diverges from the event engine — and why that is acceptable for
-median/p95 QoS — is documented in DESIGN.md §7.  Parity on small configs is
-enforced by ``tests/test_engine_jax.py``.
+median/p95 QoS — is documented in DESIGN.md §7.  Parity is enforced by the
+registry-driven conformance suite (``tests/test_engine_conformance.py``).
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -40,8 +41,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.modes import AsyncMode
-from repro.core.qos import QosReport
-from repro.kernels.duct_exchange.ops import duct_drain, duct_send, duct_window
 from repro.runtime.faults import FaultModel
 from repro.runtime.simulator import SimConfig, SimResult
 from repro.runtime.topologies import (
@@ -51,63 +50,24 @@ from repro.runtime.topologies import (
     halo_slot_map,
     plan_layout,
 )
-
-_BARRIER_MODES = (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
-                  AsyncMode.FIXED_BARRIER)
-
-# ---------------------------------------------------------------------------
-# Counter-based RNG: splitmix-style 32-bit finalizer chains, pure functions
-# of their integer keys — the in-graph twin of runtime/faults.py's
-# splitmix64 streams (same distributions, different bit streams).
-# ---------------------------------------------------------------------------
-_GOLDEN = np.uint32(0x9E3779B9)
-
-# stream tags keep independent draws independent
-STREAM_STEP, STREAM_STALL, STREAM_LAT, STREAM_APP, STREAM_MUT = 1, 2, 3, 4, 5
-
-
-def _mix32(x: jax.Array) -> jax.Array:
-    """32-bit splitmix-style finalizer (lowbias32 constants)."""
-    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
-    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
-    return x ^ (x >> np.uint32(16))
+from repro.runtime.window_core import (  # noqa: F401  (re-exports: the RNG
+    # helpers and stream tags predate window_core and are imported from
+    # here by apps and older callers)
+    BARRIER_MODES as _BARRIER_MODES,
+    LOCAL_RELEASE,
+    STREAM_APP,
+    STREAM_LAT,
+    STREAM_MUT,
+    STREAM_STALL,
+    STREAM_STEP,
+    WindowCore,
+    hash_normal,
+    hash_u32,
+    hash_uniform,
+    lognormal_factor,
+)
 
 
-def hash_u32(*keys) -> jax.Array:
-    """Combine integer keys (arrays broadcast) into one hashed uint32."""
-    h = _GOLDEN
-    for k in keys:
-        k = jnp.asarray(k).astype(jnp.uint32)
-        h = _mix32(h ^ (k + _GOLDEN + (h << np.uint32(6)) +
-                        (h >> np.uint32(2))))
-    return h
-
-
-def hash_uniform(*keys) -> jax.Array:
-    """Deterministic uniform in (0, 1) from integer keys."""
-    h = hash_u32(*keys)
-    return ((h >> np.uint32(8)).astype(jnp.float32) + 0.5) * np.float32(
-        1.0 / (1 << 24))
-
-
-def hash_normal(*keys) -> jax.Array:
-    u1 = hash_uniform(*keys, 101)
-    u2 = hash_uniform(*keys, 202)
-    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * np.pi * u2)
-
-
-def lognormal_factor(sigma: float, *keys) -> jax.Array:
-    """Mean-one lognormal, matching faults.Jitter's parameterization."""
-    if sigma <= 0:
-        return jnp.ones(jnp.broadcast_shapes(
-            *(jnp.shape(k) for k in keys)), jnp.float32)
-    z = hash_normal(*keys)
-    return jnp.exp(np.float32(-0.5 * sigma * sigma) + np.float32(sigma) * z)
-
-
-# ---------------------------------------------------------------------------
-# Engine
-# ---------------------------------------------------------------------------
 class JaxEngine:
     """Windowed-time engine over flat arrays; ``Engine`` protocol member.
 
@@ -136,6 +96,7 @@ class JaxEngine:
         self.topo = topo
         self.n = n = app.n_processes
         self.bapp = app.batched()
+        self.core = WindowCore(cfg, self.bapp, n, max_pops=max_pops)
 
         # --- static edge plumbing (numpy, hoisted out of the scan) --------
         esrc, edst, index = canonical_edges(topo)
@@ -183,80 +144,37 @@ class JaxEngine:
             self._d_lat = jnp.asarray(
                 lat[lp.eid.reshape(-1)].reshape(n, dd))
 
-        warmup, interval = cfg.snapshot_warmup, cfg.snapshot_interval
-        self.S = max(1, int((cfg.duration - warmup) / interval) + 3)
-        base_total = cfg.base_compute + cfg.work_units * cfg.work_unit_cost
-        # generous lockstep-window budget: fastest plausible step is about
-        # half the mean, plus slack for barrier-arrival idling
-        self._max_windows = int(8 * cfg.duration / base_total) + 2048
+        self.S = self.core.S
+        self._max_windows = self.core.default_max_windows
         self._runner = None
 
     # ------------------------------------------------------------------
     def _barrier_cost(self) -> float:
-        if self.n <= 1:
-            return 0.0
-        return self.cfg.barrier_base + self.cfg.barrier_per_log2 * math.log2(
-            self.n)
+        return self.core.barrier_cost
 
     def _step_factor(self, seed, steps, pids=None, cfactor=None):
         """Per-process compute-time factor; ``pids``/``cfactor`` default to
         the full-population arrays (the sharded engine passes its shard's
         slices — draws are keyed by original pid, so identical)."""
-        cfg = self.cfg
-        pids = self._pids if pids is None else pids
-        cfactor = self._cfactor if cfactor is None else cfactor
-        f = lognormal_factor(cfg.jitter_sigma, seed, STREAM_STEP,
-                             pids, steps)
-        if cfg.stall_prob > 0:
-            u = hash_uniform(seed, STREAM_STALL, pids, steps)
-            f = jnp.where(u < cfg.stall_prob,
-                          f * np.float32(cfg.stall_factor), f)
-        return f * cfactor
+        return self.core.step_factor(
+            seed, steps,
+            self._pids if pids is None else pids,
+            self._cfactor if cfactor is None else cfactor)
 
     # ------------------------------------------------------------------
     def _edge_state(self) -> Dict[str, jax.Array]:
-        """Fresh (empty-ring) edge state.  Every array is constant, so the
-        sharded subclass overrides only the row count (padded per-shard
-        layout) without re-deriving anything.
-
-        The dense layout shapes rings receiver-major ``(n, d, C)`` and adds
-        the staged-send buffers: the send *decision* happens eagerly at
-        stage time, the ring *writes* ride into the next window's fused
-        ``duct_window`` pass (DESIGN.md §10)."""
-        cfg, E = self.cfg, self.E
-        L = self.bapp.payload_len
+        """Fresh (empty-ring) duct state in this engine's layout.  Every
+        array is constant, so the sharded subclass overrides only the row
+        count (padded per-shard layout) without re-deriving anything."""
         if self.layout == "dense":
-            n, dd, C = self.n, self.lplan.degree, cfg.buffer_capacity
-            return dict(
-                ptouch=jnp.zeros((n, dd), jnp.int32),
-                q_avail=jnp.full((n, dd, C), jnp.inf, jnp.float32),
-                q_touch=jnp.zeros((n, dd, C), jnp.int32),
-                q_pay=jnp.zeros((n, dd, C, L), self.bapp.payload_dtype),
-                q_head=jnp.zeros((n, dd), jnp.int32),
-                q_size=jnp.zeros((n, dd), jnp.int32),
-                stage_pos=jnp.zeros((n, dd), jnp.int32),
-                stage_acc=jnp.zeros((n, dd), bool),
-                stage_avail=jnp.zeros((n, dd), jnp.float32),
-                stage_touch=jnp.zeros((n, dd), jnp.int32),
-                stage_pay=jnp.zeros((n, dd, L), self.bapp.payload_dtype),
-            )
-        return dict(
-            ptouch=jnp.zeros(E, jnp.int32),
-            q_avail=jnp.full((E, cfg.buffer_capacity), jnp.inf, jnp.float32),
-            q_touch=jnp.zeros((E, cfg.buffer_capacity), jnp.int32),
-            q_pay=jnp.zeros((E, cfg.buffer_capacity, L),
-                            self.bapp.payload_dtype),
-            q_head=jnp.zeros(E, jnp.int32),
-            q_size=jnp.zeros(E, jnp.int32),
-        )
+            return self.core.dense_rings(self.n, self.lplan.degree)
+        return self.core.edge_rings(self.E)
 
     def _init_carry(self, seed: int) -> Dict[str, jax.Array]:
-        cfg, n = self.cfg, self.n
+        n = self.n
         bapp = self.bapp
-        base_total = np.float32(
-            cfg.base_compute + cfg.work_units * cfg.work_unit_cost)
         seed_arr = jnp.asarray(seed, jnp.int32)
-        t0 = base_total * self._step_factor(
+        t0 = self.core.base_total * self._step_factor(
             seed_arr, jnp.zeros(n, jnp.int32))
         state, halo = bapp.init(seed)
         return dict(
@@ -284,252 +202,82 @@ class JaxEngine:
 
     # ------------------------------------------------------------------
     def _window_body(self, carry, _):
-        cfg, n, E = self.cfg, self.n, self.E
-        bapp = self.bapp
+        """One lockstep window on the edge-major layout: a straight
+        composition of the core's drain -> compute -> send phases over the
+        full-population edge tables."""
+        cfg, n = self.cfg, self.n
+        core = self.core
         comm = cfg.mode != AsyncMode.NO_COMM
-        rows = self._eids
         esrc, edst = self._esrc, self._edst
-        seed = carry["seed"]
-        k = carry["k"]
-        t = carry["t"]
-        done, waiting = carry["done"], carry["waiting"]
-        active = ~done & ~waiting
-        halo = carry["halo"]
+        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        active = ~carry["done"] & ~carry["waiting"]
         drained_r = jnp.zeros(n, jnp.int32)
+        u = dict(carry)
 
         if comm:
-            # --- 1. edge-parallel drain (bounded FIFO, head-blocking) -----
-            d = duct_drain(carry["q_avail"], carry["q_touch"],
-                           carry["q_head"], carry["q_size"],
-                           t[edst], active[edst], max_pops=self.max_pops,
-                           clear_popped=False)
-            delivered = d.drained > 0
-            payload = carry["q_pay"][rows, d.pop_pos]
-            # halo update: per (dst, slot) the highest delivering edge index
-            # wins — a deterministic stand-in for "last fresh message wins"
-            # (plain duplicate-index scatter order is unspecified in JAX)
-            winner = jax.ops.segment_max(
-                jnp.where(delivered, rows, -1), self._halo_key,
-                num_segments=n * 4)
-            has_win = winner >= 0
-            fresh = payload[jnp.where(has_win, winner, 0)]
-            L = halo.shape[-1]
-            halo = jnp.where(has_win[:, None], fresh,
-                             halo.reshape(n * 4, L)).reshape(n, 4, L)
-            new_touch = d.recv_touch + 1
-            dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
-            ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
-            # one multi-column segment sum for all receiver-side counters
-            recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
-                                   dtouch], axis=1)
-            recv_sums = jax.ops.segment_sum(recv_cols, edst, num_segments=n)
-            drained_r = recv_sums[:, 0]
-            c_msgs = carry["c_msgs"] + drained_r
-            c_laden = carry["c_laden"] + recv_sums[:, 1]
-            c_touch = carry["c_touch"] + recv_sums[:, 2]
-            q_avail, q_touch = d.q_avail, d.q_touch
-            q_head, q_size = d.head, d.size
-        else:
-            ptouch = carry["ptouch"]
-            c_touch, c_laden, c_msgs = (carry["c_touch"], carry["c_laden"],
-                                        carry["c_msgs"])
-            q_avail, q_touch = carry["q_avail"], carry["q_touch"]
-            q_head, q_size = carry["q_head"], carry["q_size"]
+            upd, drained_r = core.drain(
+                carry, t[edst], active[edst],
+                halo_key=self._halo_key, n_halo=n * 4, dst=edst, n_dst=n)
+            u.update(upd)
 
-        # --- 2. the application's actual batched compute ------------------
-        new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
-                                         seed, pids=self._pids)
-        app_state = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(
-                active.reshape((n,) + (1,) * (new.ndim - 1)), new, old),
-            new_state, carry["app"])
-        steps = carry["steps"] + active
+        app_state, edges_out, steps = core.compute(
+            carry, active, u["halo"], self._pids)
+        u.update(app=app_state, steps=steps)
 
         if comm:
-            # --- 3. edge-parallel send attempt (drop iff full) ------------
-            out_pay = edges_out[esrc, self._out_slot]
             lat = self._lat_base * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, rows, k)
-            s = duct_send(q_avail, q_touch, q_head, q_size,
-                          t[esrc], active[esrc], lat, ptouch[self._rev],
-                          capacity=cfg.buffer_capacity)
-            q_pay = carry["q_pay"].at[
-                jnp.where(s.accepted, rows, E), s.push_pos].set(
-                out_pay, mode="drop")
-            q_avail, q_touch, q_size = s.q_avail, s.q_touch, s.size
-            attempted = active[esrc]
-            send_cols = jnp.stack([
-                attempted.astype(jnp.int32), s.accepted.astype(jnp.int32),
-                (attempted & ~s.accepted).astype(jnp.int32)], axis=1)
-            send_sums = jax.ops.segment_sum(send_cols, esrc, num_segments=n,
-                                            indices_are_sorted=True)
-            c_att = carry["c_att"] + send_sums[:, 0]
-            c_ok = carry["c_ok"] + send_sums[:, 1]
-            c_drop = carry["c_drop"] + send_sums[:, 2]
-        else:
-            q_pay = carry["q_pay"]
-            c_att, c_ok, c_drop = carry["c_att"], carry["c_ok"], carry["c_drop"]
-
-        u = dict(carry, steps=steps, halo=halo, app=app_state, ptouch=ptouch,
-                 c_touch=c_touch, c_att=c_att, c_ok=c_ok, c_drop=c_drop,
-                 c_laden=c_laden, c_msgs=c_msgs,
-                 q_avail=q_avail, q_touch=q_touch, q_pay=q_pay,
-                 q_head=q_head, q_size=q_size)
+                cfg.latency_sigma, seed, STREAM_LAT, self._eids, k)
+            sp = core.send_edge(
+                u, t[esrc], active[esrc], lat, u["ptouch"][self._rev],
+                edges_out[esrc, self._out_slot], esrc, n, sorted_src=True)
+            u.update(sp.rings)
+            u.update(c_att=carry["c_att"] + sp.sums[:, 0],
+                     c_ok=carry["c_ok"] + sp.sums[:, 1],
+                     c_drop=carry["c_drop"] + sp.sums[:, 2])
         return self._finish_window(u, active, drained_r), None
 
     # ------------------------------------------------------------------
     def _window_body_dense(self, carry, _):
         """One lockstep window on the dense receiver-major layout.
 
-        Same window semantics as ``_window_body``, regrouped so one fused
-        ``duct_window`` pass per window touches the ring state
-        (DESIGN.md §10): the op applies the *previous* window's staged
-        sends, drains at this window's clocks, and merges halos — all per
-        receiver row, zero segment/scatter ops.  This window's sends are
-        then *decided* eagerly against the post-drain rings (drop iff
-        full, slot position, occupancy bump, all sender counters) and only
-        their ring writes are staged for the next pass.  The global
+        Same window semantics, regrouped so one fused ``duct_window`` pass
+        per window touches the ring state (core.window_dense) and this
+        window's sends are staged eagerly (core.stage_dense).  The global
         drain/send sequence — and with it every trajectory and QoS
         counter — is bitwise identical to the edge-major path.
         """
-        cfg, n = self.cfg, self.n
-        dd = self.lplan.degree
-        bapp = self.bapp
+        cfg = self.cfg
+        core = self.core
         comm = cfg.mode != AsyncMode.NO_COMM
-        seed = carry["seed"]
-        k = carry["k"]
-        t = carry["t"]
+        seed, k, t = carry["seed"], carry["k"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
-        halo = carry["halo"]
-        drained_r = jnp.zeros(n, jnp.int32)
+        drained_r = jnp.zeros(self.n, jnp.int32)
         u = dict(carry)
 
         if comm:
-            # --- 1. fused push-apply -> drain -> halo-select --------------
-            w = duct_window(
-                carry["q_avail"], carry["q_touch"], carry["q_pay"],
-                carry["q_head"], carry["q_size"],
-                carry["stage_pos"], carry["stage_acc"],
-                carry["stage_avail"], carry["stage_touch"],
-                carry["stage_pay"], t, active, max_pops=self.max_pops)
-            delivered = w.drained > 0
-            halo = jnp.where(w.halo_win[:, :, None], w.halo_pay, halo)
-            new_touch = w.recv_touch + 1
-            dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
-            ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
-            # receiver counters: plain row reductions over the d in-edges
-            drained_r = w.drained.sum(axis=1)
-            u.update(ptouch=ptouch,
-                     c_msgs=carry["c_msgs"] + drained_r,
-                     c_laden=carry["c_laden"] +
-                     delivered.astype(jnp.int32).sum(axis=1),
-                     c_touch=carry["c_touch"] + dtouch.sum(axis=1),
-                     q_avail=w.q_avail, q_touch=w.q_touch, q_pay=w.q_pay,
-                     q_head=w.head, q_size=w.size)
+            upd, drained_r = core.window_dense(carry, t, active)
+            u.update(upd)
 
-        # --- 2. the application's actual batched compute ------------------
-        new_state, edges_out = bapp.step(carry["app"], halo, carry["steps"],
-                                         seed, pids=self._pids)
-        app_state = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(
-                active.reshape((n,) + (1,) * (new.ndim - 1)), new, old),
-            new_state, carry["app"])
-        u.update(halo=halo, app=app_state, steps=carry["steps"] + active)
+        app_state, edges_out, steps = core.compute(
+            carry, active, u["halo"], self._pids)
+        u.update(app=app_state, steps=steps)
 
         if comm:
-            # --- 3. stage this window's sends; decide drop-iff-full NOW ---
-            # (against the post-drain rings — exactly what the edge-major
-            # send attempt sees — so counters land in this window)
             lat = self._d_lat * lognormal_factor(
                 cfg.latency_sigma, seed, STREAM_LAT, self._d_eid, k)
-            s_avail = t[self._d_src] + lat
-            s_act = active[self._d_src]
-            s_touch = u["ptouch"].reshape(-1)[self._d_rev]
-            s_pay = edges_out[self._d_src, self._d_out_slot]
-            q_size = u["q_size"]
-            s_acc = s_act & (q_size < cfg.buffer_capacity)
-            s_pos = (u["q_head"] + q_size) % cfg.buffer_capacity
-            # sender counters through the out-edge table: gathers, no
-            # scatters (row (p, j)'s sender is p by construction)
-            ok_r = s_acc.reshape(-1)[self._d_rev].astype(
-                jnp.int32).sum(axis=1)
-            att_r = jnp.where(active, dd, 0)
-            u.update(q_size=q_size + s_acc,
-                     c_att=carry["c_att"] + att_r,
-                     c_ok=carry["c_ok"] + ok_r,
-                     c_drop=carry["c_drop"] + att_r - ok_r,
-                     stage_pos=s_pos, stage_acc=s_acc, stage_avail=s_avail,
-                     stage_touch=s_touch, stage_pay=s_pay)
+            u.update(core.stage_dense(
+                carry, u, t, active, edges_out, lat,
+                src=self._d_src, rev=self._d_rev,
+                out_slot=self._d_out_slot, degree=self.lplan.degree))
         return self._finish_window(u, active, drained_r), None
 
     # ------------------------------------------------------------------
     def _finish_window(self, u, active, drained_r):
-        """Shared window tail (both layouts): QoS snapshot scatter,
-        termination, barrier release, and virtual-time advance."""
-        cfg, n = self.cfg, self.n
-        mode = cfg.mode
-        barriered = mode in _BARRIER_MODES
-        seed, t = u["seed"], u["t"]
-        steps = u["steps"]
-        done, waiting = u["done"], u["waiting"]
-        pending = (drained_r.astype(jnp.float32) * np.float32(
-            cfg.per_message_cost) +
-            self._deg.astype(jnp.float32) * np.float32(cfg.per_pull_cost))
-        snap_idx = u["snap_idx"]
-        thr = (np.float32(cfg.snapshot_warmup) +
-               snap_idx.astype(jnp.float32) * np.float32(
-                   cfg.snapshot_interval))
-        snap_due = active & (t >= thr) & (snap_idx < self.S)
-        row = jnp.stack([
-            steps.astype(jnp.float32), u["c_touch"].astype(jnp.float32),
-            u["c_att"].astype(jnp.float32), u["c_ok"].astype(jnp.float32),
-            u["c_drop"].astype(jnp.float32),
-            u["c_laden"].astype(jnp.float32),
-            u["c_msgs"].astype(jnp.float32), t], axis=1)
-        snap = u["snap"].at[jnp.where(snap_due, self._pids, n),
-                            snap_idx].set(row, mode="drop")
-        snap_idx = snap_idx + snap_due
-
-        # --- termination / barriers / time advance ------------------------
-        newly_done = active & (t >= np.float32(cfg.duration))
-        done = done | newly_done
-        d_next = (np.float32(cfg.base_compute + cfg.work_units *
-                             cfg.work_unit_cost) *
-                  self._step_factor(seed, steps))
-        barrier_seq = u["barrier_seq"]
-        last_release = u["last_release"]
-        pending_saved = u["pending"]
-
-        if barriered:
-            if mode == AsyncMode.BARRIER_EVERY_STEP:
-                due = active & ~newly_done
-            elif mode == AsyncMode.ROLLING_BARRIER:
-                due = active & ~newly_done & (
-                    (t - last_release) >= np.float32(cfg.rolling_quantum))
-            else:
-                due = active & ~newly_done & (
-                    t >= (barrier_seq + 1).astype(jnp.float32) *
-                    np.float32(cfg.fixed_interval))
-            waiting = waiting | due
-            pending_saved = jnp.where(due, pending, pending_saved)
-            t = jnp.where(active & ~newly_done & ~due,
-                          t + d_next + pending, t)
-            release_ready = jnp.all(waiting | done) & jnp.any(waiting)
-            release_t = (jnp.max(jnp.where(waiting, t, -jnp.inf)) +
-                         np.float32(self._barrier_cost()))
-            rel = release_ready & waiting
-            t = jnp.where(rel, release_t + d_next + pending_saved, t)
-            last_release = jnp.where(rel, release_t, last_release)
-            barrier_seq = barrier_seq + rel
-            waiting = waiting & ~release_ready
-        else:
-            t = jnp.where(active & ~newly_done, t + d_next + pending, t)
-
-        u = dict(u)
-        u.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
-                 barrier_seq=barrier_seq, last_release=last_release,
-                 pending=pending_saved, snap=snap, snap_idx=snap_idx)
-        return u
+        """Shared window tail (both layouts), with single-device release
+        reductions."""
+        return self.core.close_window(
+            u, active, drained_r, pids=self._pids, deg=self._deg,
+            cfactor=self._cfactor, release=LOCAL_RELEASE)
 
     # ------------------------------------------------------------------
     def _get_runner(self):
@@ -575,56 +323,7 @@ class JaxEngine:
 
     # ------------------------------------------------------------------
     def _assemble(self, carry, r: int) -> SimResult:
-        """Numpy-vectorized QoS assembly: all report fields for all
-        (process, window) samples come from whole-array ops over the
-        snapshot deltas — the python loop only constructs the result
-        objects.  The math mirrors ``core.qos.report`` exactly (same
-        guards, same operation order), so values are bit-identical to the
-        per-pair path it replaces."""
-        cfg, n = self.cfg, self.n
-        comm = cfg.mode != AsyncMode.NO_COMM
-        deg = np.asarray(self._deg, np.int64)
-        snap = np.asarray(carry["snap"][r], np.float64)      # (n, S, 8)
-        snap_idx = np.asarray(carry["snap_idx"][r])
-        steps = np.asarray(carry["steps"][r])
-
-        nwin = np.maximum(snap_idx - 1, 0)                   # reports/proc
-        d = snap[:, 1:, :] - snap[:, :-1, :]                 # (n, S-1, 8)
-        dup, dtch, datt = d[..., 0], d[..., 1], d[..., 2]
-        ddrop, dladen, dmsg, dwall = (d[..., 4], d[..., 5], d[..., 6],
-                                      d[..., 7])
-        period = dwall / np.maximum(dup, 1)
-        lat = dup / np.maximum(dtch, 1)
-        wall_lat = lat * period
-        fail = np.where(datt > 0, ddrop / np.maximum(datt, 1), 0.0)
-        dpull = dup * deg[:, None] if comm else np.zeros_like(dup)
-        opp = np.minimum(dmsg, dpull)
-        clump = np.where(
-            opp > 0, 1.0 - np.minimum(dladen / np.maximum(opp, 1), 1.0),
-            0.0)
-        t0, t1 = snap[:, :-1, 7], snap[:, 1:, 7]
-
-        qos_by_proc: Dict[int, List[QosReport]] = {}
-        all_qos: List[QosReport] = []
-        for p in range(n):
-            reps = [QosReport(
-                simstep_period=float(period[p, i]),
-                simstep_latency=float(lat[p, i]),
-                walltime_latency=float(wall_lat[p, i]),
-                delivery_failure_rate=float(fail[p, i]),
-                delivery_clumpiness=float(clump[p, i]),
-                t_start=float(t0[p, i]), t_end=float(t1[p, i]))
-                for i in range(int(nwin[p]))]
-            qos_by_proc[p] = reps
-            all_qos.extend(reps)
-
         app_state = jax.tree_util.tree_map(lambda x: x[r], carry["app"])
-        return SimResult(
-            updates=[int(u) for u in steps],
-            horizon=cfg.duration,
-            quality=self.bapp.quality(app_state),
-            qos=all_qos,
-            qos_by_process=qos_by_proc,
-            dropped=int(np.sum(carry["c_drop"][r])),
-            sent=int(np.sum(carry["c_att"][r])),
-        )
+        return self.core.assemble(
+            carry, r, np.asarray(self._deg, np.int64),
+            self.bapp.quality(app_state))

@@ -8,6 +8,13 @@ drain -> batched compute -> send under ``shard_map``, so only the thin set
 of cross-shard boundary edges ever crosses the device link — Conduit's
 partitioning discipline (arXiv:2105.10486) applied to the simulator itself.
 
+The window phases themselves live in ``runtime/window_core.py``
+(DESIGN.md §11) and are shared with the unsharded engine verbatim: this
+file keeps only what is genuinely distributed — the static shard layout
+and boundary tables, the packed-ppermute boundary exchange, and the
+barrier-release strategy (:class:`~repro.runtime.window_core.MeshRelease`
+pmin/pmax reductions over the shard axis).
+
 Layout.  ``topologies.contiguous_partition`` reorders pids so each shard's
 processes are contiguous; every duct ring lives on its *receiver's* shard,
 so drains, halo scatters, and receiver-side QoS counters are shard-local.
@@ -28,16 +35,12 @@ distinct shard offset:
      the receiver ``ppermute``s the accept bits back so the source shard
      can maintain its processes' attempted/ok/dropped send counters.
 
-Barrier modes need two scalar reductions per window (``pmin``/``pmax``
-over the shard axis — psum-style, exact); best-effort windows need none
-beyond the boundary hops.
-
 Parity.  All stochastic draws stay keyed by *original* pid and *canonical*
 edge id (the unsharded enumeration order), and halo-scatter ties resolve
 by canonical edge id, so a run is a pure function of ``(config, seed)``
 regardless of shard count: ``--shards 8`` reproduces ``--shards 1``
-trajectories exactly (``tests/test_engine_sharded.py``).  The replicate
-axis vmaps *inside* each shard, composing ``--replicates`` with
+trajectories exactly (``tests/test_engine_conformance.py``).  The
+replicate axis vmaps *inside* each shard, composing ``--replicates`` with
 ``--shards``.
 
 Self-paced supersteps (DESIGN.md §9).  The per-window exchange above is a
@@ -69,20 +72,16 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.modes import AsyncMode
-from repro.kernels.duct_exchange.ops import (
-    dense_halo_select,
-    duct_drain,
-    duct_send,
-)
 from repro.launch.mesh import SHARD_AXIS, make_shard_mesh, shard_map
-from repro.runtime.engine_jax import (
-    _BARRIER_MODES,
-    STREAM_LAT,
-    JaxEngine,
-    lognormal_factor,
-)
+from repro.runtime.engine_jax import JaxEngine
 from repro.runtime.simulator import SimResult
 from repro.runtime.topologies import contiguous_partition
+from repro.runtime.window_core import (
+    BARRIER_MODES,
+    STREAM_LAT,
+    MeshRelease,
+    lognormal_factor,
+)
 
 #: carry keys indexed by the process axis (permuted into shard layout)
 _PROC_KEYS = ("t", "steps", "done", "waiting", "barrier_seq", "last_release",
@@ -129,7 +128,7 @@ class ShardedJaxEngine(JaxEngine):
         if self.superstep < 1:
             raise ValueError(
                 f"superstep_windows must be >= 1, got {superstep_windows}")
-        if self.superstep > 1 and cfg.mode in _BARRIER_MODES:
+        if self.superstep > 1 and cfg.mode in BARRIER_MODES:
             # releases land only on superstep boundaries, so up to W-1 idle
             # windows precede each one — same virtual-time trajectory, more
             # lockstep windows consumed
@@ -141,6 +140,7 @@ class ShardedJaxEngine(JaxEngine):
         self.plan = contiguous_partition(self.topo, self.shards)
         self.mesh = make_shard_mesh(self.shards)
         self._m = self.n // self.shards
+        self._release = MeshRelease(SHARD_AXIS)
         self._build_statics()
         self._statics_sharded = None
         self._cspecs = None
@@ -258,19 +258,7 @@ class ShardedJaxEngine(JaxEngine):
         ``s * ein + j`` = shard s's local row j.  All-constant, so no
         canonical-order gather is needed (and the full-population edge
         arrays are never allocated)."""
-        cfg = self.cfg
-        rows = self.shards * self._ein
-        L = self.bapp.payload_len
-        return dict(
-            ptouch=jnp.zeros(rows, jnp.int32),
-            q_avail=jnp.full((rows, cfg.buffer_capacity), jnp.inf,
-                             jnp.float32),
-            q_touch=jnp.zeros((rows, cfg.buffer_capacity), jnp.int32),
-            q_pay=jnp.zeros((rows, cfg.buffer_capacity, L),
-                            self.bapp.payload_dtype),
-            q_head=jnp.zeros(rows, jnp.int32),
-            q_size=jnp.zeros(rows, jnp.int32),
-        )
+        return self.core.edge_rings(self.shards * self._ein)
 
     def _to_sharded_layout(self, carry):
         """Permute process-axis leaves into shard order (edge leaves are
@@ -298,71 +286,18 @@ class ShardedJaxEngine(JaxEngine):
         return specs
 
     # ------------------------------------------------------------------
-    # Window phases shared by the mid-superstep (shard-local) and the
-    # superstep-end (exchanging) window bodies
+    # Shard-local window phases: thin wrappers over the shared core with
+    # this shard's sentinel-padded tables
     # ------------------------------------------------------------------
     def _drain_phase(self, st, carry, t_pad, act_pad):
-        """Drain every local ring (they live on their receiver's shard),
-        scatter fresh payloads into halos, update receiver counters."""
-        m, ein = self._m, self._ein
-        rows = jnp.arange(ein, dtype=jnp.int32)
-        d = duct_drain(carry["q_avail"], carry["q_touch"],
-                       carry["q_head"], carry["q_size"],
-                       t_pad[st["row_dst"]], act_pad[st["row_dst"]],
-                       max_pops=self.max_pops, clear_popped=False)
-        delivered = d.drained > 0
-        payload = carry["q_pay"][rows, d.pop_pos]
-        L = carry["halo"].shape[-1]
-        if self.lplan.kind == "dense":
-            # receiver-major rows: halo merge and receiver sums are plain
-            # per-receiver reductions over the d in-edge rows (ascending j
-            # = ascending canonical id, the same tie-break)
-            dd = self.lplan.degree
-            halo_pay, halo_win = dense_halo_select(
-                delivered.reshape(m, dd), payload.reshape(m, dd, L))
-            halo = jnp.where(halo_win[:, :, None], halo_pay, carry["halo"])
-        else:
-            # local rows are in ascending canonical order, so the local
-            # segment_max resolves (dst, slot) ties exactly like the
-            # unsharded engine's canonical-id tie-break
-            winner = jax.ops.segment_max(
-                jnp.where(delivered, rows, -1), st["row_halo_key"],
-                num_segments=4 * m + 1)[:4 * m]
-            has_win = winner >= 0
-            fresh = payload[jnp.where(has_win, winner, 0)]
-            halo = jnp.where(has_win[:, None], fresh,
-                             carry["halo"].reshape(m * 4, L)).reshape(
-                m, 4, L)
-        new_touch = d.recv_touch + 1
-        dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
-        ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
-        recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
-                               dtouch], axis=1)
-        if self.lplan.kind == "dense":
-            recv_sums = recv_cols.reshape(m, self.lplan.degree, 3).sum(
-                axis=1)
-        else:
-            recv_sums = jax.ops.segment_sum(recv_cols, st["row_dst"],
-                                            num_segments=m + 1)[:m]
-        return dict(
-            halo=halo, ptouch=ptouch, drained_r=recv_sums[:, 0],
-            c_msgs=carry["c_msgs"] + recv_sums[:, 0],
-            c_laden=carry["c_laden"] + recv_sums[:, 1],
-            c_touch=carry["c_touch"] + recv_sums[:, 2],
-            q_avail=d.q_avail, q_touch=d.q_touch,
-            q_head=d.head, q_size=d.size)
-
-    def _compute_phase(self, st, carry, active, halo):
-        """The application's actual batched compute, masked by activity."""
-        m = self._m
-        new_state, edges_out = self.bapp.step(carry["app"], halo,
-                                              carry["steps"], carry["seed"],
-                                              pids=st["pids"])
-        app_state = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(
-                active.reshape((m,) + (1,) * (new.ndim - 1)), new, old),
-            new_state, carry["app"])
-        return app_state, edges_out, carry["steps"] + active
+        """Drain every local ring (they live on their receiver's shard)
+        through the shared core, with this shard's row tables."""
+        return self.core.drain(
+            carry, t_pad[st["row_dst"]], act_pad[st["row_dst"]],
+            halo_key=st["row_halo_key"], n_halo=4 * self._m,
+            dst=st["row_dst"], n_dst=self._m,
+            dense_degree=(self.lplan.degree
+                          if self.lplan.kind == "dense" else None))
 
     def _stage_offsets(self, st, t_pad, act_pad, eo_pad, ptouch_pad,
                        seed, k):
@@ -393,86 +328,13 @@ class ShardedJaxEngine(JaxEngine):
         return staged
 
     def _close_window(self, st, u, active, drained_r, *, release: bool):
-        """QoS snapshot + termination / barrier / time advance.
-
-        ``release=False`` (mid-superstep windows) skips the cross-shard
-        pmin/pmax release check — waiting processes stay waiting until the
-        superstep boundary.  Their clocks do not advance while waiting, so
-        the release *time* computed at the boundary is identical; only the
-        lockstep window it lands on moves.
-        """
-        cfg, m = self.cfg, self._m
-        mode = cfg.mode
-        barriered = mode in _BARRIER_MODES
-        t, steps = u["t"], u["steps"]
-        done, waiting = u["done"], u["waiting"]
-        pending = (drained_r.astype(jnp.float32) * np.float32(
-            cfg.per_message_cost) +
-            st["deg"].astype(jnp.float32) * np.float32(cfg.per_pull_cost))
-        snap_idx = u["snap_idx"]
-        thr = (np.float32(cfg.snapshot_warmup) +
-               snap_idx.astype(jnp.float32) * np.float32(
-                   cfg.snapshot_interval))
-        snap_due = active & (t >= thr) & (snap_idx < self.S)
-        row = jnp.stack([
-            steps.astype(jnp.float32), u["c_touch"].astype(jnp.float32),
-            u["c_att"].astype(jnp.float32), u["c_ok"].astype(jnp.float32),
-            u["c_drop"].astype(jnp.float32),
-            u["c_laden"].astype(jnp.float32),
-            u["c_msgs"].astype(jnp.float32), t], axis=1)
-        snap = u["snap"].at[
-            jnp.where(snap_due, jnp.arange(m, dtype=jnp.int32), m),
-            snap_idx].set(row, mode="drop")
-        snap_idx = snap_idx + snap_due
-
-        newly_done = active & (t >= np.float32(cfg.duration))
-        done = done | newly_done
-        d_next = (np.float32(cfg.base_compute + cfg.work_units *
-                             cfg.work_unit_cost) *
-                  self._step_factor(u["seed"], steps, pids=st["pids"],
-                                    cfactor=st["cfactor"]))
-        barrier_seq = u["barrier_seq"]
-        last_release = u["last_release"]
-        pending_saved = u["pending"]
-
-        if barriered:
-            if mode == AsyncMode.BARRIER_EVERY_STEP:
-                due = active & ~newly_done
-            elif mode == AsyncMode.ROLLING_BARRIER:
-                due = active & ~newly_done & (
-                    (t - last_release) >= np.float32(cfg.rolling_quantum))
-            else:
-                due = active & ~newly_done & (
-                    t >= (barrier_seq + 1).astype(jnp.float32) *
-                    np.float32(cfg.fixed_interval))
-            waiting = waiting | due
-            pending_saved = jnp.where(due, pending, pending_saved)
-            t = jnp.where(active & ~newly_done & ~due,
-                          t + d_next + pending, t)
-            if release:
-                # global barrier state: exact psum-style scalar reductions,
-                # once per superstep
-                g_all = jax.lax.pmin(
-                    jnp.all(waiting | done).astype(jnp.int32), SHARD_AXIS)
-                g_any = jax.lax.pmax(
-                    jnp.any(waiting).astype(jnp.int32), SHARD_AXIS)
-                release_ready = (g_all > 0) & (g_any > 0)
-                release_t = (jax.lax.pmax(
-                    jnp.max(jnp.where(waiting, t, -jnp.inf)), SHARD_AXIS) +
-                    np.float32(self._barrier_cost()))
-                rel = release_ready & waiting
-                t = jnp.where(rel, release_t + d_next + pending_saved, t)
-                last_release = jnp.where(rel, release_t, last_release)
-                barrier_seq = barrier_seq + rel
-                waiting = waiting & ~release_ready
-        else:
-            t = jnp.where(active & ~newly_done, t + d_next + pending, t)
-
-        out = dict(u)
-        out.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
-                   barrier_seq=barrier_seq, last_release=last_release,
-                   pending=pending_saved, snap=snap, snap_idx=snap_idx)
-        return out
+        """Shared window tail with mesh release reductions; mid-superstep
+        windows (``release=False``) skip the cross-shard pmin/pmax check —
+        waiting processes stay waiting until the superstep boundary."""
+        return self.core.close_window(
+            u, active, drained_r, pids=st["pids"], deg=st["deg"],
+            cfactor=st["cfactor"],
+            release=self._release if release else None)
 
     # ------------------------------------------------------------------
     # Window bodies
@@ -486,9 +348,8 @@ class ShardedJaxEngine(JaxEngine):
         each shard advances at its own jittered pace — fault-injected
         shards simply fall behind in virtual time.
         """
-        cfg, m, ein = self.cfg, self._m, self._ein
+        cfg, m = self.cfg, self._m
         comm = cfg.mode != AsyncMode.NO_COMM
-        rows = jnp.arange(ein, dtype=jnp.int32)
         seed, k, t = carry["seed"], carry["k"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
         # sentinel-padded per-process vectors: index m = inactive dummy
@@ -498,11 +359,10 @@ class ShardedJaxEngine(JaxEngine):
         drained_r = jnp.zeros(m, jnp.int32)
         staged = {}
         if comm:
-            dr = self._drain_phase(st, carry, t_pad, act_pad)
-            drained_r = dr.pop("drained_r")
+            dr, drained_r = self._drain_phase(st, carry, t_pad, act_pad)
             u.update(dr)
-        app_state, edges_out, steps = self._compute_phase(
-            st, carry, active, u["halo"])
+        app_state, edges_out, steps = self.core.compute(
+            carry, active, u["halo"], st["pids"])
         u.update(app=app_state, steps=steps)
         if comm:
             eo_pad = jnp.concatenate(
@@ -516,24 +376,15 @@ class ShardedJaxEngine(JaxEngine):
             lat_row = st["row_lat"] * lognormal_factor(
                 cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
             x_act = act_pad[st["row_src"]] & st["row_interior"]
-            s = duct_send(u["q_avail"], u["q_touch"], u["q_head"],
-                          u["q_size"], t_pad[st["row_src"]] + lat_row,
-                          x_act, jnp.float32(0.0),
-                          ptouch_pad[st["row_rev"]],
-                          capacity=cfg.buffer_capacity)
-            u["q_pay"] = carry["q_pay"].at[
-                jnp.where(s.accepted, rows, ein), s.push_pos].set(
-                eo_pad[st["row_src"], st["row_out_slot"]], mode="drop")
-            u.update(q_avail=s.q_avail, q_touch=s.q_touch, q_size=s.size)
-            send_cols = jnp.stack([
-                x_act.astype(jnp.int32),
-                (x_act & s.accepted).astype(jnp.int32),
-                (x_act & ~s.accepted).astype(jnp.int32)], axis=1)
-            send_sums = jax.ops.segment_sum(send_cols, st["row_src"],
-                                            num_segments=m + 1)[:m]
-            u.update(c_att=carry["c_att"] + send_sums[:, 0],
-                     c_ok=carry["c_ok"] + send_sums[:, 1],
-                     c_drop=carry["c_drop"] + send_sums[:, 2])
+            sp = self.core.send_edge(
+                u, t_pad[st["row_src"]] + lat_row, x_act, jnp.float32(0.0),
+                ptouch_pad[st["row_rev"]],
+                eo_pad[st["row_src"], st["row_out_slot"]],
+                st["row_src"], m)
+            u.update(sp.rings)
+            u.update(c_att=carry["c_att"] + sp.sums[:, 0],
+                     c_ok=carry["c_ok"] + sp.sums[:, 1],
+                     c_drop=carry["c_drop"] + sp.sums[:, 2])
         return self._close_window(st, u, active, drained_r,
                                   release=False), staged
 
@@ -551,7 +402,6 @@ class ShardedJaxEngine(JaxEngine):
         cfg, m, ein, S = self.cfg, self._m, self._ein, self.shards
         W = self.superstep
         comm = cfg.mode != AsyncMode.NO_COMM
-        rows = jnp.arange(ein, dtype=jnp.int32)
         seed, k, t = carry["seed"], carry["k"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
         t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
@@ -559,11 +409,10 @@ class ShardedJaxEngine(JaxEngine):
         u = dict(carry)
         drained_r = jnp.zeros(m, jnp.int32)
         if comm:
-            dr = self._drain_phase(st, carry, t_pad, act_pad)
-            drained_r = dr.pop("drained_r")
+            dr, drained_r = self._drain_phase(st, carry, t_pad, act_pad)
             u.update(dr)
-        app_state, edges_out, steps = self._compute_phase(
-            st, carry, active, u["halo"])
+        app_state, edges_out, steps = self.core.compute(
+            carry, active, u["halo"], st["pids"])
         u.update(app=app_state, steps=steps)
         if comm:
             pay_dtype = edges_out.dtype
@@ -600,9 +449,8 @@ class ShardedJaxEngine(JaxEngine):
             # push their current message in the last pass (their own
             # window).  Rings are single-writer, so the row sets are
             # disjoint and pass composition is exact.
-            q_avail, q_touch = u["q_avail"], u["q_touch"]
-            q_head, q_size = u["q_head"], u["q_size"]
-            q_pay = carry["q_pay"]
+            rings = {key: u[key] for key in
+                     ("q_avail", "q_touch", "q_head", "q_size", "q_pay")}
             acc = {str(off): [] for off in self._offsets}
             send_sums = jnp.zeros((m, 3), jnp.int32)
             for j in range(W):
@@ -622,14 +470,12 @@ class ShardedJaxEngine(JaxEngine):
                     x_tch = x_tch.at[rr].set(buf[:, Lp + 1], mode="drop")
                     x_act = x_act.at[rr].set(buf[:, Lp + 2].astype(bool),
                                              mode="drop")
-                s = duct_send(q_avail, q_touch, q_head, q_size,
-                              x_avail, x_act, jnp.float32(0.0), x_tch,
-                              capacity=cfg.buffer_capacity)
-                q_pay = q_pay.at[
-                    jnp.where(s.accepted, rows, ein), s.push_pos].set(
-                    x_pay, mode="drop")
-                q_avail, q_touch, q_size = s.q_avail, s.q_touch, s.size
-                acc_pad = jnp.concatenate([s.accepted, jnp.zeros(1, bool)])
+                sp = self.core.send_edge(
+                    rings, x_avail, x_act, jnp.float32(0.0), x_tch, x_pay,
+                    st["row_src"], m, want_sums=last)
+                rings.update(sp.rings)
+                acc_pad = jnp.concatenate([sp.accepted,
+                                           jnp.zeros(1, bool)])
                 for off in self._offsets:
                     acc[str(off)].append(
                         acc_pad[st["bnd"][str(off)]["rcv_row"]])
@@ -637,14 +483,8 @@ class ShardedJaxEngine(JaxEngine):
                     # interior counters (boundary rows carry the m sentinel
                     # in row_src: their contributions drop into the spare
                     # segment)
-                    send_cols = jnp.stack([
-                        x_act.astype(jnp.int32),
-                        (x_act & s.accepted).astype(jnp.int32),
-                        (x_act & ~s.accepted).astype(jnp.int32)], axis=1)
-                    send_sums = jax.ops.segment_sum(
-                        send_cols, st["row_src"], num_segments=m + 1)[:m]
-            u.update(q_avail=q_avail, q_touch=q_touch, q_size=q_size,
-                     q_pay=q_pay)
+                    send_sums = sp.sums
+            u.update(rings)
 
             # --- accept hop: ONE packed reverse ppermute per offset -------
             for off in self._offsets:

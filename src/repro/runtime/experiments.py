@@ -111,12 +111,14 @@ def _topology_for(args, n: int) -> Topology:
 
 def _engine_kwargs(args) -> dict:
     """Backend options forwarded to ``make_engine``
-    (--shards / --superstep-windows / --layout)."""
+    (--shards / --scheduler / --superstep-windows / --layout)."""
     kw = {}
     if args.shards > 1:
         kw["shards"] = args.shards
     if args.superstep_windows > 1:
         kw["superstep_windows"] = args.superstep_windows
+    if args.scheduler != "auto":
+        kw["scheduler"] = args.scheduler
     if args.layout != "auto":
         kw["layout"] = args.layout
     return kw
@@ -294,6 +296,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "superstep, cutting the collective count ~W x.  "
                         "1 = per-window exchange (bitwise-identical "
                         "trajectories); needs --shards > 1")
+    p.add_argument("--scheduler", default="auto",
+                   choices=["auto", "window", "superstep"],
+                   help="exchange cadence strategy (DESIGN.md §11): window "
+                        "= cross-shard boundary exchange every lockstep "
+                        "window, superstep = batched every "
+                        "--superstep-windows windows (needs --shards > 1); "
+                        "auto follows --superstep-windows")
     p.add_argument("--layout", default="auto",
                    choices=["auto", "dense", "edge"],
                    help="duct ring layout for --engine jax (DESIGN.md "
@@ -346,6 +355,13 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     if args.superstep_windows > 1 and args.shards <= 1:
         parser.error("--superstep-windows > 1 requires --shards > 1 "
                      "(it amortizes cross-shard exchanges)")
+    if args.scheduler == "superstep" and args.superstep_windows <= 1:
+        parser.error("--scheduler superstep needs --superstep-windows > 1 "
+                     "to choose the batch size W")
+    if args.scheduler == "window" and args.superstep_windows > 1:
+        parser.error("--scheduler window exchanges every lockstep window; "
+                     "drop --superstep-windows or pass "
+                     "--scheduler superstep")
     if args.qos_interval is not None and args.qos_interval <= 0:
         parser.error("--qos-interval must be positive")
     if args.layout != "auto" and args.engine != "jax":

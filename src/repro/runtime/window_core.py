@@ -1,0 +1,546 @@
+"""Shared window-phase core for the vectorized engines (DESIGN.md §11).
+
+Both JAX engines — the single-device windowed-time engine
+(``runtime/engine_jax.py``) and the mesh-sharded engine
+(``runtime/engine_sharded.py``) — advance the population through the same
+lockstep-window phases:
+
+  drain      pop every duct ring's available FIFO prefix, merge the
+             freshest payloads into the (n, 4, L) halos, bump the
+             receiver-side QoS counters
+  compute    the application's actual batched step, masked by activity
+  send       best-effort push attempt per out-edge (drop iff the ring is
+             full, latency stamp), sender-side QoS counters
+  stage      the dense layout's eager send decision (ring writes ride
+             into the next window's fused ``duct_window`` pass)
+  close      QoS snapshot scatter, termination, barrier bookkeeping and
+             the virtual-time advance
+
+Before this module existed each engine reimplemented all of them; now the
+engines are thin compositions.  What stays engine-specific is exactly the
+distribution machinery: the sharded engine's mesh/shard_map plumbing,
+packed-ppermute boundary exchange, and *where* its barrier-release
+reductions run (a :class:`MeshRelease` over the shard axis instead of
+:data:`LOCAL_RELEASE`).  The phases themselves are row-count agnostic:
+the unsharded engine passes full-population tables, the sharded engine
+passes its shard's sentinel-padded slices, and both trace to the same
+operation sequence — which is why ``tests/test_engine_conformance.py``
+can pin every registry engine to the event-engine oracle bitwise.
+
+All stochastic draws are counter-based splitmix-style hashes (the
+in-graph twin of ``runtime/faults.py``'s splitmix64 streams — same
+distributions, different bit streams), keyed by *original* pid and
+*canonical* edge id so trajectories are a pure function of
+``(config, seed)`` regardless of layout, scheduler, or shard count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modes import AsyncMode
+from repro.core.qos import QosReport
+from repro.kernels.duct_exchange.ops import (
+    dense_halo_select,
+    dense_stage,
+    duct_drain,
+    duct_send,
+    duct_window,
+)
+from repro.runtime.simulator import SimResult
+
+#: modes whose processes stop at a barrier and wait for a global release
+BARRIER_MODES = (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
+                 AsyncMode.FIXED_BARRIER)
+
+# ---------------------------------------------------------------------------
+# Counter-based RNG: splitmix-style 32-bit finalizer chains, pure functions
+# of their integer keys.
+# ---------------------------------------------------------------------------
+_GOLDEN = np.uint32(0x9E3779B9)
+
+# stream tags keep independent draws independent
+STREAM_STEP, STREAM_STALL, STREAM_LAT, STREAM_APP, STREAM_MUT = 1, 2, 3, 4, 5
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """32-bit splitmix-style finalizer (lowbias32 constants)."""
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    return x ^ (x >> np.uint32(16))
+
+
+def hash_u32(*keys) -> jax.Array:
+    """Combine integer keys (arrays broadcast) into one hashed uint32."""
+    h = _GOLDEN
+    for k in keys:
+        k = jnp.asarray(k).astype(jnp.uint32)
+        h = _mix32(h ^ (k + _GOLDEN + (h << np.uint32(6)) +
+                        (h >> np.uint32(2))))
+    return h
+
+
+def hash_uniform(*keys) -> jax.Array:
+    """Deterministic uniform in (0, 1) from integer keys."""
+    h = hash_u32(*keys)
+    return ((h >> np.uint32(8)).astype(jnp.float32) + 0.5) * np.float32(
+        1.0 / (1 << 24))
+
+
+def hash_normal(*keys) -> jax.Array:
+    u1 = hash_uniform(*keys, 101)
+    u2 = hash_uniform(*keys, 202)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * np.pi * u2)
+
+
+def lognormal_factor(sigma: float, *keys) -> jax.Array:
+    """Mean-one lognormal, matching faults.Jitter's parameterization."""
+    if sigma <= 0:
+        return jnp.ones(jnp.broadcast_shapes(
+            *(jnp.shape(k) for k in keys)), jnp.float32)
+    z = hash_normal(*keys)
+    return jnp.exp(np.float32(-0.5 * sigma * sigma) + np.float32(sigma) * z)
+
+
+# ---------------------------------------------------------------------------
+# Barrier-release strategies: where the close phase's global reductions run
+# ---------------------------------------------------------------------------
+class LocalRelease:
+    """Single-device release reductions: plain jnp reductions."""
+
+    def all_stopped(self, x: jax.Array) -> jax.Array:
+        return jnp.all(x)
+
+    def any_waiting(self, x: jax.Array) -> jax.Array:
+        return jnp.any(x)
+
+    def max_time(self, x: jax.Array) -> jax.Array:
+        return jnp.max(x)
+
+
+#: the default strategy (one device holds the whole population)
+LOCAL_RELEASE = LocalRelease()
+
+
+class MeshRelease:
+    """Cross-shard release reductions: exact psum-style pmin/pmax scalars
+    over the named mesh axis, once per (super)step."""
+
+    def __init__(self, axis: str):
+        self.axis = axis
+
+    def all_stopped(self, x: jax.Array) -> jax.Array:
+        return jax.lax.pmin(jnp.all(x).astype(jnp.int32), self.axis) > 0
+
+    def any_waiting(self, x: jax.Array) -> jax.Array:
+        return jax.lax.pmax(jnp.any(x).astype(jnp.int32), self.axis) > 0
+
+    def max_time(self, x: jax.Array) -> jax.Array:
+        return jax.lax.pmax(jnp.max(x), self.axis)
+
+
+class SendPhase(NamedTuple):
+    """Result of one edge-major send attempt over a block of rings."""
+    rings: Dict[str, jax.Array]   # q_avail / q_touch / q_size / q_pay
+    accepted: jax.Array           # (rows,) bool push accepted
+    sums: Optional[jax.Array]     # (n, 3) attempted/ok/dropped per process
+
+
+# ---------------------------------------------------------------------------
+# The core
+# ---------------------------------------------------------------------------
+class WindowCore:
+    """Window-phase kernels shared by every vectorized engine.
+
+    Holds only population-invariant configuration (``cfg``, the batched
+    app's payload shape, snapshot slot count, barrier cost).  Topology
+    tables — edge endpoints, halo keys, latency bases, per-shard row
+    tables — are *arguments* to the phase methods, so one core instance
+    serves the full population and any sentinel-padded shard slice of it
+    with identical traced semantics.
+    """
+
+    def __init__(self, cfg, bapp, n: int, *, max_pops: int = 16):
+        self.cfg = cfg
+        self.bapp = bapp
+        self.n = n
+        self.max_pops = max_pops
+        warmup, interval = cfg.snapshot_warmup, cfg.snapshot_interval
+        #: snapshot slots per process (S in DESIGN.md §7)
+        self.S = max(1, int((cfg.duration - warmup) / interval) + 3)
+        base_total = cfg.base_compute + cfg.work_units * cfg.work_unit_cost
+        self.base_total = np.float32(base_total)
+        if n <= 1:
+            self.barrier_cost = 0.0
+        else:
+            self.barrier_cost = (cfg.barrier_base +
+                                 cfg.barrier_per_log2 * math.log2(n))
+        # generous lockstep-window budget: fastest plausible step is about
+        # half the mean, plus slack for barrier-arrival idling
+        self.default_max_windows = int(8 * cfg.duration / base_total) + 2048
+
+    # ------------------------------------------------------------------
+    # RNG phases
+    # ------------------------------------------------------------------
+    def step_factor(self, seed, steps, pids, cfactor) -> jax.Array:
+        """Per-process compute-time factor; draws are keyed by original
+        pid, so any shard slice reproduces the full-population stream."""
+        cfg = self.cfg
+        f = lognormal_factor(cfg.jitter_sigma, seed, STREAM_STEP,
+                             pids, steps)
+        if cfg.stall_prob > 0:
+            u = hash_uniform(seed, STREAM_STALL, pids, steps)
+            f = jnp.where(u < cfg.stall_prob,
+                          f * np.float32(cfg.stall_factor), f)
+        return f * cfactor
+
+    # ------------------------------------------------------------------
+    # State builders
+    # ------------------------------------------------------------------
+    def edge_rings(self, rows: int) -> Dict[str, jax.Array]:
+        """Fresh (empty) edge-major ring state for ``rows`` rings — the
+        unsharded engine's E canonical edges or a sharded engine's padded
+        ``shards * ein`` local rows; all-constant either way."""
+        cfg = self.cfg
+        L = self.bapp.payload_len
+        return dict(
+            ptouch=jnp.zeros(rows, jnp.int32),
+            q_avail=jnp.full((rows, cfg.buffer_capacity), jnp.inf,
+                             jnp.float32),
+            q_touch=jnp.zeros((rows, cfg.buffer_capacity), jnp.int32),
+            q_pay=jnp.zeros((rows, cfg.buffer_capacity, L),
+                            self.bapp.payload_dtype),
+            q_head=jnp.zeros(rows, jnp.int32),
+            q_size=jnp.zeros(rows, jnp.int32),
+        )
+
+    def dense_rings(self, n: int, d: int) -> Dict[str, jax.Array]:
+        """Fresh dense receiver-major ring state ``(n, d, C)`` plus the
+        staged-send buffers: the send *decision* happens eagerly at stage
+        time, the ring *writes* ride into the next window's fused
+        ``duct_window`` pass (DESIGN.md §10)."""
+        cfg = self.cfg
+        C = cfg.buffer_capacity
+        L = self.bapp.payload_len
+        return dict(
+            ptouch=jnp.zeros((n, d), jnp.int32),
+            q_avail=jnp.full((n, d, C), jnp.inf, jnp.float32),
+            q_touch=jnp.zeros((n, d, C), jnp.int32),
+            q_pay=jnp.zeros((n, d, C, L), self.bapp.payload_dtype),
+            q_head=jnp.zeros((n, d), jnp.int32),
+            q_size=jnp.zeros((n, d), jnp.int32),
+            stage_pos=jnp.zeros((n, d), jnp.int32),
+            stage_acc=jnp.zeros((n, d), bool),
+            stage_avail=jnp.zeros((n, d), jnp.float32),
+            stage_touch=jnp.zeros((n, d), jnp.int32),
+            stage_pay=jnp.zeros((n, d, L), self.bapp.payload_dtype),
+        )
+
+    # ------------------------------------------------------------------
+    # Phase 1: drain
+    # ------------------------------------------------------------------
+    def drain(self, carry, t_rows, act_rows, *, halo_key, n_halo,
+              dst, n_dst, dense_degree: Optional[int] = None):
+        """Edge-major drain over a block of rings living on their
+        receiver's device: bounded FIFO pops, halo-winner select, and the
+        three receiver-side QoS counter columns.
+
+        ``halo_key`` flattens (receiver, slot); several in-edges may share
+        one halo slot, and delivery ties resolve to the highest row index
+        (rows are in ascending canonical-edge order on every engine), so
+        the scatter is deterministic on every backend.  Sentinel-padded
+        tables work unchanged: invalid rows carry key ``n_halo`` /
+        segment ``n_dst``, which land in the sliced-off spare segment.
+        With ``dense_degree`` the rows are receiver-major ``(n_dst, d)``
+        blocks and both the halo merge and the counter sums become plain
+        per-receiver reductions — no scatters at all.
+
+        Returns ``(carry updates, drained_r)``.
+        """
+        rows = jnp.arange(t_rows.shape[0], dtype=jnp.int32)
+        d = duct_drain(carry["q_avail"], carry["q_touch"],
+                       carry["q_head"], carry["q_size"],
+                       t_rows, act_rows, max_pops=self.max_pops,
+                       clear_popped=False)
+        delivered = d.drained > 0
+        payload = carry["q_pay"][rows, d.pop_pos]
+        L = carry["halo"].shape[-1]
+        if dense_degree is not None:
+            halo_pay, halo_win = dense_halo_select(
+                delivered.reshape(n_dst, dense_degree),
+                payload.reshape(n_dst, dense_degree, L))
+            halo = jnp.where(halo_win[:, :, None], halo_pay, carry["halo"])
+        else:
+            winner = jax.ops.segment_max(
+                jnp.where(delivered, rows, -1), halo_key,
+                num_segments=n_halo + 1)[:n_halo]
+            has_win = winner >= 0
+            fresh = payload[jnp.where(has_win, winner, 0)]
+            halo = jnp.where(has_win[:, None], fresh,
+                             carry["halo"].reshape(n_halo, L)).reshape(
+                n_dst, 4, L)
+        new_touch = d.recv_touch + 1
+        dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+        ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+        # one multi-column reduction for all receiver-side counters
+        recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
+                               dtouch], axis=1)
+        if dense_degree is not None:
+            recv_sums = recv_cols.reshape(n_dst, dense_degree, 3).sum(axis=1)
+        else:
+            recv_sums = jax.ops.segment_sum(recv_cols, dst,
+                                            num_segments=n_dst + 1)[:n_dst]
+        return dict(
+            halo=halo, ptouch=ptouch,
+            c_msgs=carry["c_msgs"] + recv_sums[:, 0],
+            c_laden=carry["c_laden"] + recv_sums[:, 1],
+            c_touch=carry["c_touch"] + recv_sums[:, 2],
+            q_avail=d.q_avail, q_touch=d.q_touch,
+            q_head=d.head, q_size=d.size), recv_sums[:, 0]
+
+    def window_dense(self, carry, t, active):
+        """Dense-layout drain phase: one fused ``duct_window`` pass applies
+        the previous window's staged sends, drains at this window's
+        clocks, and merges halos — per receiver row, zero scatters
+        (DESIGN.md §10).  Returns ``(carry updates, drained_r)``."""
+        w = duct_window(
+            carry["q_avail"], carry["q_touch"], carry["q_pay"],
+            carry["q_head"], carry["q_size"],
+            carry["stage_pos"], carry["stage_acc"],
+            carry["stage_avail"], carry["stage_touch"],
+            carry["stage_pay"], t, active, max_pops=self.max_pops)
+        delivered = w.drained > 0
+        halo = jnp.where(w.halo_win[:, :, None], w.halo_pay, carry["halo"])
+        new_touch = w.recv_touch + 1
+        dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+        ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+        drained_r = w.drained.sum(axis=1)
+        return dict(
+            halo=halo, ptouch=ptouch,
+            c_msgs=carry["c_msgs"] + drained_r,
+            c_laden=carry["c_laden"] +
+            delivered.astype(jnp.int32).sum(axis=1),
+            c_touch=carry["c_touch"] + dtouch.sum(axis=1),
+            q_avail=w.q_avail, q_touch=w.q_touch, q_pay=w.q_pay,
+            q_head=w.head, q_size=w.size), drained_r
+
+    # ------------------------------------------------------------------
+    # Phase 2: compute
+    # ------------------------------------------------------------------
+    def compute(self, carry, active, halo, pids):
+        """The application's actual batched compute, masked by activity.
+        Returns ``(app_state, edges_out, steps)``."""
+        n = active.shape[0]
+        new_state, edges_out = self.bapp.step(carry["app"], halo,
+                                              carry["steps"], carry["seed"],
+                                              pids=pids)
+        app_state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(
+                active.reshape((n,) + (1,) * (new.ndim - 1)), new, old),
+            new_state, carry["app"])
+        return app_state, edges_out, carry["steps"] + active
+
+    # ------------------------------------------------------------------
+    # Phase 3: send (edge-major)
+    # ------------------------------------------------------------------
+    def send_edge(self, rings, now, act, lat, touch, payload,
+                  src, n_src, *, sorted_src: bool = False,
+                  want_sums: bool = True) -> SendPhase:
+        """Best-effort push attempt over a block of edge-major rings (drop
+        iff the post-drain ring is full) plus the sender-side counter
+        columns, summed per source process.  Sentinel-padded ``src``
+        tables (value ``n_src``) drop their contributions into the sliced
+        spare segment; ``want_sums=False`` skips the reduction (the
+        sharded superstep push passes only need the final pass's sums)."""
+        rows_n = rings["q_avail"].shape[0]
+        rows = jnp.arange(rows_n, dtype=jnp.int32)
+        s = duct_send(rings["q_avail"], rings["q_touch"],
+                      rings["q_head"], rings["q_size"],
+                      now, act, lat, touch,
+                      capacity=self.cfg.buffer_capacity)
+        q_pay = rings["q_pay"].at[
+            jnp.where(s.accepted, rows, rows_n), s.push_pos].set(
+            payload, mode="drop")
+        sums = None
+        if want_sums:
+            send_cols = jnp.stack([
+                act.astype(jnp.int32),
+                (act & s.accepted).astype(jnp.int32),
+                (act & ~s.accepted).astype(jnp.int32)], axis=1)
+            sums = jax.ops.segment_sum(send_cols, src,
+                                       num_segments=n_src + 1,
+                                       indices_are_sorted=sorted_src)[:n_src]
+        return SendPhase(
+            rings=dict(q_avail=s.q_avail, q_touch=s.q_touch,
+                       q_size=s.size, q_pay=q_pay),
+            accepted=s.accepted, sums=sums)
+
+    # ------------------------------------------------------------------
+    # Phase 3': stage (dense layout)
+    # ------------------------------------------------------------------
+    def stage_dense(self, carry, u, t, active, edges_out, lat,
+                    *, src, rev, out_slot, degree):
+        """Stage this window's sends on the dense layout: decide
+        drop-iff-full NOW against the post-drain rings (exactly what the
+        edge-major send attempt sees, so counters land in this window)
+        and defer only the ring writes to the next fused pass.  Sender
+        counters come through the out-edge table as gathers — row
+        ``(p, j)``'s sender is ``p`` by construction, so no scatters."""
+        s_avail = t[src] + lat
+        s_act = active[src]
+        s_touch = u["ptouch"].reshape(-1)[rev]
+        s_pay = edges_out[src, out_slot]
+        s_pos, s_acc = dense_stage(u["q_head"], u["q_size"], s_act,
+                                   capacity=self.cfg.buffer_capacity)
+        ok_r = s_acc.reshape(-1)[rev].astype(jnp.int32).sum(axis=1)
+        att_r = jnp.where(active, degree, 0)
+        return dict(q_size=u["q_size"] + s_acc,
+                    c_att=carry["c_att"] + att_r,
+                    c_ok=carry["c_ok"] + ok_r,
+                    c_drop=carry["c_drop"] + att_r - ok_r,
+                    stage_pos=s_pos, stage_acc=s_acc, stage_avail=s_avail,
+                    stage_touch=s_touch, stage_pay=s_pay)
+
+    # ------------------------------------------------------------------
+    # Phase 4: close window
+    # ------------------------------------------------------------------
+    def close_window(self, u, active, drained_r, *, pids, deg, cfactor,
+                     release):
+        """Shared window tail: QoS snapshot scatter, termination, barrier
+        bookkeeping, and the virtual-time advance.
+
+        ``release`` picks where the barrier-release reductions run:
+        :data:`LOCAL_RELEASE` on one device, a :class:`MeshRelease` over
+        the shard axis, or ``None`` to skip the release check entirely
+        (mid-superstep windows: waiting clocks do not advance, so the
+        release *time* computed at the superstep boundary is identical —
+        only the lockstep window it lands on moves)."""
+        cfg = self.cfg
+        mode = cfg.mode
+        barriered = mode in BARRIER_MODES
+        t, steps = u["t"], u["steps"]
+        n = t.shape[0]
+        done, waiting = u["done"], u["waiting"]
+        pending = (drained_r.astype(jnp.float32) * np.float32(
+            cfg.per_message_cost) +
+            deg.astype(jnp.float32) * np.float32(cfg.per_pull_cost))
+        snap_idx = u["snap_idx"]
+        thr = (np.float32(cfg.snapshot_warmup) +
+               snap_idx.astype(jnp.float32) * np.float32(
+                   cfg.snapshot_interval))
+        snap_due = active & (t >= thr) & (snap_idx < self.S)
+        row = jnp.stack([
+            steps.astype(jnp.float32), u["c_touch"].astype(jnp.float32),
+            u["c_att"].astype(jnp.float32), u["c_ok"].astype(jnp.float32),
+            u["c_drop"].astype(jnp.float32),
+            u["c_laden"].astype(jnp.float32),
+            u["c_msgs"].astype(jnp.float32), t], axis=1)
+        snap = u["snap"].at[
+            jnp.where(snap_due, jnp.arange(n, dtype=jnp.int32), n),
+            snap_idx].set(row, mode="drop")
+        snap_idx = snap_idx + snap_due
+
+        # --- termination / barriers / time advance ------------------------
+        newly_done = active & (t >= np.float32(cfg.duration))
+        done = done | newly_done
+        d_next = self.base_total * self.step_factor(u["seed"], steps,
+                                                    pids, cfactor)
+        barrier_seq = u["barrier_seq"]
+        last_release = u["last_release"]
+        pending_saved = u["pending"]
+
+        if barriered:
+            if mode == AsyncMode.BARRIER_EVERY_STEP:
+                due = active & ~newly_done
+            elif mode == AsyncMode.ROLLING_BARRIER:
+                due = active & ~newly_done & (
+                    (t - last_release) >= np.float32(cfg.rolling_quantum))
+            else:
+                due = active & ~newly_done & (
+                    t >= (barrier_seq + 1).astype(jnp.float32) *
+                    np.float32(cfg.fixed_interval))
+            waiting = waiting | due
+            pending_saved = jnp.where(due, pending, pending_saved)
+            t = jnp.where(active & ~newly_done & ~due,
+                          t + d_next + pending, t)
+            if release is not None:
+                release_ready = (release.all_stopped(waiting | done) &
+                                 release.any_waiting(waiting))
+                release_t = (release.max_time(
+                    jnp.where(waiting, t, -jnp.inf)) +
+                    np.float32(self.barrier_cost))
+                rel = release_ready & waiting
+                t = jnp.where(rel, release_t + d_next + pending_saved, t)
+                last_release = jnp.where(rel, release_t, last_release)
+                barrier_seq = barrier_seq + rel
+                waiting = waiting & ~release_ready
+        else:
+            t = jnp.where(active & ~newly_done, t + d_next + pending, t)
+
+        out = dict(u)
+        out.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
+                   barrier_seq=barrier_seq, last_release=last_release,
+                   pending=pending_saved, snap=snap, snap_idx=snap_idx)
+        return out
+
+    # ------------------------------------------------------------------
+    # QoS assembly
+    # ------------------------------------------------------------------
+    def assemble(self, carry, r: int, deg: np.ndarray,
+                 quality: float) -> SimResult:
+        """Numpy-vectorized QoS assembly: all report fields for all
+        (process, window) samples come from whole-array ops over the
+        snapshot deltas — the python loop only constructs the result
+        objects.  The math mirrors ``core.qos.report`` exactly (same
+        guards, same operation order), so values are bit-identical to the
+        per-pair path it replaces."""
+        cfg = self.cfg
+        n = deg.shape[0]
+        comm = cfg.mode != AsyncMode.NO_COMM
+        snap = np.asarray(carry["snap"][r], np.float64)      # (n, S, 8)
+        snap_idx = np.asarray(carry["snap_idx"][r])
+        steps = np.asarray(carry["steps"][r])
+
+        nwin = np.maximum(snap_idx - 1, 0)                   # reports/proc
+        d = snap[:, 1:, :] - snap[:, :-1, :]                 # (n, S-1, 8)
+        dup, dtch, datt = d[..., 0], d[..., 1], d[..., 2]
+        ddrop, dladen, dmsg, dwall = (d[..., 4], d[..., 5], d[..., 6],
+                                      d[..., 7])
+        period = dwall / np.maximum(dup, 1)
+        lat = dup / np.maximum(dtch, 1)
+        wall_lat = lat * period
+        fail = np.where(datt > 0, ddrop / np.maximum(datt, 1), 0.0)
+        dpull = dup * deg[:, None] if comm else np.zeros_like(dup)
+        opp = np.minimum(dmsg, dpull)
+        clump = np.where(
+            opp > 0, 1.0 - np.minimum(dladen / np.maximum(opp, 1), 1.0),
+            0.0)
+        t0, t1 = snap[:, :-1, 7], snap[:, 1:, 7]
+
+        qos_by_proc: Dict[int, List[QosReport]] = {}
+        all_qos: List[QosReport] = []
+        for p in range(n):
+            reps = [QosReport(
+                simstep_period=float(period[p, i]),
+                simstep_latency=float(lat[p, i]),
+                walltime_latency=float(wall_lat[p, i]),
+                delivery_failure_rate=float(fail[p, i]),
+                delivery_clumpiness=float(clump[p, i]),
+                t_start=float(t0[p, i]), t_end=float(t1[p, i]))
+                for i in range(int(nwin[p]))]
+            qos_by_proc[p] = reps
+            all_qos.extend(reps)
+
+        return SimResult(
+            updates=[int(x) for x in steps],
+            horizon=cfg.duration,
+            quality=quality,
+            qos=all_qos,
+            qos_by_process=qos_by_proc,
+            dropped=int(np.sum(carry["c_drop"][r])),
+            sent=int(np.sum(carry["c_att"][r])),
+        )

@@ -1,0 +1,215 @@
+"""Shared engine-conformance cases: one source of truth for parity tests.
+
+Every parity test in the suite — event-oracle conformance, sharded vs
+unsharded, dense vs edge-major — builds its application and ``SimConfig``
+through the helpers here, so both sides of any comparison are keyed by the
+same ``(topology, seed)`` pair via :func:`case_seed` (historically each
+test file hardcoded its own seeds, and a drifted copy compared run A
+against an unrelated run B).
+
+Two config families:
+
+``dyadic_cfg``
+    Every time constant is a power of two and every stochastic time source
+    is disabled (``jitter_sigma=0``, ``stall_prob=0``, ``latency_sigma=0``).
+    Dyadic arithmetic is exact in BOTH float32 (vectorized engines) and
+    float64 (event oracle), so process clocks never drift and the windowed
+    engines reproduce the event-ordered reference *bitwise* — including
+    every clock-valued QoS field.  ``tests/test_engine_conformance.py``
+    asserts full :func:`repro.core.qos.qos_signature` equality on this
+    family.  Fault slowdown factors must stay dyadic (2.0, 8.0) and, under
+    BEST_EFFORT, uniform across processes (heterogeneous compute under
+    best-effort lets clocks drift apart, which is exactly the documented
+    windowed-time approximation).
+
+``jittered_cfg``
+    The realistic defaults (lognormal jitter, stalls, latency noise).
+    Clocks drift, so conformance is statistical: medians of (process,
+    window) QoS samples within the documented ``PARITY_RTOL``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+import zlib
+from typing import Optional
+
+from repro.core.modes import AsyncMode
+from repro.runtime.engine import make_engine
+from repro.runtime.faults import FaultModel
+from repro.runtime.simulator import SimConfig
+from repro.runtime.topologies import make_topology
+from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: documented statistical parity bound (DESIGN.md §7): relative tolerance
+#: on medians of (process, window) QoS samples under jittered configs
+PARITY_RTOL = {
+    "simstep_period": 0.10,
+    "simstep_latency": 0.25,
+    "walltime_latency": 0.25,
+    "delivery_failure_rate": 0.25,
+    "delivery_clumpiness": 0.30,   # most sensitive to event ordering
+}
+
+#: ring-pop bound for exact cases: large enough that a lockstep window
+#: always drains every arrival, so no backlog survives to reorder later
+#: windows (16 is plenty for the jittered family's drifting clocks, but
+#: the dyadic family's perfectly synchronized bursts need headroom)
+EXACT_MAX_POPS = 64
+
+
+def case_seed(topology: str, seed: int = 0) -> int:
+    """The shared seed for a parity pair, keyed by ``(topology, seed)``.
+
+    Both the application RNG and ``SimConfig.seed`` of BOTH sides of a
+    comparison must come from here; tests never hardcode a raw seed next
+    to a topology name.
+    """
+    return ((zlib.crc32(topology.encode("ascii")) & 0x7F) << 8) | (seed & 0xFF)
+
+
+def gc_app(n: int, topology: str = "ring", simels: int = 1,
+           seed: Optional[int] = None) -> GraphColorApp:
+    if seed is None:
+        seed = case_seed(topology)
+    topo = make_topology(topology, n)
+    return GraphColorApp(
+        GraphColorConfig(n_processes=n, nodes_per_process=simels, seed=seed),
+        topology=topo)
+
+
+_DYADIC = dict(
+    duration=2.0 ** -7,
+    base_compute=2.0 ** -16,
+    per_message_cost=2.0 ** -23,
+    per_pull_cost=2.0 ** -22,
+    base_latency=2.0 ** -13,
+    barrier_base=2.0 ** -15,
+    barrier_per_log2=2.0 ** -16,
+    rolling_quantum=2.0 ** -11,
+    fixed_interval=2.0 ** -10,
+    snapshot_warmup=2.0 ** -10,
+    snapshot_interval=2.0 ** -11,
+    jitter_sigma=0.0,
+    stall_prob=0.0,
+    latency_sigma=0.0,
+)
+
+
+def dyadic_cfg(mode: AsyncMode = AsyncMode.BEST_EFFORT, seed: int = 0,
+               **kw) -> SimConfig:
+    base = dict(_DYADIC, mode=mode, seed=seed)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def jittered_cfg(duration: float = 0.05, seed: int = 0, **kw) -> SimConfig:
+    base = dict(duration=duration, snapshot_warmup=duration / 6,
+                snapshot_interval=duration / 12, seed=seed)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One conformance scenario: topology x mode x fault injection.
+
+    ``faults`` is a symbolic tag (hashable, subprocess-serializable):
+
+      none      no fault injection
+      uniform2  every process computes 2x slower — clocks stay lockstep,
+                so BEST_EFFORT remains exact under dyadic configs
+      victim8   process 1 computes 8x slower — only exact under barrier
+                modes, whose releases re-synchronize the victim
+    """
+    name: str
+    topology: str
+    mode: AsyncMode = AsyncMode.BEST_EFFORT
+    faults: str = "none"
+    n: int = 16
+
+    def seed(self) -> int:
+        return case_seed(self.topology)
+
+    def app(self) -> GraphColorApp:
+        return gc_app(self.n, self.topology, seed=self.seed())
+
+    def config(self) -> SimConfig:
+        return dyadic_cfg(mode=self.mode, seed=self.seed())
+
+    def fault_model(self) -> Optional[FaultModel]:
+        if self.faults == "none":
+            return None
+        if self.faults == "uniform2":
+            return FaultModel(
+                compute_slowdown={p: 2.0 for p in range(self.n)})
+        if self.faults == "victim8":
+            return FaultModel(compute_slowdown={1: 8.0})
+        raise ValueError(f"unknown fault tag {self.faults!r}")
+
+
+#: the exact-conformance matrix: >= 3 topologies x >= 2 modes x
+#: fault/no-fault, every cell validated bitwise against the event oracle
+EXACT_SCENARIOS = (
+    Scenario("ring-best-effort", "ring"),
+    Scenario("torus-best-effort", "torus"),
+    Scenario("cliques-best-effort", "cliques"),
+    Scenario("ring-best-effort-uniform-fault", "ring", faults="uniform2"),
+    Scenario("torus-best-effort-uniform-fault", "torus", faults="uniform2"),
+    Scenario("ring-barrier-victim-fault", "ring",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="victim8"),
+    Scenario("cliques-barrier-victim-fault", "cliques",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="victim8"),
+    Scenario("smallworld-barrier-victim-fault", "smallworld",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="victim8"),
+    Scenario("torus-barrier", "torus", mode=AsyncMode.BARRIER_EVERY_STEP),
+    Scenario("ring-no-comm", "ring", mode=AsyncMode.NO_COMM),
+    Scenario("ring-rolling-barrier", "ring", mode=AsyncMode.ROLLING_BARRIER),
+    Scenario("torus-fixed-barrier", "torus", mode=AsyncMode.FIXED_BARRIER),
+)
+
+#: scenario name -> Scenario, for subprocess scripts that receive names
+SCENARIOS_BY_NAME = {s.name: s for s in EXACT_SCENARIOS}
+
+
+def run_case(engine: str, scenario: Scenario, **engine_kwargs):
+    """Run ``scenario`` on a registered engine and return its SimResult.
+
+    Vectorized engines get ``max_pops=EXACT_MAX_POPS`` so a window always
+    fully drains (required for exact conformance; harmless otherwise).
+    """
+    if engine != "event":
+        engine_kwargs.setdefault("max_pops", EXACT_MAX_POPS)
+    return make_engine(engine, scenario.app(), scenario.config(),
+                       scenario.fault_model(), **engine_kwargs).run()
+
+
+@functools.lru_cache(maxsize=None)
+def oracle(scenario: Scenario):
+    """The event-ordered reference run for ``scenario`` (cached: every
+    engine variant compares against the same oracle instance)."""
+    return run_case("event", scenario)
+
+
+def run_md(script: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run ``script`` in a subprocess with ``devices`` forced host devices.
+
+    The main test process keeps a single device (XLA fixes the platform
+    device count at first use), so anything needing a populated mesh runs
+    here.  ``engine_cases`` itself is importable in the child.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tests")])
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout

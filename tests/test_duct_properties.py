@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 from repro.kernels.duct_exchange.ops import duct_exchange_jnp, duct_window_jnp
 from repro.kernels.duct_exchange.ref import duct_exchange_ref, duct_window_ref
+from repro.runtime.simulator import SimConfig
+from repro.runtime.window_core import WindowCore
 
 try:
     from hypothesis import given, settings, strategies as hyp_st
@@ -277,6 +279,271 @@ WINDOW_FALLBACK_CASES = [
 @pytest.mark.parametrize("seed,n,d,C,max_pops,steps", WINDOW_FALLBACK_CASES)
 def test_duct_window_properties_seeded(seed, n, d, C, max_pops, steps):
     run_window_sequence(seed, n, d, C, max_pops, steps)
+
+
+# ---------------------------------------------------------------------------
+# WindowCore phase properties (DESIGN.md §11): the same mirror-queue oracle
+# driven through the *engine-facing* phase methods — drain + send_edge on
+# the edge-major layout, window_dense + stage_dense on the dense layout —
+# instead of the raw ops, so the shared core's counter bookkeeping, halo
+# merge, and sentinel-free paths are themselves under property test.
+# ---------------------------------------------------------------------------
+class _StubApp:
+    """Minimal batched-app surface for a WindowCore under phase test."""
+
+    payload_len = 1
+    payload_dtype = np.int32
+
+
+def _make_core(n, C, max_pops):
+    cfg = SimConfig(buffer_capacity=C, duration=1.0,
+                    snapshot_warmup=0.25, snapshot_interval=0.25)
+    return WindowCore(cfg, _StubApp(), n, max_pops=max_pops)
+
+
+def run_core_edge_sequence(seed: int, n: int, d: int, C: int,
+                           max_pops: int, steps: int):
+    """Drive ``WindowCore.drain`` / ``send_edge`` through a random op
+    sequence over ``n*d`` edge-major rings (receiver ``r // d``), checked
+    per step against the mirror queues:
+
+      drop-iff-full   send accepted iff the post-drain ring has room
+      FIFO order      drains walk the queue front, head-blocked, bounded
+      halo winner     slot ``s`` carries the freshest payload of the
+                      highest delivering row with ``row % d % 4 == s``
+      conservation    per-ring and per-process counter identities
+    """
+    rng = np.random.default_rng(seed)
+    core = _make_core(n, C, max_pops)
+    E = n * d
+    dst = (np.arange(E) // d).astype(np.int32)
+    halo_key = (dst * 4 + (np.arange(E) % d) % 4).astype(np.int32)
+    src = ((np.arange(E) * 7 + 3) % n).astype(np.int32)
+    carry = {k: v for k, v in core.edge_rings(E).items()}
+    carry.update(halo=jnp.zeros((n, 4, 1), jnp.int32),
+                 c_msgs=jnp.zeros(n, jnp.int32),
+                 c_laden=jnp.zeros(n, jnp.int32),
+                 c_touch=jnp.zeros(n, jnp.int32))
+    mirror = [collections.deque() for _ in range(E)]
+    ptouch_m = np.zeros(E, np.int64)
+    acc_tot = np.zeros(E, np.int64)
+    att_tot = np.zeros(E, np.int64)
+    drop_tot = np.zeros(E, np.int64)
+    drain_tot = np.zeros(E, np.int64)
+    now = np.zeros(n, np.float32)
+
+    for _ in range(steps):
+        now = (now + rng.uniform(0.5, 1.5, n)).astype(np.float32)
+        ract = rng.random(n) < 0.8
+        prev = {k: np.asarray(v) for k, v in carry.items()}
+        upd, drained_r = core.drain(
+            carry, jnp.asarray(now)[jnp.asarray(dst)],
+            jnp.asarray(ract)[jnp.asarray(dst)],
+            halo_key=jnp.asarray(halo_key), n_halo=n * 4,
+            dst=jnp.asarray(dst), n_dst=n)
+        u = dict(carry)
+        u.update(upd)
+        drained = np.zeros(E, np.int64)
+        fresh = {}
+        for e in range(E):
+            p = dst[e]
+            expect = 0
+            if ract[p]:
+                for avail, _t, _pay in list(mirror[e])[:max_pops]:
+                    if avail <= now[p]:
+                        expect += 1
+                    else:
+                        break
+            drained[e] = expect
+            last = None
+            for _ in range(expect):
+                last = mirror[e].popleft()
+            if expect:
+                assert int(np.asarray(u["ptouch"])[e]) == last[1] + 1, e
+                ptouch_m[e] = last[1] + 1
+                fresh[e] = last[2]
+            assert int(np.asarray(u["q_size"])[e]) == len(mirror[e]), e
+        drain_tot += drained
+        # receiver-side counters sum per process
+        halo = np.asarray(u["halo"])
+        for p in range(n):
+            rows = np.arange(p * d, (p + 1) * d)
+            assert int(np.asarray(drained_r)[p]) == drained[rows].sum()
+            dm = (np.asarray(u["c_msgs"]) - prev["c_msgs"])[p]
+            assert dm == drained[rows].sum(), p
+            dl = (np.asarray(u["c_laden"]) - prev["c_laden"])[p]
+            assert dl == (drained[rows] > 0).sum(), p
+            # halo winner: highest delivering row per (receiver, slot)
+            for s in range(4):
+                js = [e for e in rows
+                      if (e % d) % 4 == s and drained[e] > 0]
+                if js:
+                    assert halo[p, s, 0] == fresh[max(js)], (p, s)
+
+        # send attempt through the core, against post-drain occupancy
+        sact = rng.random(E) < 0.8
+        lat = rng.uniform(0.0, 4.0, E).astype(np.float32)
+        touch = rng.integers(1, 100, E).astype(np.int32)
+        pay = rng.integers(0, 99, (E, 1)).astype(np.int32)
+        sp = core.send_edge(u, jnp.asarray(now)[jnp.asarray(src)],
+                            jnp.asarray(sact), jnp.asarray(lat),
+                            jnp.asarray(touch), jnp.asarray(pay),
+                            jnp.asarray(src), n)
+        acc = np.asarray(sp.accepted)
+        sums = np.asarray(sp.sums)
+        u.update(sp.rings)
+        for e in range(E):
+            room = len(mirror[e]) < C
+            assert bool(acc[e]) == bool(sact[e] and room), e
+            if acc[e]:
+                mirror[e].append((now[src[e]] + lat[e], touch[e],
+                                  pay[e, 0]))
+            assert int(np.asarray(u["q_size"])[e]) == len(mirror[e]), e
+        att_tot += sact
+        acc_tot += acc
+        drop_tot += sact & ~acc
+        for p in range(n):
+            mine = src == p
+            assert sums[p, 0] == sact[mine].sum(), p
+            assert sums[p, 1] == (sact & acc)[mine].sum(), p
+            assert sums[p, 2] == (sact & ~acc)[mine].sum(), p
+        sizes = np.array([len(q) for q in mirror])
+        assert np.all(acc_tot == drain_tot + sizes)
+        assert np.all(att_tot == acc_tot + drop_tot)
+        carry = u
+
+
+def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
+                            max_pops: int, steps: int):
+    """Drive ``WindowCore.window_dense`` / ``stage_dense`` through a random
+    op sequence on the dense receiver-major layout with self-loop out-edge
+    tables (row ``(p, j)`` is both process p's in-ring and its j-th
+    out-edge), checking the same mirror-queue invariants plus the staged
+    send-decision counters (att/ok/drop per process, every step)."""
+    rng = np.random.default_rng(seed)
+    core = _make_core(n, C, max_pops)
+    carry = {k: v for k, v in core.dense_rings(n, d).items()}
+    carry.update(halo=jnp.zeros((n, 4, 1), jnp.int32),
+                 c_msgs=jnp.zeros(n, jnp.int32),
+                 c_laden=jnp.zeros(n, jnp.int32),
+                 c_touch=jnp.zeros(n, jnp.int32),
+                 c_att=jnp.zeros(n, jnp.int32),
+                 c_ok=jnp.zeros(n, jnp.int32),
+                 c_drop=jnp.zeros(n, jnp.int32))
+    src = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, d))
+    rev = np.arange(n * d, dtype=np.int32).reshape(n, d)
+    out_slot = np.zeros((n, d), np.int32)
+    mirror = [[collections.deque() for _ in range(d)] for _ in range(n)]
+    staged = None   # python twin of the carried stage_* buffers
+    acc_tot = np.zeros((n, d), np.int64)
+    att_tot = np.zeros((n, d), np.int64)
+    drop_tot = np.zeros((n, d), np.int64)
+    drain_tot = np.zeros((n, d), np.int64)
+    now = np.zeros(n, np.float32)
+
+    for _ in range(steps):
+        now = (now + rng.uniform(0.5, 1.5, n)).astype(np.float32)
+        ract = rng.random(n) < 0.8
+        prev = {k: np.asarray(v) for k, v in carry.items()}
+        upd, drained_r = core.window_dense(carry, jnp.asarray(now),
+                                           jnp.asarray(ract))
+        u = dict(carry)
+        u.update(upd)
+        # last window's staged pushes enter the mirror first (accepted at
+        # stage time), then this window's drain walks the queue front
+        if staged is not None:
+            for p in range(n):
+                for q in range(d):
+                    if staged["acc"][p, q]:
+                        mirror[p][q].append(
+                            (staged["avail"][p, q], staged["touch"][p, q],
+                             staged["pay"][p, q]))
+        halo = np.asarray(u["halo"])
+        for p in range(n):
+            fresh = {}
+            drained = np.zeros(d, np.int64)
+            for q in range(d):
+                expect = 0
+                if ract[p]:
+                    for avail, _t, _pay in list(mirror[p][q])[:max_pops]:
+                        if avail <= now[p]:
+                            expect += 1
+                        else:
+                            break
+                drained[q] = expect
+                last = None
+                for _ in range(expect):
+                    last = mirror[p][q].popleft()
+                if expect:
+                    assert int(np.asarray(u["ptouch"])[p, q]) == \
+                        last[1] + 1, (p, q)
+                    fresh[q] = last[2]
+                assert int(np.asarray(u["q_size"])[p, q]) == \
+                    len(mirror[p][q]), (p, q)
+            drain_tot[p] += drained
+            assert int(np.asarray(drained_r)[p]) == drained.sum()
+            assert (np.asarray(u["c_msgs"]) - prev["c_msgs"])[p] == \
+                drained.sum()
+            assert (np.asarray(u["c_laden"]) - prev["c_laden"])[p] == \
+                (drained > 0).sum()
+            for s in range(4):
+                js = [q for q in range(s, d, 4) if drained[q] > 0]
+                if js:
+                    assert halo[p, s, 0] == fresh[max(js)], (p, s)
+
+        # stage this window's sends through the core (self-loop tables)
+        sact = rng.random(n) < 0.8
+        lat = rng.uniform(0.0, 4.0, (n, d)).astype(np.float32)
+        pay = rng.integers(0, 99, (n, 1, 1)).astype(np.int32)
+        st = core.stage_dense(
+            u, u, jnp.asarray(now), jnp.asarray(sact),
+            jnp.asarray(pay), jnp.asarray(lat),
+            src=jnp.asarray(src), rev=jnp.asarray(rev),
+            out_slot=jnp.asarray(out_slot), degree=d)
+        u.update(st)
+        sizes = np.array([[len(mirror[p][q]) for q in range(d)]
+                          for p in range(n)])
+        exp_acc = sact[:, None] & (sizes < C)
+        assert np.array_equal(np.asarray(u["stage_acc"]), exp_acc)
+        assert np.array_equal(np.asarray(u["q_size"]),
+                              sizes + exp_acc)
+        att = np.where(sact, d, 0)
+        assert np.array_equal(
+            np.asarray(u["c_att"]) - prev["c_att"], att)
+        assert np.array_equal(
+            np.asarray(u["c_ok"]) - prev["c_ok"], exp_acc.sum(axis=1))
+        assert np.array_equal(
+            np.asarray(u["c_drop"]) - prev["c_drop"],
+            att - exp_acc.sum(axis=1))
+        att_tot += sact[:, None]
+        acc_tot += exp_acc
+        drop_tot += sact[:, None] & ~exp_acc
+        staged = dict(acc=exp_acc,
+                      avail=now[:, None] + lat,
+                      touch=np.asarray(u["stage_touch"]),
+                      pay=np.asarray(u["stage_pay"])[:, :, 0])
+        # conservation: accepted == drained + queued + staged-not-applied
+        assert np.all(acc_tot == drain_tot + sizes + exp_acc)
+        assert np.all(att_tot == acc_tot + drop_tot)
+        carry = u
+
+
+CORE_EDGE_CASES = [
+    (0, 1, 1, 1, 1, 15),
+    (1, 2, 3, 2, 2, 15),
+    (2, 3, 2, 4, 3, 12),
+    (3, 2, 5, 3, 4, 12),
+]
+
+
+@pytest.mark.parametrize("seed,n,d,C,max_pops,steps", CORE_EDGE_CASES)
+def test_window_core_edge_phases_seeded(seed, n, d, C, max_pops, steps):
+    run_core_edge_sequence(seed, n, d, C, max_pops, steps)
+
+
+@pytest.mark.parametrize("seed,n,d,C,max_pops,steps", CORE_EDGE_CASES)
+def test_window_core_dense_phases_seeded(seed, n, d, C, max_pops, steps):
+    run_core_dense_sequence(seed, n, d, C, max_pops, steps)
 
 
 if HAVE_HYPOTHESIS:

@@ -1,14 +1,14 @@
-"""Vectorized-engine tests: the parity contract with the event engine.
+"""Vectorized-engine tests: duct-op parity, determinism, replicates.
 
-The jax engine is a windowed-time approximation (DESIGN.md §7); these tests
-pin down what "approximation" is allowed to mean:
+The jax engine's conformance with the event engine — exact (dyadic
+configs) and statistical (jittered configs) — lives in the registry-driven
+suite ``tests/test_engine_conformance.py``; this file keeps what is
+specific to the jax engine itself:
 
   - the duct op agrees slot-for-slot with the numpy oracle
     (``kernels/duct_exchange/ref.py``), including bounded-buffer drops;
   - runs are deterministic in the seed, and vmapped replicates are
-    independent and identical to single runs;
-  - median QoS metrics on a 16-process ring agree with the event engine
-    within the documented tolerances.
+    independent and identical to single runs.
 """
 import numpy as np
 import pytest
@@ -16,43 +16,17 @@ import pytest
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp  # noqa: E402
 
+from engine_cases import PARITY_RTOL, gc_app, jittered_cfg  # noqa: E402,F401
 from repro.core.modes import AsyncMode  # noqa: E402
-from repro.core.qos import aggregate_reports  # noqa: E402
 from repro.kernels.duct_exchange import (  # noqa: E402
     duct_exchange,
     duct_exchange_jnp,
     duct_exchange_ref,
 )
-from repro.runtime.engine import make_engine  # noqa: E402
 from repro.runtime.engine_jax import JaxEngine  # noqa: E402
-from repro.runtime.faults import FaultModel  # noqa: E402
-from repro.runtime.simulator import SimConfig, Simulator  # noqa: E402
-from repro.runtime.topologies import make_topology  # noqa: E402
-from repro.apps.graphcolor import GraphColorApp, GraphColorConfig  # noqa: E402
 
-# documented parity bound (DESIGN.md §7): relative tolerance on medians of
-# (process, window) QoS samples, 16-proc ring, best-effort mode
-PARITY_RTOL = {
-    "simstep_period": 0.10,
-    "simstep_latency": 0.25,
-    "walltime_latency": 0.25,
-    "delivery_failure_rate": 0.25,
-    "delivery_clumpiness": 0.30,   # most sensitive to event ordering
-}
-
-
-def _app(n, simels=1, topology="ring", seed=0):
-    topo = make_topology(topology, n)
-    return GraphColorApp(
-        GraphColorConfig(n_processes=n, nodes_per_process=simels, seed=seed),
-        topology=topo)
-
-
-def _cfg(duration=0.05, **kw):
-    base = dict(duration=duration, snapshot_warmup=duration / 6,
-                snapshot_interval=duration / 12)
-    base.update(kw)
-    return SimConfig(**base)
+_app = gc_app
+_cfg = jittered_cfg
 
 
 # ---------------------------------------------------------------------------
@@ -143,33 +117,6 @@ def test_vmap_replicates_independent_and_match_single_runs():
         assert len(r.qos) >= 16 * 3
 
 
-def test_registry_builds_both_engines():
-    cfg = _cfg(0.01)
-    assert make_engine("event", _app(4), cfg).name == "event"
-    assert make_engine("jax", _app(4), cfg).name == "jax"
-    with pytest.raises(ValueError):
-        make_engine("nope", _app(4), cfg)
-
-
-# ---------------------------------------------------------------------------
-# QoS parity with the event engine (the documented contract)
-# ---------------------------------------------------------------------------
-def test_median_qos_parity_16_ring():
-    cfg = _cfg(0.1)
-    res_e = Simulator(_app(16), cfg).run()
-    res_j = JaxEngine(_app(16), cfg).run()
-    med_e = aggregate_reports(res_e.qos)
-    med_j = aggregate_reports(res_j.qos)
-    for metric, rtol in PARITY_RTOL.items():
-        a, b = med_e[metric]["median"], med_j[metric]["median"]
-        assert a is not None and b is not None
-        assert abs(b - a) <= rtol * max(abs(a), 1e-12), \
-            f"{metric}: event={a} jax={b} rtol={rtol}"
-    # total progress agrees tightly
-    assert abs(sum(res_j.updates) - sum(res_e.updates)) \
-        <= 0.02 * sum(res_e.updates)
-
-
 def test_engine_counter_consistency():
     res = JaxEngine(_app(16), _cfg(0.02)).run()
     assert res.sent > 0
@@ -193,25 +140,3 @@ def test_best_effort_beats_barrier_rate_on_jax():
     assert r3.update_rate_per_cpu > 2.0 * r0.update_rate_per_cpu
     # barrier-every-step stays in lockstep
     assert max(r0.updates) - min(r0.updates) <= 1
-
-
-def test_drops_with_tiny_buffer_and_slow_consumer():
-    faults = FaultModel(compute_slowdown={1: 20.0})
-    cfg = _cfg(0.05, buffer_capacity=2, base_latency=20e-6)
-    res_j = JaxEngine(_app(2, topology="ring"), cfg, faults).run()
-    res_e = Simulator(_app(2, topology="ring"), cfg, faults).run()
-    assert res_j.dropped > 0
-    assert abs(res_j.delivery_failure_rate - res_e.delivery_failure_rate) \
-        < 0.15
-
-
-def test_block_simels_run_and_quality_definition_matches():
-    """simels > 1 exercises the batched block path on both engines."""
-    cfg = _cfg(0.01)
-    res_e = Simulator(_app(4, simels=16, topology="torus"), cfg).run()
-    res_j = JaxEngine(_app(4, simels=16, topology="torus"), cfg).run()
-    assert sum(res_j.updates) > 0
-    # same quality metric (global conflict count), same order of magnitude
-    assert res_j.quality >= 0 and res_e.quality >= 0
-    assert abs(sum(res_j.updates) - sum(res_e.updates)) \
-        <= 0.05 * sum(res_e.updates)

@@ -1,13 +1,12 @@
-"""Dense duct-layout tests (DESIGN.md §10).
+"""Dense duct-layout tests: the planner and the fused megakernel.
 
-The dense receiver-major layout is a pure memory-layout change: for any
-degree-regular topology the engine must reproduce the edge-major path
-bitwise — update trajectories, send/drop totals, and every (process,
-window) QoS sample — because the fused ``duct_window`` pass replays the
-exact drain/send op sequence, just regrouped as (send_{k-1}; drain_k)
-pairs.  These tests pin that contract across topologies, asynchronicity
-modes, and fault injection, plus the layout planner's auto/fallback rules
-and interpret-mode Pallas parity for the megakernel.
+The dense receiver-major layout is a pure memory-layout change; its
+bitwise parity with the edge-major path — across topologies, modes, fault
+injection, and block payloads — is asserted by the registry-driven suite
+(``tests/test_engine_conformance.py``, family 3).  This file keeps what is
+specific to the layout machinery itself: the planner's auto/fallback
+rules, interpret-mode Pallas parity for the ``duct_window`` megakernel,
+and the dense path's replicate plumbing.
 """
 
 import logging
@@ -18,8 +17,7 @@ import pytest
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.modes import AsyncMode  # noqa: E402
-from repro.core.qos import METRICS, aggregate_reports  # noqa: E402
+from engine_cases import gc_app, jittered_cfg  # noqa: E402
 from repro.kernels.duct_exchange import (  # noqa: E402
     duct_window,
     duct_window_jnp,
@@ -27,51 +25,10 @@ from repro.kernels.duct_exchange import (  # noqa: E402
 )
 from repro.runtime.engine import make_engine  # noqa: E402
 from repro.runtime.engine_jax import JaxEngine  # noqa: E402
-from repro.runtime.faults import FaultModel  # noqa: E402
-from repro.runtime.simulator import SimConfig  # noqa: E402
 from repro.runtime.topologies import make_topology, plan_layout, regular_degree  # noqa: E402
-from repro.apps.graphcolor import GraphColorApp, GraphColorConfig  # noqa: E402
 
-#: the dense layout replays the edge-major op sequence exactly, so medians
-#: may differ only by float aggregation noise
-DENSE_PARITY_RTOL = 1e-12
-
-MODES = [
-    AsyncMode.BEST_EFFORT,
-    AsyncMode.BARRIER_EVERY_STEP,
-    AsyncMode.ROLLING_BARRIER,
-    AsyncMode.FIXED_BARRIER,
-]
-
-
-def _app(n, topology="ring", simels=1):
-    topo = make_topology(topology, n)
-    cfg = GraphColorConfig(n_processes=n, nodes_per_process=simels)
-    return GraphColorApp(cfg, topology=topo)
-
-
-def _cfg(duration=0.02, **kw):
-    base = dict(
-        duration=duration,
-        snapshot_warmup=duration / 6,
-        snapshot_interval=duration / 12,
-    )
-    base.update(kw)
-    return SimConfig(**base)
-
-
-def _assert_bitwise_parity(res_edge, res_dense):
-    assert res_edge.updates == res_dense.updates
-    assert res_edge.sent == res_dense.sent
-    assert res_edge.dropped == res_dense.dropped
-    assert res_edge.quality == res_dense.quality
-    med_e = aggregate_reports(res_edge.qos)
-    med_d = aggregate_reports(res_dense.qos)
-    for metric in METRICS:
-        a, b = med_e[metric]["median"], med_d[metric]["median"]
-        assert (a is None) == (b is None), metric
-        if a is not None:
-            assert abs(b - a) <= DENSE_PARITY_RTOL * max(abs(a), 1e-12), (metric, a, b)
+_app = gc_app
+_cfg = jittered_cfg
 
 
 # ---------------------------------------------------------------------------
@@ -111,11 +68,6 @@ def test_plan_forced_dense_raises_on_irregular():
         plan_layout(make_topology("smallworld", 16), "dense")
     with pytest.raises(ValueError, match="unknown layout"):
         plan_layout(make_topology("ring", 8), "banana")
-
-
-def test_event_engine_rejects_layout():
-    with pytest.raises(ValueError, match="engine jax"):
-        make_engine("event", _app(8), _cfg(0.01), layout="dense")
 
 
 # ---------------------------------------------------------------------------
@@ -180,38 +132,8 @@ def test_duct_window_degree_one_and_empty_rings():
 
 
 # ---------------------------------------------------------------------------
-# Engine parity: dense must reproduce edge-major bitwise
+# Replicate plumbing and auto-layout resolution on the dense path
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("topology", ["ring", "torus", "cliques"])
-@pytest.mark.parametrize("mode", MODES)
-def test_dense_matches_edge_bitwise(topology, mode):
-    cfg = _cfg(0.02, mode=mode)
-    res_edge = JaxEngine(_app(16, topology), cfg, layout="edge").run()
-    res_dense = JaxEngine(_app(16, topology), cfg, layout="dense").run()
-    _assert_bitwise_parity(res_edge, res_dense)
-
-
-@pytest.mark.parametrize("topology", ["ring", "torus"])
-def test_dense_matches_edge_under_faults(topology):
-    faults = FaultModel(
-        compute_slowdown={1: 20.0, 3: 5.0},
-        link_slowdown={(1, 2): 10.0, (2, 1): 10.0},
-    )
-    cfg = _cfg(0.02, buffer_capacity=4)
-    res_edge = JaxEngine(_app(16, topology), cfg, faults, layout="edge").run()
-    res_dense = JaxEngine(_app(16, topology), cfg, faults, layout="dense").run()
-    assert res_dense.dropped > 0  # the tiny buffer under faults drops
-    _assert_bitwise_parity(res_edge, res_dense)
-
-
-def test_dense_matches_edge_with_block_simels():
-    """Payload length > 1 exercises the megakernel's payload lanes."""
-    cfg = _cfg(0.01)
-    res_edge = JaxEngine(_app(16, "torus", simels=9), cfg, layout="edge").run()
-    res_dense = JaxEngine(_app(16, "torus", simels=9), cfg, layout="dense").run()
-    _assert_bitwise_parity(res_edge, res_dense)
-
-
 def test_dense_engine_replicates_and_registry():
     cfg = _cfg(0.01)
     eng = make_engine("jax", _app(16, "torus"), cfg, layout="dense")
