@@ -24,11 +24,17 @@ CPU, force host devices before jax initializes:
 (the 65k-process torus is the target scale for the sharded path; the
 single-device engine tops out around 16k before window dispatches dominate).
 
+``--scheduler superstep|pipelined`` (with ``--superstep-windows W``)
+benches the sharded exchange schedulers (DESIGN.md §9/§12); those runs
+also bench the unsharded dense point at ``n / shards`` and record the
+equal-per-shard-population throughput ratio in the summary — the overlap
+scheduler's acceptance number.
+
 Writes ``benchmarks/results/BENCH_engines.json`` (benchmarks/report.py
 conventions: CSV-ish stdout via ``emit``, JSON artifact via ``save_json``).
 CI's perf job replays the small 256-process jax point per layout and
 compares updates/sec against the checked-in JSON via ``check_regression.py``
-(points key on engine/n/shards/layout).
+(points key on engine/n/shards/layout/scheduler).
 Event-engine points above ``--event-cap`` processes are skipped by default
 because they take minutes; pass a larger cap to measure the full matrix.
 """
@@ -43,7 +49,8 @@ PROC_COUNTS = (256, 1024, 4096)
 
 def bench_point(engine: str, n: int, duration: float, topology: str,
                 shards: int = 1, warmup: bool = False,
-                layout: str = "auto"):
+                layout: str = "auto", scheduler: str = "auto",
+                superstep_windows: int = 1):
     from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
     from repro.runtime.engine import make_engine
     from repro.runtime.simulator import SimConfig
@@ -59,6 +66,10 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
         kwargs["shards"] = shards
     if engine == "jax" and layout != "auto":
         kwargs["layout"] = layout
+    if engine == "jax" and superstep_windows > 1:
+        kwargs["superstep_windows"] = superstep_windows
+    if engine == "jax" and scheduler != "auto":
+        kwargs["scheduler"] = scheduler
     eng = make_engine(engine, app, cfg, **kwargs)
     if warmup and engine == "jax":
         # first run pays jit compilation; the timed run below reuses the
@@ -70,9 +81,14 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
     wall = time.perf_counter() - t0
     updates = sum(res.updates)
     resolved = getattr(eng, "layout", "event")
+    # the unsharded jax engine has exactly one scheduler; sharded engines
+    # record what the registry resolved ("window"/"superstep"/"pipelined")
+    sched = (getattr(eng, "scheduler", "window") if engine == "jax"
+             else "event")
     return dict(engine=engine, n=n, shards=shards, topology=topo.name,
                 layout=layout if engine == "jax" else "event",
                 resolved_layout=resolved,
+                scheduler=sched, superstep_windows=superstep_windows,
                 duration=duration, warm=bool(warmup and engine == "jax"),
                 wall_seconds=wall, updates=updates,
                 updates_per_sec=updates / wall,
@@ -82,7 +98,8 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
 def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
         duration: float = 0.05, topology: str = "torus",
         event_cap: int = 1024, shards: int = 1, warmup: bool = False,
-        layouts=("auto",)):
+        layouts=("auto",), scheduler: str = "auto",
+        superstep_windows: int = 1):
     from benchmarks.common import emit, save_json
 
     rows = []
@@ -97,16 +114,50 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
             point_layouts = layouts if engine == "jax" else ("event",)
             for layout in point_layouts:
                 row = bench_point(engine, n, duration, topology,
-                                  point_shards, warmup, layout)
+                                  point_shards, warmup, layout,
+                                  scheduler, superstep_windows)
                 rows.append(row)
                 tag = f"engines/{engine}/n{n}" + (
                     f"/s{point_shards}" if point_shards > 1 else "") + (
-                    f"/{layout}" if engine == "jax" else "")
+                    f"/{layout}" if engine == "jax" else "") + (
+                    f"/{row['scheduler']}W{superstep_windows}"
+                    if engine == "jax" and row["scheduler"] != "window"
+                    else "")
                 emit(tag, row["wall_seconds"] * 1e6,
                      f"updates={row['updates']} "
                      f"upd_per_sec={row['updates_per_sec']:.0f} "
                      f"fail={row['delivery_failure_rate']:.3f}")
     summary = {}
+    if scheduler in ("superstep", "pipelined") and shards > 1 \
+            and "jax" in engines:
+        # overlap-scheduler acceptance point (DESIGN.md §12): compare the
+        # sharded run against the unsharded dense engine at EQUAL
+        # PER-SHARD POPULATION (n / shards).  On real parallel devices the
+        # sharded run covers `shards` x the population in the same wall
+        # clock; on a single-core host the shards timeshare one CPU, so
+        # the ratio's ceiling is ~1.0 minus dispatch overhead — record the
+        # measured ratio honestly either way.
+        for n in proc_counts:
+            ref_n = n // shards
+            ref = bench_point("jax", ref_n, duration, topology, 1, warmup,
+                              "dense")
+            rows.append(ref)
+            emit(f"engines/jax/n{ref_n}/dense",
+                 ref["wall_seconds"] * 1e6,
+                 f"updates={ref['updates']} "
+                 f"upd_per_sec={ref['updates_per_sec']:.0f} "
+                 f"(per-shard-population reference)")
+            pz = next((r for r in rows if r["engine"] == "jax"
+                       and r["n"] == n and r["shards"] == shards), None)
+            if pz:
+                key = f"n{n}_{scheduler}_vs_per_shard"
+                summary[key] = dict(
+                    ratio=pz["updates_per_sec"] / ref["updates_per_sec"],
+                    per_shard_n=ref_n, shards=shards,
+                    superstep_windows=superstep_windows)
+                emit(f"engines/{scheduler}_vs_per_shard/n{n}", 0.0,
+                     f"ratio={summary[key]['ratio']:.2f}x vs unsharded "
+                     f"dense n={ref_n} (W={superstep_windows})")
     for n in proc_counts:
         # event-vs-jax speedup wherever both engines ran the same point;
         # with several layouts benched, the jax side is chosen by a fixed
@@ -164,6 +215,16 @@ if __name__ == "__main__":
     p.add_argument("--force-host-devices", type=int, default=0,
                    help="set XLA_FLAGS=--xla_force_host_platform_device_"
                         "count=N (must run before jax initializes devices)")
+    p.add_argument("--scheduler", default="auto",
+                   choices=["auto", "window", "superstep", "pipelined"],
+                   help="exchange cadence for sharded jax points "
+                        "(DESIGN.md §11/§12); superstep/pipelined also "
+                        "bench the unsharded dense point at n/shards and "
+                        "record the equal-per-shard-population ratio in "
+                        "the summary")
+    p.add_argument("--superstep-windows", type=int, default=1,
+                   help="windows per superstep for the superstep/"
+                        "pipelined schedulers (needs --shards > 1)")
     p.add_argument("--warmup", action="store_true",
                    help="pre-run jax points once so the timed run excludes "
                         "jit compilation (used by the CI perf guard)")
@@ -174,4 +235,5 @@ if __name__ == "__main__":
             f"{flags} --xla_force_host_platform_device_count="
             f"{a.force_host_devices}").strip()
     run(tuple(a.procs), tuple(a.engines), a.duration, a.topology,
-        a.event_cap, a.shards, a.warmup, tuple(a.layout))
+        a.event_cap, a.shards, a.warmup, tuple(a.layout),
+        a.scheduler, a.superstep_windows)

@@ -2,8 +2,9 @@
 
 Compares a freshly measured ``BENCH_engines.json`` against the checked-in
 baseline (``benchmarks/results/BENCH_engines.json``): for every
-``(engine, n, shards, layout)`` point present in BOTH files, the fresh
-``updates_per_sec`` must be at least ``(1 - tolerance)`` of the baseline.
+``(engine, n, shards, layout, scheduler)`` point present in BOTH files,
+the fresh ``updates_per_sec`` must be at least ``(1 - tolerance)`` of the
+baseline.
 The layout component uses each row's *resolved* duct layout (DESIGN.md
 §10), so default ``--layout auto`` replays compare against the explicit
 edge/dense baseline points.  Points only present on one side are reported
@@ -45,26 +46,42 @@ def _points(path: str) -> dict:
     # baselines key as "auto" and simply stop being shared once replaced.
     points = {}
     for r in rows:
-        key = (r["engine"], r["n"], r.get("shards", 1),
-               r.get("resolved_layout", r.get("layout", "auto")))
+        # scheduler joined the key with the sharded exchange schedulers
+        # (DESIGN.md §9/§12); rows from older baselines carry no scheduler
+        # field and key as "window" — the per-window default they measured
+        key = (
+            r["engine"],
+            r["n"],
+            r.get("shards", 1),
+            r.get("resolved_layout", r.get("layout", "auto")),
+            r.get("scheduler", "window"),
+        )
         if key in points:
             # e.g. a run benching both "auto" and the layout it resolves
             # to — keep the later row, but say so instead of silently
             # dropping a measurement from the comparison
-            print(f"  note {key}: duplicate resolved point in {path}; "
-                  "keeping the last row")
+            print(
+                f"  note {key}: duplicate resolved point in {path}; "
+                "keeping the last row"
+            )
         points[key] = r
     return points
 
 
-def check(baseline_path: str, fresh_path: str,
-          tolerance: float = 0.40, metric: str = "updates_per_sec") -> int:
+def check(
+    baseline_path: str,
+    fresh_path: str,
+    tolerance: float = 0.40,
+    metric: str = "updates_per_sec",
+) -> int:
     base = _points(baseline_path)
     fresh = _points(fresh_path)
     shared = sorted(set(base) & set(fresh))
     if not shared:
-        print("check_regression: no shared (engine, n, shards, layout) "
-              f"points between {baseline_path} and {fresh_path}")
+        print(
+            "check_regression: no shared (engine, n, shards, layout, "
+            f"scheduler) points between {baseline_path} and {fresh_path}"
+        )
         return 2
     for key in sorted(set(base) - set(fresh)):
         print(f"  skip {key}: baseline-only point")
@@ -77,13 +94,17 @@ def check(baseline_path: str, fresh_path: str,
         status = "OK" if f >= floor else "REGRESSION"
         if f < floor:
             failures += 1
-        engine, n, shards, layout = key
-        print(f"  {status:<10} {engine}/n{n}/s{shards}/{layout}: "
-              f"{metric} fresh={f:.0f} baseline={b:.0f} "
-              f"floor={floor:.0f} ({f / b:.2f}x)")
+        engine, n, shards, layout, sched = key
+        print(
+            f"  {status:<10} {engine}/n{n}/s{shards}/{layout}/{sched}: "
+            f"{metric} fresh={f:.0f} baseline={b:.0f} "
+            f"floor={floor:.0f} ({f / b:.2f}x)"
+        )
     if failures:
-        print(f"check_regression: {failures}/{len(shared)} point(s) "
-              f"regressed beyond the {tolerance:.0%} tolerance")
+        print(
+            f"check_regression: {failures}/{len(shared)} point(s) "
+            f"regressed beyond the {tolerance:.0%} tolerance"
+        )
         return 1
     print(f"check_regression: {len(shared)} point(s) within tolerance")
     return 0

@@ -32,10 +32,12 @@ Orthogonal strategy axes (DESIGN.md §11):
 
   layout     ``auto`` / ``edge`` / ``dense`` — how duct rings are laid out
              in memory (resolved per topology by ``plan_layout``)
-  scheduler  ``auto`` / ``window`` / ``superstep`` — when cross-shard
-             boundary exchanges run: every lockstep window, or batched
-             every ``superstep_windows`` windows (self-paced supersteps,
-             DESIGN.md §9; sharded engine only)
+  scheduler  ``auto`` / ``window`` / ``superstep`` / ``pipelined`` — when
+             cross-shard boundary exchanges run: every lockstep window,
+             batched every ``superstep_windows`` windows (self-paced
+             supersteps, DESIGN.md §9), or batched *and* overlapped with
+             the next superstep's interior windows via double-buffered
+             shadow staging (DESIGN.md §12; sharded engine only)
 
 The jax backend additionally offers ``run_replicates(seeds)``; engines that
 lack a native batched form fall back to sequential runs via
@@ -51,7 +53,7 @@ from repro.runtime.faults import FaultModel
 from repro.runtime.simulator import SimConfig, SimResult, Simulator
 
 #: window schedulers an engine may declare (EngineSpec.schedulers)
-SCHEDULERS: Tuple[str, ...] = ("window", "superstep")
+SCHEDULERS: Tuple[str, ...] = ("window", "superstep", "pipelined")
 #: duct layouts an engine may declare (EngineSpec.layouts); resolution
 #: against a concrete topology lives in ``topologies.plan_layout``
 LAYOUTS: Tuple[str, ...] = ("edge", "dense")
@@ -118,6 +120,9 @@ def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel],
     if shards and shards > 1:
         from repro.runtime.engine_sharded import ShardedJaxEngine
         return ShardedJaxEngine(app, cfg, faults, shards=shards, **kwargs)
+    # the unsharded engine has exactly one scheduler (per-window);
+    # _validate already rejected anything else without shards
+    kwargs.pop("scheduler", None)
     kwargs.pop("superstep_windows", None)
     from repro.runtime.engine_jax import JaxEngine
     return JaxEngine(app, cfg, faults, **kwargs)
@@ -219,6 +224,17 @@ def _validate(spec: EngineSpec, kwargs: dict) -> dict:
             raise ValueError(
                 "superstep_windows > 1 amortizes cross-shard exchanges and "
                 "needs the sharded engine; pass shards > 1 (--shards)")
+    elif scheduler == "pipelined":
+        if superstep <= 1:
+            raise ValueError(
+                "scheduler='pipelined' overlaps superstep k's boundary "
+                "exchange with superstep k+1's interior windows; pass "
+                "superstep_windows > 1 (--superstep-windows W) to choose W")
+        if shards <= 1:
+            raise ValueError(
+                "scheduler='pipelined' double-buffers the cross-shard "
+                "boundary exchange and needs the sharded engine; pass "
+                "shards > 1 (--shards)")
     elif superstep > 1:
         raise ValueError(
             "scheduler='window' exchanges every lockstep window, but "
@@ -230,6 +246,10 @@ def _validate(spec: EngineSpec, kwargs: dict) -> dict:
     if not spec.vectorized:
         for key in ("shards", "superstep_windows", "layout"):
             kwargs.pop(key, None)
+    else:
+        # the resolved scheduler travels to the factory (the sharded
+        # engine dispatches its boundary-window strategy on it)
+        kwargs["scheduler"] = scheduler
     return kwargs
 
 

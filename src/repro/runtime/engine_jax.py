@@ -209,7 +209,7 @@ class JaxEngine:
         core = self.core
         comm = cfg.mode != AsyncMode.NO_COMM
         esrc, edst = self._esrc, self._edst
-        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
         drained_r = jnp.zeros(n, jnp.int32)
         u = dict(carry)
@@ -225,8 +225,12 @@ class JaxEngine:
         u.update(app=app_state, steps=steps)
 
         if comm:
+            # latency draws are keyed by (canonical edge, sender step
+            # count), NOT the lockstep window counter: a process's c-th
+            # send draws the same jitter no matter which window — or
+            # scheduler — it executes under, so W-invariance is exact
             lat = self._lat_base * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, self._eids, k)
+                cfg.latency_sigma, seed, STREAM_LAT, self._eids, steps[esrc])
             sp = core.send_edge(
                 u, t[esrc], active[esrc], lat, u["ptouch"][self._rev],
                 edges_out[esrc, self._out_slot], esrc, n, sorted_src=True)
@@ -249,7 +253,7 @@ class JaxEngine:
         cfg = self.cfg
         core = self.core
         comm = cfg.mode != AsyncMode.NO_COMM
-        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
         drained_r = jnp.zeros(self.n, jnp.int32)
         u = dict(carry)
@@ -263,8 +267,11 @@ class JaxEngine:
         u.update(app=app_state, steps=steps)
 
         if comm:
+            # same (edge, sender step) latency keying as the edge-major
+            # path: row (p, j)'s sender is src[p, j]
             lat = self._d_lat * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, self._d_eid, k)
+                cfg.latency_sigma, seed, STREAM_LAT, self._d_eid,
+                steps[self._d_src])
             u.update(core.stage_dense(
                 carry, u, t, active, edges_out, lat,
                 src=self._d_src, rev=self._d_rev,
@@ -319,6 +326,8 @@ class JaxEngine:
                 break
             prev_done = all_done
         carry = jax.device_get(carry)
+        if getattr(self, "debug_keep_carry", False):
+            self._final_carry = carry
         return [self._assemble(carry, r) for r in range(len(seeds))]
 
     # ------------------------------------------------------------------

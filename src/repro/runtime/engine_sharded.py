@@ -61,6 +61,29 @@ tolerance.  Barrier modes release on superstep-granular pmin/pmax: since
 waiting processes' clocks do not advance, release *times* are unchanged —
 releases just land on superstep boundaries.  ``W=1`` reproduces the
 per-window engine bitwise (same staged values, same operation order).
+
+Pipelined overlap (DESIGN.md §12).  ``scheduler="pipelined"`` double-
+buffers the superstep exchange: at boundary k the packed payload is
+*staged* into shadow carry buffers (``fly_fwd_<off>``/``fly_acc_<off>``)
+and the ppermute + receiver-side ``duct_send`` run at boundary k+1,
+overlapping with superstep k+1's interior windows; the accept bits ride
+the k+2 hop back to the sender's counters.  Boundary messages therefore
+arrive one superstep later than under ``superstep`` — an honest,
+QoS-visible latency (docs/QOS.md), not a reordering: stamps and touch
+counters still carry exact sender-side virtual-time metadata, and drops
+still happen at the receiver against real ring occupancy.  An epilogue
+flush (att-bit gated, idempotent) empties the shadow buffers after the
+last superstep so conservation closes exactly
+(``tests/test_engine_sharded.py::test_pipelined_conservation_across_flush``).
+Release decisions under barrier modes are consumed one boundary late
+(:class:`~repro.runtime.window_core.PipelinedRelease`), which is sound
+because a release cohort is frozen — all-stopped shards admit no new
+sends — and the window budget doubles to ``2*W`` per superstep to cover
+the drained tail.  Push passes before the superstep's last window have
+no interior senders, so they gather only the static union of boundary
+receiver rows into a compact sub-ring block (``rows_bnd``), run the send
+phase there, and scatter back — the overlap's fixed cost scales with the
+boundary cut, not the shard's full edge set.
 """
 from __future__ import annotations
 
@@ -80,8 +103,12 @@ from repro.runtime.window_core import (
     BARRIER_MODES,
     STREAM_LAT,
     MeshRelease,
+    PipelinedRelease,
     lognormal_factor,
 )
+
+#: window schedulers this engine implements (registry vocabulary)
+_SCHEDULERS = ("window", "superstep", "pipelined")
 
 #: carry keys indexed by the process axis (permuted into shard layout)
 _PROC_KEYS = ("t", "steps", "done", "waiting", "barrier_seq", "last_release",
@@ -115,8 +142,8 @@ class ShardedJaxEngine(JaxEngine):
     """
 
     def __init__(self, app, cfg, faults=None, *, shards: int,
-                 superstep_windows: int = 1, max_pops: int = 16,
-                 chunk: int = 256, layout: str = "auto"):
+                 superstep_windows: int = 1, scheduler: str = "auto",
+                 max_pops: int = 16, chunk: int = 256, layout: str = "auto"):
         super().__init__(app, cfg, faults, max_pops=max_pops, chunk=chunk,
                          layout=layout)
         if np.dtype(self.bapp.payload_dtype) not in (np.dtype(np.int32),
@@ -128,11 +155,28 @@ class ShardedJaxEngine(JaxEngine):
         if self.superstep < 1:
             raise ValueError(
                 f"superstep_windows must be >= 1, got {superstep_windows}")
-        if self.superstep > 1 and cfg.mode in BARRIER_MODES:
+        if scheduler == "auto":
+            scheduler = "superstep" if self.superstep > 1 else "window"
+        if scheduler not in _SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {scheduler!r}; choose from "
+                f"{('auto',) + _SCHEDULERS}")
+        if scheduler == "pipelined" and self.superstep < 2:
+            raise ValueError(
+                "scheduler='pipelined' overlaps boundary exchange with the "
+                "next superstep's interior windows; pass "
+                "superstep_windows > 1 (--superstep-windows W) to choose W")
+        self.scheduler = scheduler
+        if cfg.mode in BARRIER_MODES:
             # releases land only on superstep boundaries, so up to W-1 idle
             # windows precede each one — same virtual-time trajectory, more
-            # lockstep windows consumed
-            self._max_windows *= self.superstep
+            # lockstep windows consumed.  The pipelined scheduler defers
+            # both the release reductions and the boundary delivery by one
+            # more superstep, so budget 2W windows per release.
+            if scheduler == "pipelined":
+                self._max_windows *= 2 * self.superstep
+            elif self.superstep > 1:
+                self._max_windows *= self.superstep
         self._supersteps_per_dispatch = max(1, chunk // self.superstep)
         self._windows_per_dispatch = (self._supersteps_per_dispatch *
                                       self.superstep)
@@ -140,10 +184,13 @@ class ShardedJaxEngine(JaxEngine):
         self.plan = contiguous_partition(self.topo, self.shards)
         self.mesh = make_shard_mesh(self.shards)
         self._m = self.n // self.shards
-        self._release = MeshRelease(SHARD_AXIS)
+        self._release = (PipelinedRelease(SHARD_AXIS)
+                         if scheduler == "pipelined"
+                         else MeshRelease(SHARD_AXIS))
         self._build_statics()
         self._statics_sharded = None
         self._cspecs = None
+        self._flusher = None
 
     # ------------------------------------------------------------------
     # Static shard layout: local rows (rings on the receiver's shard) and
@@ -214,11 +261,13 @@ class ShardedJaxEngine(JaxEngine):
         bnd = np.where(src_sh != dst_sh)[0]
         offs = ((dst_sh[bnd] - src_sh[bnd]) % S).astype(np.int64)
         self._offsets = sorted(int(d) for d in set(offs.tolist()))
+        self._bnd_bd: Dict[int, int] = {}
         bnd_tables: Dict[str, Dict[str, np.ndarray]] = {}
         for d in self._offsets:
             sel = bnd[offs == d]
             per_s = [sel[src_sh[sel] == s] for s in range(S)]  # canon order
             bd = max(1, max(len(p) for p in per_s))
+            self._bnd_bd[d] = bd
             snd_src = np.full((S, bd), m, i32)
             snd_oslot = np.zeros((S, bd), i32)
             snd_rev = np.full((S, bd), ein, i32)
@@ -239,6 +288,32 @@ class ShardedJaxEngine(JaxEngine):
                 snd_src=snd_src, snd_oslot=snd_oslot, snd_rev=snd_rev,
                 snd_canon=snd_canon, snd_lat=snd_lat, rcv_row=rcv_row)
 
+        # compact boundary-row set: the union of every offset's receiver
+        # rows, per shard.  Mid push passes (superstep/pipelined boundary
+        # windows) touch ONLY these rows — gather the sub-rings, push, and
+        # scatter back — instead of sweeping all ein rows W times.
+        bnd_rows = [set() for _ in range(S)]
+        for d in self._offsets:
+            rr = bnd_tables[str(d)]["rcv_row"]
+            for s in range(S):
+                bnd_rows[s].update(int(r) for r in rr[s] if r < ein)
+        eb = max(1, max((len(x) for x in bnd_rows), default=1))
+        self._eb = eb
+        rows_bnd = np.full((S, eb), ein, i32)  # sentinel ein: scatter-drop
+        pos_of: List[Dict[int, int]] = []
+        for s in range(S):
+            rs = sorted(bnd_rows[s])
+            rows_bnd[s, :len(rs)] = rs
+            pos_of.append({r: i for i, r in enumerate(rs)})
+        for d in self._offsets:
+            tb = bnd_tables[str(d)]
+            rcv_pos = np.full(tb["rcv_row"].shape, eb, i32)
+            for s in range(S):
+                for j, r in enumerate(tb["rcv_row"][s].tolist()):
+                    if r < ein:
+                        rcv_pos[s, j] = pos_of[s][r]
+            tb["rcv_pos"] = rcv_pos
+
         self._statics = jax.tree.map(jnp.asarray, dict(
             pids=perm.reshape(S, m).astype(i32),
             cfactor=np.asarray(self._cfactor)[perm].reshape(S, m),
@@ -246,7 +321,8 @@ class ShardedJaxEngine(JaxEngine):
             row_canon=row_canon, row_valid=row_valid, row_dst=row_dst,
             row_src=row_src, row_interior=row_interior,
             row_out_slot=row_out_slot, row_rev=row_rev,
-            row_halo_key=row_halo_key, row_lat=row_lat, bnd=bnd_tables))
+            row_halo_key=row_halo_key, row_lat=row_lat,
+            rows_bnd=rows_bnd, bnd=bnd_tables))
         self._perm_np = perm
         self._inv_np = inv
 
@@ -259,6 +335,33 @@ class ShardedJaxEngine(JaxEngine):
         canonical-order gather is needed (and the full-population edge
         arrays are never allocated)."""
         return self.core.edge_rings(self.shards * self._ein)
+
+    def _init_carry(self, seed):
+        carry = super()._init_carry(seed)
+        if (self.scheduler == "pipelined" and
+                self.cfg.mode != AsyncMode.NO_COMM):
+            # double-buffer carry entries, already in per-shard layout
+            # (axis 0 partitioned like the edge keys):
+            #   fly_fwd_<off>  shadow buffers staged at the previous
+            #                  boundary, in flight toward their receiver —
+            #                  pushed into rings at the NEXT boundary
+            #   fly_acc_<off>  packed (att << 1) | accept bits returning to
+            #                  the sender — folded into counters at the
+            #                  next boundary
+            # all-zero init: att = 0 entries are no-ops at the first
+            # boundary, so the pipeline fills naturally.
+            W, S, Lp = self.superstep, self.shards, self.bapp.payload_len
+            for off in self._offsets:
+                bd = self._bnd_bd[off]
+                carry[f"fly_fwd_{off}"] = jnp.zeros((S * W, bd, Lp + 3),
+                                                    jnp.int32)
+                carry[f"fly_acc_{off}"] = jnp.zeros((S * W, bd), jnp.int32)
+            if self.cfg.mode in BARRIER_MODES:
+                # per-shard staged release decision (PipelinedRelease):
+                # reductions issued at boundary i, consumed at i+1
+                carry["rel_ready"] = jnp.zeros(S, bool)
+                carry["rel_t"] = jnp.full(S, -np.inf, jnp.float32)
+        return carry
 
     def _to_sharded_layout(self, carry):
         """Permute process-axis leaves into shard order (edge leaves are
@@ -300,7 +403,7 @@ class ShardedJaxEngine(JaxEngine):
                           if self.lplan.kind == "dense" else None))
 
     def _stage_offsets(self, st, t_pad, act_pad, eo_pad, ptouch_pad,
-                       seed, k):
+                       seed, steps_pad):
         """Sender-side staging of this window's boundary sends: one packed
         ``(bd, L+3)`` i32 buffer per shard offset — payload bits, then the
         availability stamp ``t_src + latency``, the reverse-edge touch
@@ -312,10 +415,12 @@ class ShardedJaxEngine(JaxEngine):
         staged = {}
         for off in self._offsets:
             b = st["bnd"][str(off)]
-            # latency draws keyed by canonical edge id: identical to the
-            # unsharded engine's per-edge stream
+            # latency draws keyed by (canonical edge id, sender step
+            # count): identical to the unsharded engine's per-edge stream,
+            # and invariant to which lockstep window the send runs under
             lat_b = b["snd_lat"] * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, b["snd_canon"], k)
+                cfg.latency_sigma, seed, STREAM_LAT, b["snd_canon"],
+                steps_pad[b["snd_src"]])
             pay_b = eo_pad[b["snd_src"], b["snd_oslot"]]
             avail_b = t_pad[b["snd_src"]] + lat_b
             att_b = act_pad[b["snd_src"]]
@@ -350,7 +455,7 @@ class ShardedJaxEngine(JaxEngine):
         """
         cfg, m = self.cfg, self._m
         comm = cfg.mode != AsyncMode.NO_COMM
-        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
         # sentinel-padded per-process vectors: index m = inactive dummy
         t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
@@ -370,11 +475,13 @@ class ShardedJaxEngine(JaxEngine):
                                       edges_out.dtype)])
             ptouch_pad = jnp.concatenate([u["ptouch"],
                                           jnp.zeros(1, jnp.int32)])
+            steps_pad = jnp.concatenate([steps, jnp.zeros(1, jnp.int32)])
             staged = self._stage_offsets(st, t_pad, act_pad, eo_pad,
-                                         ptouch_pad, seed, k)
+                                         ptouch_pad, seed, steps_pad)
             # interior-only send attempt (drop iff full)
             lat_row = st["row_lat"] * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
+                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"],
+                steps_pad[st["row_src"]])
             x_act = act_pad[st["row_src"]] & st["row_interior"]
             sp = self.core.send_edge(
                 u, t_pad[st["row_src"]] + lat_row, x_act, jnp.float32(0.0),
@@ -399,10 +506,9 @@ class ShardedJaxEngine(JaxEngine):
         stay exact.  With ``superstep_windows=1`` this is operation-for-
         operation the per-window exchange engine.
         """
-        cfg, m, ein, S = self.cfg, self._m, self._ein, self.shards
-        W = self.superstep
+        cfg, m, S = self.cfg, self._m, self.shards
         comm = cfg.mode != AsyncMode.NO_COMM
-        seed, k, t = carry["seed"], carry["k"], carry["t"]
+        seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
         t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
         act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
@@ -415,15 +521,15 @@ class ShardedJaxEngine(JaxEngine):
             carry, active, u["halo"], st["pids"])
         u.update(app=app_state, steps=steps)
         if comm:
-            pay_dtype = edges_out.dtype
             Lp = self.bapp.payload_len
             eo_pad = jnp.concatenate(
                 [edges_out, jnp.zeros((1,) + edges_out.shape[1:],
                                       edges_out.dtype)])
             ptouch_pad = jnp.concatenate([u["ptouch"],
                                           jnp.zeros(1, jnp.int32)])
+            steps_pad = jnp.concatenate([steps, jnp.zeros(1, jnp.int32)])
             own = self._stage_offsets(st, t_pad, act_pad, eo_pad,
-                                      ptouch_pad, seed, k)
+                                      ptouch_pad, seed, steps_pad)
             # --- payload hop: ONE packed ppermute per offset for all W ----
             staged_l, staged_r = {}, {}
             for off in self._offsets:
@@ -438,59 +544,24 @@ class ShardedJaxEngine(JaxEngine):
 
             # interior send inputs for THIS window
             lat_row = st["row_lat"] * lognormal_factor(
-                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"], k)
+                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"],
+                steps_pad[st["row_src"]])
             int_pay = eo_pad[st["row_src"], st["row_out_slot"]]
             int_avail = t_pad[st["row_src"]] + lat_row
             int_act = act_pad[st["row_src"]] & st["row_interior"]
             int_tch = ptouch_pad[st["row_rev"]]
 
-            # --- W push passes in sender-window order (FIFO per ring).
-            # Boundary rows push staged window j in pass j; interior rows
-            # push their current message in the last pass (their own
-            # window).  Rings are single-writer, so the row sets are
-            # disjoint and pass composition is exact.
             rings = {key: u[key] for key in
                      ("q_avail", "q_touch", "q_head", "q_size", "q_pay")}
-            acc = {str(off): [] for off in self._offsets}
-            send_sums = jnp.zeros((m, 3), jnp.int32)
-            for j in range(W):
-                last = j == W - 1
-                x_pay = int_pay if last else jnp.zeros_like(int_pay)
-                x_avail = int_avail if last else jnp.zeros_like(int_avail)
-                x_act = int_act if last else jnp.zeros(ein, bool)
-                x_tch = int_tch if last else jnp.zeros(ein, jnp.int32)
-                for off in self._offsets:
-                    b = st["bnd"][str(off)]
-                    buf = staged_r[str(off)][j]
-                    rr = b["rcv_row"]  # pad entries carry the ein sentinel
-                    x_pay = x_pay.at[rr].set(
-                        _from_bits(buf[:, :Lp], pay_dtype), mode="drop")
-                    x_avail = x_avail.at[rr].set(
-                        _from_bits(buf[:, Lp], jnp.float32), mode="drop")
-                    x_tch = x_tch.at[rr].set(buf[:, Lp + 1], mode="drop")
-                    x_act = x_act.at[rr].set(buf[:, Lp + 2].astype(bool),
-                                             mode="drop")
-                sp = self.core.send_edge(
-                    rings, x_avail, x_act, jnp.float32(0.0), x_tch, x_pay,
-                    st["row_src"], m, want_sums=last)
-                rings.update(sp.rings)
-                acc_pad = jnp.concatenate([sp.accepted,
-                                           jnp.zeros(1, bool)])
-                for off in self._offsets:
-                    acc[str(off)].append(
-                        acc_pad[st["bnd"][str(off)]["rcv_row"]])
-                if last:
-                    # interior counters (boundary rows carry the m sentinel
-                    # in row_src: their contributions drop into the spare
-                    # segment)
-                    send_sums = sp.sums
+            rings, acc, send_sums = self._push_passes(
+                st, rings, staged_r, int_pay, int_avail, int_act, int_tch)
             u.update(rings)
 
             # --- accept hop: ONE packed reverse ppermute per offset -------
             for off in self._offsets:
                 b = st["bnd"][str(off)]
                 acc_back = jax.lax.ppermute(
-                    jnp.stack(acc[str(off)]).astype(jnp.int32), SHARD_AXIS,
+                    acc[str(off)], SHARD_AXIS,
                     [(i, (i - off) % S) for i in range(S)])
                 att = staged_l[str(off)][:, :, Lp + 2].astype(bool)
                 ok = acc_back.astype(bool)
@@ -505,10 +576,254 @@ class ShardedJaxEngine(JaxEngine):
                      c_drop=carry["c_drop"] + send_sums[:, 2])
         return self._close_window(st, u, active, drained_r, release=True)
 
+    def _push_passes(self, st, rings, bufs, int_pay, int_avail, int_act,
+                     int_tch, *, want_sums: bool = True):
+        """W ordered push passes over this shard's rings (FIFO per ring).
+
+        ``bufs`` holds one receiver-side packed ``(W, bd, L+3)`` buffer per
+        shard offset.  Boundary rows push buffer window j in pass j;
+        interior rows push their current message in the last pass (their
+        own window).  Rings are single-writer, so the row sets are disjoint
+        and pass composition is exact.
+
+        Passes 0..W-2 have no interior senders, so they run COMPACT: the
+        static union of boundary receiver rows (``rows_bnd``, eb rows —
+        a small fraction of ein on low-surface shardings) is gathered into
+        a sub-ring block, pushed through the shared core, and scattered
+        back.  Only the final pass sweeps all ein rows, so boundary-window
+        send cost is ~one full sweep + (W-1) boundary-sized sweeps instead
+        of W full sweeps.  Returns ``(rings, acc, sums)``: the updated
+        ring dict, per-offset ``(W, bd)`` i32 accept bits, and the final
+        pass's interior counter sums (``None`` unless ``want_sums`` —
+        boundary rows carry the m sentinel in ``row_src``, so their
+        contributions drop into the spare segment).
+        """
+        m, ein, W = self._m, self._ein, self.superstep
+        eb = self._eb
+        Lp = self.bapp.payload_len
+        pay_dtype = int_pay.dtype
+        rings = dict(rings)
+        ring_keys = ("q_avail", "q_touch", "q_head", "q_size", "q_pay")
+        rows_bnd = st["rows_bnd"]  # pad entries carry the ein sentinel
+        acc = {str(off): [] for off in self._offsets}
+        sums = None
+        for j in range(W):
+            last = j == W - 1
+            if not last and not self._offsets:
+                continue
+            if last:
+                # full-width pass: interior rows send their own message,
+                # boundary rows push buffer window W-1
+                x_pay = int_pay
+                x_avail = int_avail
+                x_act = int_act
+                x_tch = int_tch
+            else:
+                # compact pass: only boundary rows are live, so gather the
+                # union-of-offsets row subset, push into the sub-rings, and
+                # scatter the touched rows back (rows_bnd pads carry the
+                # ein sentinel: the gather clamps, the scatter drops)
+                x_pay = jnp.zeros((eb,) + int_pay.shape[1:], pay_dtype)
+                x_avail = jnp.zeros(eb, jnp.float32)
+                x_act = jnp.zeros(eb, bool)
+                x_tch = jnp.zeros(eb, jnp.int32)
+            for off in self._offsets:
+                b = st["bnd"][str(off)]
+                buf = bufs[str(off)][j]
+                rr = b["rcv_row"] if last else b["rcv_pos"]
+                x_pay = x_pay.at[rr].set(
+                    _from_bits(buf[:, :Lp], pay_dtype), mode="drop")
+                x_avail = x_avail.at[rr].set(
+                    _from_bits(buf[:, Lp], jnp.float32), mode="drop")
+                x_tch = x_tch.at[rr].set(buf[:, Lp + 1], mode="drop")
+                x_act = x_act.at[rr].set(buf[:, Lp + 2].astype(bool),
+                                         mode="drop")
+            if last:
+                sp = self.core.send_edge(
+                    rings, x_avail, x_act, jnp.float32(0.0), x_tch, x_pay,
+                    st["row_src"], m, want_sums=want_sums)
+                rings.update(sp.rings)
+                acc_pad = jnp.concatenate([sp.accepted,
+                                           jnp.zeros(1, bool)])
+                for off in self._offsets:
+                    acc[str(off)].append(
+                        acc_pad[st["bnd"][str(off)]["rcv_row"]])
+                if want_sums:
+                    sums = sp.sums
+            else:
+                sub = {key: rings[key][rows_bnd] for key in ring_keys}
+                sp = self.core.send_edge(
+                    sub, x_avail, x_act, jnp.float32(0.0), x_tch, x_pay,
+                    jnp.zeros(eb, jnp.int32), 1, want_sums=False)
+                for key in ring_keys:
+                    if key in sp.rings:
+                        rings[key] = rings[key].at[rows_bnd].set(
+                            sp.rings[key], mode="drop")
+                acc_pad = jnp.concatenate([sp.accepted,
+                                           jnp.zeros(1, bool)])
+                for off in self._offsets:
+                    acc[str(off)].append(
+                        acc_pad[st["bnd"][str(off)]["rcv_pos"]])
+        acc = {key: jnp.stack(v).astype(jnp.int32)
+               for key, v in acc.items()}
+        return rings, acc, sums
+
+    def _final_window_pipelined(self, st, carry, stage_mid):
+        """Superstep-boundary window of the ``pipelined`` scheduler.
+
+        Double-buffered exchange (DESIGN.md §12): this boundary PUSHES the
+        shadow buffers that arrived during the superstep (staged at the
+        previous boundary), FOLDS the accept/attempt bits that returned
+        for the previous boundary's pushes, then DISPATCHES this
+        superstep's own staged buffers forward and this boundary's accept
+        bits backward — both consumed only at the NEXT boundary, so
+        neither collective's result blocks the next superstep's interior
+        windows.  Boundary messages arrive exactly one superstep later
+        than under ``scheduler='superstep'``; their availability stamps
+        are unchanged (drawn at the sender's window), so the shift is
+        honest added latency that the QoS stream observes.
+        """
+        cfg, m, S = self.cfg, self._m, self.shards
+        comm = cfg.mode != AsyncMode.NO_COMM
+        seed, t = carry["seed"], carry["t"]
+        active = ~carry["done"] & ~carry["waiting"]
+        t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
+        act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
+        u = dict(carry)
+        drained_r = jnp.zeros(m, jnp.int32)
+        if comm:
+            dr, drained_r = self._drain_phase(st, carry, t_pad, act_pad)
+            u.update(dr)
+        app_state, edges_out, steps = self.core.compute(
+            carry, active, u["halo"], st["pids"])
+        u.update(app=app_state, steps=steps)
+        if comm:
+            Lp = self.bapp.payload_len
+            eo_pad = jnp.concatenate(
+                [edges_out, jnp.zeros((1,) + edges_out.shape[1:],
+                                      edges_out.dtype)])
+            ptouch_pad = jnp.concatenate([u["ptouch"],
+                                          jnp.zeros(1, jnp.int32)])
+            steps_pad = jnp.concatenate([steps, jnp.zeros(1, jnp.int32)])
+            own = self._stage_offsets(st, t_pad, act_pad, eo_pad,
+                                      ptouch_pad, seed, steps_pad)
+
+            # interior send inputs for THIS window
+            lat_row = st["row_lat"] * lognormal_factor(
+                cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"],
+                steps_pad[st["row_src"]])
+            int_pay = eo_pad[st["row_src"], st["row_out_slot"]]
+            int_avail = t_pad[st["row_src"]] + lat_row
+            int_act = act_pad[st["row_src"]] & st["row_interior"]
+            int_tch = ptouch_pad[st["row_rev"]]
+
+            # --- push the shadow buffers staged at the PREVIOUS boundary --
+            bufs = {str(off): u[f"fly_fwd_{off}"] for off in self._offsets}
+            rings = {key: u[key] for key in
+                     ("q_avail", "q_touch", "q_head", "q_size", "q_pay")}
+            rings, acc, send_sums = self._push_passes(
+                st, rings, bufs, int_pay, int_avail, int_act, int_tch)
+            u.update(rings)
+
+            # --- fold the bits that returned for the previous boundary's
+            # pushes: packed (att << 1) | accept, already on their sender
+            for off in self._offsets:
+                b = st["bnd"][str(off)]
+                bits = u[f"fly_acc_{off}"]
+                att = (bits >> 1) & 1
+                okb = bits & 1
+                cols_b = jnp.stack([
+                    att.sum(0),
+                    (att & okb).sum(0),
+                    (att & (1 - okb)).sum(0)], axis=1)
+                send_sums = send_sums + jax.ops.segment_sum(
+                    cols_b, b["snd_src"], num_segments=m + 1)[:m]
+            u.update(c_att=carry["c_att"] + send_sums[:, 0],
+                     c_ok=carry["c_ok"] + send_sums[:, 1],
+                     c_drop=carry["c_drop"] + send_sums[:, 2])
+
+            # --- dispatch the next hops, consumed at the NEXT boundary ----
+            for off in self._offsets:
+                key = str(off)
+                full = (own[key][None] if stage_mid is None else
+                        jnp.concatenate([stage_mid[key], own[key][None]],
+                                        axis=0))
+                u[f"fly_fwd_{off}"] = jax.lax.ppermute(
+                    full, SHARD_AXIS,
+                    [(i, (i + off) % S) for i in range(S)])
+                att_r = bufs[key][:, :, Lp + 2]
+                u[f"fly_acc_{off}"] = jax.lax.ppermute(
+                    (att_r << 1) | acc[key], SHARD_AXIS,
+                    [(i, (i - off) % S) for i in range(S)])
+        return self._close_window(st, u, active, drained_r, release=True)
+
+    def _flush_body(self, st, u):
+        """Epilogue flush of the pipeline's in-flight state (one shard,
+        one replicate): fold the carried accept bits, deliver the carried
+        shadow buffers, and fold the bits those pushes produce.  Every
+        step is gated on att bits, so anything the natural post-done
+        supersteps already processed is a no-op — the flush only
+        guarantees conservation when the run ends with a live superstep
+        still in flight."""
+        m, S = self._m, self.shards
+        ein, Lp = self._ein, self.bapp.payload_len
+        u = dict(u)
+        send_sums = jnp.zeros((m, 3), jnp.int32)
+
+        def fold(bits, b, sums):
+            att = (bits >> 1) & 1
+            okb = bits & 1
+            cols_b = jnp.stack([
+                att.sum(0), (att & okb).sum(0),
+                (att & (1 - okb)).sum(0)], axis=1)
+            return sums + jax.ops.segment_sum(
+                cols_b, b["snd_src"], num_segments=m + 1)[:m]
+
+        for off in self._offsets:
+            send_sums = fold(u[f"fly_acc_{off}"], st["bnd"][str(off)],
+                             send_sums)
+        bufs = {str(off): u[f"fly_fwd_{off}"] for off in self._offsets}
+        rings = {key: u[key] for key in
+                 ("q_avail", "q_touch", "q_head", "q_size", "q_pay")}
+        rings, acc, _ = self._push_passes(
+            st, rings,
+            bufs,
+            jnp.zeros((ein, Lp), self.bapp.payload_dtype),
+            jnp.zeros(ein, jnp.float32), jnp.zeros(ein, bool),
+            jnp.zeros(ein, jnp.int32), want_sums=False)
+        u.update(rings)
+        for off in self._offsets:
+            att_r = bufs[str(off)][:, :, Lp + 2]
+            bits_back = jax.lax.ppermute(
+                (att_r << 1) | acc[str(off)], SHARD_AXIS,
+                [(i, (i - off) % S) for i in range(S)])
+            send_sums = fold(bits_back, st["bnd"][str(off)], send_sums)
+            u[f"fly_fwd_{off}"] = jnp.zeros_like(u[f"fly_fwd_{off}"])
+            u[f"fly_acc_{off}"] = jnp.zeros_like(u[f"fly_acc_{off}"])
+        u.update(c_att=u["c_att"] + send_sums[:, 0],
+                 c_ok=u["c_ok"] + send_sums[:, 1],
+                 c_drop=u["c_drop"] + send_sums[:, 2])
+        return u
+
+    def _get_flusher(self):
+        if self._flusher is None:
+            def flush_fn(st, carry):
+                st = jax.tree.map(lambda a: a[0], st)
+                return jax.vmap(lambda c: self._flush_body(st, c))(carry)
+            sspecs = jax.tree.map(lambda _: P(SHARD_AXIS), self._statics)
+            f = shard_map(flush_fn, self.mesh,
+                          in_specs=(sspecs, self._cspecs),
+                          out_specs=self._cspecs)
+            self._flusher = jax.jit(f, donate_argnums=1)
+        return self._flusher
+
     # ------------------------------------------------------------------
     def _get_runner(self):
         if self._runner is None:
             W = self.superstep
+            final = (self._final_window_pipelined
+                     if self.scheduler == "pipelined"
+                     else self._final_window)
 
             def chunk_fn(st, carry):
                 st = jax.tree.map(lambda a: a[0], st)  # (1, ...) -> local
@@ -520,7 +835,7 @@ class ShardedJaxEngine(JaxEngine):
                             c, None, length=W - 1)
                     else:
                         stage_mid = None
-                    return self._final_window(st, c, stage_mid), None
+                    return final(st, c, stage_mid), None
 
                 def one(c):
                     c, _ = jax.lax.scan(
@@ -566,6 +881,14 @@ class ShardedJaxEngine(JaxEngine):
             if prev_done is not None and bool(prev_done):
                 break
             prev_done = all_done
+        if (self.scheduler == "pipelined" and
+                self.cfg.mode != AsyncMode.NO_COMM):
+            # epilogue flush: deliver/fold whatever is still in flight so
+            # message conservation holds even when the loop exits with a
+            # live superstep's exchange un-consumed
+            carry = self._get_flusher()(self._statics_sharded, carry)
         carry = jax.device_get(carry)
         carry = self._to_canonical_layout(carry)
+        if getattr(self, "debug_keep_carry", False):
+            self._final_carry = carry
         return [self._assemble(carry, r) for r in range(len(seeds))]

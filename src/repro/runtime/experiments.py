@@ -23,8 +23,11 @@ over an S-device mesh (DESIGN.md §8) with the seed axis vmapped inside
 each shard; any shard count reproduces the single-device trajectories
 exactly.  ``--superstep-windows W`` lets each shard run W windows between
 exchanges (one packed ppermute per superstep, DESIGN.md §9; W=1 is
-bitwise-identical), and ``--qos-interval`` pins the snapshot spacing of
-the time-resolved ``qos_timeseries`` every row carries.
+bitwise-identical), ``--scheduler pipelined`` double-buffers that exchange
+so it overlaps the next superstep's interior windows (boundary messages
+arrive one superstep later — honest latency the QoS stream observes,
+DESIGN.md §12 / docs/QOS.md), and ``--qos-interval`` pins the snapshot
+spacing of the time-resolved ``qos_timeseries`` every row carries.
 
 CLI::
 
@@ -156,7 +159,8 @@ def run_weak_scaling(args) -> List[dict]:
     print(f"[weak_scaling] app={args.app} topology={args.topology} "
           f"simels={args.simels} duration={args.duration}s "
           f"engine={args.engine} replicates={args.replicates} "
-          f"shards={args.shards} superstep={args.superstep_windows}")
+          f"shards={args.shards} superstep={args.superstep_windows} "
+          f"scheduler={args.scheduler}")
     rows = []
     for n in args.procs:
         topo = _topology_for(args, n)
@@ -182,6 +186,7 @@ def run_weak_scaling(args) -> List[dict]:
                          simels=args.simels, engine=args.engine,
                          shards=args.shards,
                          superstep_windows=args.superstep_windows,
+                         scheduler=args.scheduler,
                          replicates=args.replicates, rate_per_cpu=rate,
                          wall_seconds=wall, qos=dist,
                          qos_timeseries=series))
@@ -297,12 +302,18 @@ def build_parser() -> argparse.ArgumentParser:
                         "1 = per-window exchange (bitwise-identical "
                         "trajectories); needs --shards > 1")
     p.add_argument("--scheduler", default="auto",
-                   choices=["auto", "window", "superstep"],
-                   help="exchange cadence strategy (DESIGN.md §11): window "
-                        "= cross-shard boundary exchange every lockstep "
-                        "window, superstep = batched every "
-                        "--superstep-windows windows (needs --shards > 1); "
-                        "auto follows --superstep-windows")
+                   choices=["auto", "window", "superstep", "pipelined"],
+                   help="exchange cadence strategy (DESIGN.md §11/§12): "
+                        "window = cross-shard boundary exchange every "
+                        "lockstep window, superstep = batched every "
+                        "--superstep-windows windows, pipelined = "
+                        "double-buffered — superstep k's exchange overlaps "
+                        "superstep k+1's interior windows, boundary "
+                        "messages arrive one superstep later (honest "
+                        "added latency the QoS stream observes; see "
+                        "docs/QOS.md).  superstep/pipelined need "
+                        "--shards > 1 and --superstep-windows > 1; auto "
+                        "follows --superstep-windows")
     p.add_argument("--layout", default="auto",
                    choices=["auto", "dense", "edge"],
                    help="duct ring layout for --engine jax (DESIGN.md "
@@ -355,9 +366,10 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     if args.superstep_windows > 1 and args.shards <= 1:
         parser.error("--superstep-windows > 1 requires --shards > 1 "
                      "(it amortizes cross-shard exchanges)")
-    if args.scheduler == "superstep" and args.superstep_windows <= 1:
-        parser.error("--scheduler superstep needs --superstep-windows > 1 "
-                     "to choose the batch size W")
+    if args.scheduler in ("superstep", "pipelined") \
+            and args.superstep_windows <= 1:
+        parser.error(f"--scheduler {args.scheduler} needs "
+                     "--superstep-windows > 1 to choose the batch size W")
     if args.scheduler == "window" and args.superstep_windows > 1:
         parser.error("--scheduler window exchanges every lockstep window; "
                      "drop --superstep-windows or pass "

@@ -349,6 +349,17 @@ class Simulator:
                 self._seq_active[b] -= len(waiting_active)
                 if self._seq_active[b] <= 0:
                     del self._seq_active[b]
+                if release >= self.cfg.duration:
+                    # horizon snap (matches window_core.close_window): a
+                    # cohort released at or past the horizon is done at the
+                    # horizon clock — no post-horizon update is scheduled
+                    for pid, t_arr in waiting_active:
+                        self._barrier_seq[pid] = b + 1
+                        self._last_release[pid] = release
+                        self._clock[pid] = self.cfg.duration
+                        self._done[pid] = True
+                    del self._barrier_arrivals[b]
+                    continue
                 self._seq_active[b + 1] = (self._seq_active.get(b + 1, 0)
                                            + len(waiting_active))
                 for pid, t_arr in waiting_active:

@@ -112,6 +112,10 @@ def lognormal_factor(sigma: float, *keys) -> jax.Array:
 class LocalRelease:
     """Single-device release reductions: plain jnp reductions."""
 
+    #: staged strategies consume reductions issued one superstep boundary
+    #: earlier (see :class:`PipelinedRelease`)
+    staged = False
+
     def all_stopped(self, x: jax.Array) -> jax.Array:
         return jnp.all(x)
 
@@ -130,6 +134,8 @@ class MeshRelease:
     """Cross-shard release reductions: exact psum-style pmin/pmax scalars
     over the named mesh axis, once per (super)step."""
 
+    staged = False
+
     def __init__(self, axis: str):
         self.axis = axis
 
@@ -141,6 +147,27 @@ class MeshRelease:
 
     def max_time(self, x: jax.Array) -> jax.Array:
         return jax.lax.pmax(jnp.max(x), self.axis)
+
+
+class PipelinedRelease(MeshRelease):
+    """Release strategy for the ``pipelined`` scheduler: the cross-shard
+    release reductions issued at superstep boundary i are *consumed* at
+    boundary i+1, so the pmin/pmax collectives never serialize against the
+    boundary's own compute.
+
+    Correctness rests on the frozen-cohort argument (DESIGN.md §12): once
+    ``all_stopped`` is observed true, every live process is waiting, no
+    process is active, and therefore nothing can join, leave, or advance
+    the cohort before the (stale) decision is applied one boundary later.
+    The release *time* — max over the frozen waiting clocks plus the
+    barrier cost — is exactly what an un-staged release would compute;
+    only the lockstep window it lands on moves one superstep later.
+    ``close_window`` reads the carried decision from ``u["rel_ready"]`` /
+    ``u["rel_t"]`` and stores fresh post-release reductions for the next
+    boundary.
+    """
+
+    staged = True
 
 
 class SendPhase(NamedTuple):
@@ -468,13 +495,28 @@ class WindowCore:
             t = jnp.where(active & ~newly_done & ~due,
                           t + d_next + pending, t)
             if release is not None:
-                release_ready = (release.all_stopped(waiting | done) &
-                                 release.any_waiting(waiting))
-                release_t = (release.max_time(
-                    jnp.where(waiting, t, -jnp.inf)) +
-                    np.float32(self.barrier_cost))
+                if release.staged:
+                    # pipelined: apply the decision issued one boundary
+                    # earlier (frozen cohort — see PipelinedRelease)
+                    release_ready = u["rel_ready"]
+                    release_t = u["rel_t"]
+                else:
+                    release_ready = (release.all_stopped(waiting | done) &
+                                     release.any_waiting(waiting))
+                    release_t = (release.max_time(
+                        jnp.where(waiting, t, -jnp.inf)) +
+                        np.float32(self.barrier_cost))
                 rel = release_ready & waiting
-                t = jnp.where(rel, release_t + d_next + pending_saved, t)
+                # horizon snap: a cohort released at or past the horizon is
+                # done at the horizon clock — no engine schedules (and the
+                # event oracle no longer executes) a post-horizon update,
+                # so straddle-sensitive float drift cannot flip the final
+                # update count
+                at_horizon = release_t >= np.float32(cfg.duration)
+                t = jnp.where(
+                    rel, jnp.where(at_horizon, np.float32(cfg.duration),
+                                   release_t + d_next + pending_saved), t)
+                done = done | (rel & at_horizon)
                 last_release = jnp.where(rel, release_t, last_release)
                 barrier_seq = barrier_seq + rel
                 waiting = waiting & ~release_ready
@@ -485,6 +527,14 @@ class WindowCore:
         out.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
                    barrier_seq=barrier_seq, last_release=last_release,
                    pending=pending_saved, snap=snap, snap_idx=snap_idx)
+        if release is not None and release.staged and barriered:
+            # store fresh post-release reductions for the next boundary
+            fresh_ready = (release.all_stopped(waiting | done) &
+                           release.any_waiting(waiting))
+            fresh_t = (release.max_time(jnp.where(waiting, t, -jnp.inf)) +
+                       np.float32(self.barrier_cost))
+            out.update(rel_ready=fresh_ready.reshape(u["rel_ready"].shape),
+                       rel_t=fresh_t.reshape(u["rel_t"].shape))
         return out
 
     # ------------------------------------------------------------------

@@ -528,6 +528,107 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
         carry = u
 
 
+def run_shadow_sequence(seed: int, n: int, d: int, C: int,
+                        max_pops: int, steps: int):
+    """The pipelined scheduler's shadow-buffer exchange at the ring-op
+    level (DESIGN.md §12): sends staged in superstep i ride a shadow
+    buffer and are pushed through ``send_edge`` only in superstep i+1,
+    with availability stamps drawn at STAGE time.  The mirror-queue
+    oracle enters each message one superstep late with its original
+    stamp, pinning the double-buffer contract:
+
+      +1 delay        a staged message is invisible to the drain of its
+                      own superstep (ring sizes match a mirror that
+                      excludes the current shadow buffer)
+      drop-iff-full   accept is decided at PUSH time — one superstep
+                      after staging — against the post-drain ring
+      stamp honesty   delivery eligibility uses the stage-time stamp, so
+                      the delay never rewrites virtual time
+      conservation    staged == attempted + in-shadow,
+                      attempted == accepted + dropped, and
+                      accepted == drained + in-ring, every superstep
+    """
+    rng = np.random.default_rng(seed)
+    core = _make_core(n, C, max_pops)
+    E = n * d
+    dst = (np.arange(E) // d).astype(np.int32)
+    halo_key = (dst * 4 + (np.arange(E) % d) % 4).astype(np.int32)
+    src = ((np.arange(E) * 7 + 3) % n).astype(np.int32)
+    carry = dict(core.edge_rings(E))
+    carry.update(halo=jnp.zeros((n, 4, 1), jnp.int32),
+                 c_msgs=jnp.zeros(n, jnp.int32),
+                 c_laden=jnp.zeros(n, jnp.int32),
+                 c_touch=jnp.zeros(n, jnp.int32))
+    mirror = [collections.deque() for _ in range(E)]
+    shadow = None   # the in-flight buffer staged last superstep
+    att_tot = np.zeros(E, np.int64)
+    acc_tot = np.zeros(E, np.int64)
+    drop_tot = np.zeros(E, np.int64)
+    drain_tot = np.zeros(E, np.int64)
+    staged_tot = np.zeros(E, np.int64)
+    now = np.zeros(n, np.float32)
+
+    for _ in range(steps):
+        now = (now + rng.uniform(0.5, 1.5, n)).astype(np.float32)
+        ract = rng.random(n) < 0.8
+        upd, _ = core.drain(
+            carry, jnp.asarray(now)[jnp.asarray(dst)],
+            jnp.asarray(ract)[jnp.asarray(dst)],
+            halo_key=jnp.asarray(halo_key), n_halo=n * 4,
+            dst=jnp.asarray(dst), n_dst=n)
+        u = dict(carry)
+        u.update(upd)
+        for e in range(E):
+            p = dst[e]
+            expect = 0
+            if ract[p]:
+                for avail, _tch in list(mirror[e])[:max_pops]:
+                    if avail <= now[p]:
+                        expect += 1
+                    else:
+                        break
+            for _ in range(expect):
+                mirror[e].popleft()
+            drain_tot[e] += expect
+            # +1 delay: the drain sees a ring WITHOUT the current shadow
+            assert int(np.asarray(u["q_size"])[e]) == len(mirror[e]), e
+
+        # push LAST superstep's shadow buffer: stamps were drawn against
+        # the stage-time clock, so some may already be in the past —
+        # honest added latency, never a rewritten stamp
+        if shadow is not None:
+            sp = core.send_edge(
+                u, jnp.asarray(shadow["avail"]), jnp.asarray(shadow["act"]),
+                jnp.float32(0.0), jnp.asarray(shadow["touch"]),
+                jnp.asarray(shadow["pay"]), jnp.asarray(src), n)
+            acc = np.asarray(sp.accepted)
+            u.update(sp.rings)
+            for e in range(E):
+                room = len(mirror[e]) < C
+                assert bool(acc[e]) == bool(shadow["act"][e] and room), e
+                if acc[e]:
+                    mirror[e].append((shadow["avail"][e],
+                                      shadow["touch"][e]))
+                assert int(np.asarray(u["q_size"])[e]) == len(mirror[e])
+            att_tot += shadow["act"]
+            acc_tot += acc
+            drop_tot += shadow["act"] & ~acc
+
+        # stage a fresh shadow buffer, pushed next superstep
+        act = rng.random(E) < 0.8
+        shadow = dict(
+            act=act,
+            avail=(now[src] + rng.uniform(0.0, 4.0, E)).astype(np.float32),
+            touch=rng.integers(1, 100, E).astype(np.int32),
+            pay=rng.integers(0, 99, (E, 1)).astype(np.int32))
+        staged_tot += act
+        sizes = np.array([len(q) for q in mirror])
+        assert np.all(staged_tot == att_tot + shadow["act"])
+        assert np.all(att_tot == acc_tot + drop_tot)
+        assert np.all(acc_tot == drain_tot + sizes)
+        carry = u
+
+
 CORE_EDGE_CASES = [
     (0, 1, 1, 1, 1, 15),
     (1, 2, 3, 2, 2, 15),
@@ -544,6 +645,11 @@ def test_window_core_edge_phases_seeded(seed, n, d, C, max_pops, steps):
 @pytest.mark.parametrize("seed,n,d,C,max_pops,steps", CORE_EDGE_CASES)
 def test_window_core_dense_phases_seeded(seed, n, d, C, max_pops, steps):
     run_core_dense_sequence(seed, n, d, C, max_pops, steps)
+
+
+@pytest.mark.parametrize("seed,n,d,C,max_pops,steps", CORE_EDGE_CASES)
+def test_shadow_buffer_properties_seeded(seed, n, d, C, max_pops, steps):
+    run_shadow_sequence(seed, n, d, C, max_pops, steps)
 
 
 if HAVE_HYPOTHESIS:
@@ -569,3 +675,16 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=12, deadline=None)
     def test_duct_window_properties_hypothesis(seed, n, d, C, max_pops, steps):
         run_window_sequence(seed, n, d, C, max_pops, steps)
+
+    @given(
+        seed=hyp_st.integers(0, 2**31 - 1),
+        n=hyp_st.integers(1, 3),
+        d=hyp_st.integers(1, 4),
+        C=hyp_st.integers(1, 4),
+        max_pops=hyp_st.integers(1, 3),
+        steps=hyp_st.integers(2, 12),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_shadow_buffer_properties_hypothesis(seed, n, d, C, max_pops,
+                                                 steps):
+        run_shadow_sequence(seed, n, d, C, max_pops, steps)
