@@ -28,7 +28,11 @@ single-device engine tops out around 16k before window dispatches dominate).
 benches the sharded exchange schedulers (DESIGN.md §9/§12); those runs
 also bench the unsharded dense point at ``n / shards`` and record the
 equal-per-shard-population throughput ratio in the summary — the overlap
-scheduler's acceptance number.
+scheduler's acceptance number.  With ``--shards 1``, ``--scheduler
+superstep --superstep-windows W`` benches the unsharded W-fused dense
+megakernel (DESIGN.md §13) and records its speedup over the per-window
+dense engine at the same n (``wfused_over_dense``; gate: >= 1.3x at the
+4096-process torus point, update counts bitwise).
 
 Writes ``benchmarks/results/BENCH_engines.json`` (benchmarks/report.py
 conventions: CSV-ish stdout via ``emit``, JSON artifact via ``save_json``).
@@ -52,6 +56,7 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
                 layout: str = "auto", scheduler: str = "auto",
                 superstep_windows: int = 1):
     from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+    from repro.runtime.config import RunConfig
     from repro.runtime.engine import make_engine
     from repro.runtime.simulator import SimConfig
     from repro.runtime.topologies import make_topology
@@ -61,16 +66,14 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
                         topology=topo)
     cfg = SimConfig(duration=duration, snapshot_warmup=duration / 6,
                     snapshot_interval=duration / 12)
-    kwargs = {}
-    if shards > 1:
-        kwargs["shards"] = shards
-    if engine == "jax" and layout != "auto":
-        kwargs["layout"] = layout
-    if engine == "jax" and superstep_windows > 1:
-        kwargs["superstep_windows"] = superstep_windows
-    if engine == "jax" and scheduler != "auto":
-        kwargs["scheduler"] = scheduler
-    eng = make_engine(engine, app, cfg, **kwargs)
+    # one frozen strategy carrier per point; the event engine has no
+    # layout/scheduler axes, so those stay at their defaults there
+    is_jax = engine == "jax"
+    rc = RunConfig(engine=engine, shards=shards,
+                   layout=layout if is_jax else "auto",
+                   scheduler=scheduler if is_jax else "auto",
+                   superstep_windows=superstep_windows if is_jax else 1)
+    eng = make_engine(rc, app, cfg)
     if warmup and engine == "jax":
         # first run pays jit compilation; the timed run below reuses the
         # cached runner, so updates/sec measures simulation throughput —
@@ -89,6 +92,7 @@ def bench_point(engine: str, n: int, duration: float, topology: str,
                 layout=layout if engine == "jax" else "event",
                 resolved_layout=resolved,
                 scheduler=sched, superstep_windows=superstep_windows,
+                run=rc.to_dict(),
                 duration=duration, warm=bool(warmup and engine == "jax"),
                 wall_seconds=wall, updates=updates,
                 updates_per_sec=updates / wall,
@@ -128,6 +132,40 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
                      f"upd_per_sec={row['updates_per_sec']:.0f} "
                      f"fail={row['delivery_failure_rate']:.3f}")
     summary = {}
+    # summary keys stay bare ("n256_...") on the torus for continuity with
+    # older artifacts; other topologies prefix their name so a merged
+    # multi-topology JSON keeps one entry per (topology, n) point
+    pfx = "" if topology == "torus" else f"{topology}_"
+    if scheduler == "superstep" and shards == 1 and superstep_windows > 1 \
+            and "jax" in engines:
+        # W-fused megakernel acceptance point (DESIGN.md §13): the fused
+        # superstep engine vs the per-window dense engine at the same n —
+        # same trajectory bitwise, so the ratio is pure execution-strategy
+        # speedup (gate: >= 1.3x at the 4096-proc torus point)
+        for n in proc_counts:
+            ref = bench_point("jax", n, duration, topology, 1, warmup,
+                              "dense")
+            rows.append(ref)
+            emit(f"engines/jax/n{n}/dense",
+                 ref["wall_seconds"] * 1e6,
+                 f"updates={ref['updates']} "
+                 f"upd_per_sec={ref['updates_per_sec']:.0f} "
+                 f"(per-window dense reference)")
+            fz = next((r for r in rows if r["engine"] == "jax"
+                       and r["n"] == n and r["shards"] == 1
+                       and r["scheduler"] == "superstep"
+                       and r["superstep_windows"] == superstep_windows),
+                      None)
+            if fz:
+                key = f"{pfx}n{n}_wfused_over_dense"
+                summary[key] = dict(
+                    speedup=fz["updates_per_sec"] / ref["updates_per_sec"],
+                    superstep_windows=superstep_windows,
+                    updates_agree=fz["updates"] == ref["updates"])
+                emit(f"engines/wfused_over_dense/n{n}", 0.0,
+                     f"speedup={summary[key]['speedup']:.2f}x "
+                     f"(W={superstep_windows}) updates_bitwise="
+                     f"{summary[key]['updates_agree']}")
     if scheduler in ("superstep", "pipelined") and shards > 1 \
             and "jax" in engines:
         # overlap-scheduler acceptance point (DESIGN.md §12): compare the
@@ -150,7 +188,7 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
             pz = next((r for r in rows if r["engine"] == "jax"
                        and r["n"] == n and r["shards"] == shards), None)
             if pz:
-                key = f"n{n}_{scheduler}_vs_per_shard"
+                key = f"{pfx}n{n}_{scheduler}_vs_per_shard"
                 summary[key] = dict(
                     ratio=pz["updates_per_sec"] / ref["updates_per_sec"],
                     per_shard_n=ref_n, shards=shards,
@@ -169,13 +207,13 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
                    if r["engine"] == "jax" and r["n"] == n
                    and r["layout"] == pick), None)
         if ev and jx:
-            summary[f"n{n}"] = dict(
+            summary[f"{pfx}n{n}"] = dict(
                 speedup=ev["wall_seconds"] / jx["wall_seconds"],
                 jax_layout=jx["layout"],
                 updates_agree=abs(jx["updates"] - ev["updates"])
                 <= 0.02 * ev["updates"])
             emit(f"engines/speedup/n{n}", 0.0,
-                 f"jax_over_event={summary[f'n{n}']['speedup']:.1f}x "
+                 f"jax_over_event={summary[f'{pfx}n{n}']['speedup']:.1f}x "
                  f"(jax layout {jx['layout']})")
         # dense-vs-edge layout speedup in the same run (DESIGN.md §10 gate:
         # >= 1.3x at the 4096-proc torus point, update counts bitwise)
@@ -184,14 +222,13 @@ def run(proc_counts=PROC_COUNTS, engines=("event", "jax"),
         ed = next((r for r in rows if r["engine"] == "jax"
                    and r["n"] == n and r["layout"] == "edge"), None)
         if de and ed:
-            summary[f"n{n}_dense_over_edge"] = dict(
+            key = f"{pfx}n{n}_dense_over_edge"
+            summary[key] = dict(
                 speedup=de["updates_per_sec"] / ed["updates_per_sec"],
                 updates_agree=de["updates"] == ed["updates"])
             emit(f"engines/layout_speedup/n{n}", 0.0,
-                 f"dense_over_edge="
-                 f"{summary[f'n{n}_dense_over_edge']['speedup']:.2f}x "
-                 f"updates_bitwise="
-                 f"{summary[f'n{n}_dense_over_edge']['updates_agree']}")
+                 f"dense_over_edge={summary[key]['speedup']:.2f}x "
+                 f"updates_bitwise={summary[key]['updates_agree']}")
     save_json("BENCH_engines", {"rows": rows, "summary": summary})
     return rows
 
@@ -223,8 +260,10 @@ if __name__ == "__main__":
                         "record the equal-per-shard-population ratio in "
                         "the summary")
     p.add_argument("--superstep-windows", type=int, default=1,
-                   help="windows per superstep for the superstep/"
-                        "pipelined schedulers (needs --shards > 1)")
+                   help="windows per superstep: with --shards > 1 the "
+                        "sharded exchange schedulers, with --shards 1 "
+                        "and --scheduler superstep the unsharded W-fused "
+                        "dense megakernel (DESIGN.md §13)")
     p.add_argument("--warmup", action="store_true",
                    help="pre-run jax points once so the timed run excludes "
                         "jit compilation (used by the CI perf guard)")

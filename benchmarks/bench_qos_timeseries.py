@@ -36,18 +36,18 @@ def bench_point(
 ):
     from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
     from repro.core.qos import aggregate_reports, aggregate_timeseries
+    from repro.runtime.config import RunConfig
     from repro.runtime.engine import make_engine
     from repro.runtime.simulator import SimConfig
     from repro.runtime.topologies import make_topology
 
     topo = make_topology(topology, n)
     app = GraphColorApp(GraphColorConfig(n_processes=n, nodes_per_process=1), topology=topo)
-    interval = qos_interval if qos_interval else duration / 12
+    rc = RunConfig(engine="jax", shards=shards, superstep_windows=superstep,
+                   qos_interval=qos_interval)
+    interval = rc.qos_interval if rc.qos_interval else duration / 12
     cfg = SimConfig(duration=duration, snapshot_warmup=duration / 6, snapshot_interval=interval)
-    kwargs = {"shards": shards} if shards > 1 else {}
-    if superstep > 1:
-        kwargs["superstep_windows"] = superstep
-    eng = make_engine("jax", app, cfg, **kwargs)
+    eng = make_engine(rc, app, cfg)
     if warmup:
         eng.run()  # first run pays jit compilation; the timed run below does not
     t0 = time.perf_counter()
@@ -61,6 +61,7 @@ def bench_point(
         n=n,
         shards=shards,
         superstep_windows=superstep,
+        run=rc.to_dict(),
         topology=topo.name,
         duration=duration,
         qos_interval=interval,

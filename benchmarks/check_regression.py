@@ -2,7 +2,8 @@
 
 Compares a freshly measured ``BENCH_engines.json`` against the checked-in
 baseline (``benchmarks/results/BENCH_engines.json``): for every
-``(engine, n, shards, layout, scheduler)`` point present in BOTH files,
+``(engine, n, shards, layout, scheduler, topology, superstep_windows)``
+point present in BOTH files,
 the fresh ``updates_per_sec`` must be at least ``(1 - tolerance)`` of the
 baseline.
 The layout component uses each row's *resolved* duct layout (DESIGN.md
@@ -48,13 +49,20 @@ def _points(path: str) -> dict:
     for r in rows:
         # scheduler joined the key with the sharded exchange schedulers
         # (DESIGN.md §9/§12); rows from older baselines carry no scheduler
-        # field and key as "window" — the per-window default they measured
+        # field and key as "window" — the per-window default they measured.
+        # topology and superstep_windows joined with the bucketed dense
+        # layout (DESIGN.md §13): smallworld/cliques dense points and the
+        # W-fused unsharded point share n with the torus matrix and would
+        # otherwise collide.  Older rows default to the values those
+        # baselines actually measured (bench torus, per-window W=1).
         key = (
             r["engine"],
             r["n"],
             r.get("shards", 1),
             r.get("resolved_layout", r.get("layout", "auto")),
             r.get("scheduler", "window"),
+            r.get("topology", "torus"),
+            r.get("superstep_windows", 1),
         )
         if key in points:
             # e.g. a run benching both "auto" and the layout it resolves
@@ -80,7 +88,8 @@ def check(
     if not shared:
         print(
             "check_regression: no shared (engine, n, shards, layout, "
-            f"scheduler) points between {baseline_path} and {fresh_path}"
+            "scheduler, topology, superstep_windows) points between "
+            f"{baseline_path} and {fresh_path}"
         )
         return 2
     for key in sorted(set(base) - set(fresh)):
@@ -94,9 +103,10 @@ def check(
         status = "OK" if f >= floor else "REGRESSION"
         if f < floor:
             failures += 1
-        engine, n, shards, layout, sched = key
+        engine, n, shards, layout, sched, topo, w = key
         print(
-            f"  {status:<10} {engine}/n{n}/s{shards}/{layout}/{sched}: "
+            f"  {status:<10} {engine}/{topo}/n{n}/s{shards}/{layout}/"
+            f"{sched}W{w}: "
             f"{metric} fresh={f:.0f} baseline={b:.0f} "
             f"floor={floor:.0f} ({f / b:.2f}x)"
         )

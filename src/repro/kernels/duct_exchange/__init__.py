@@ -1,6 +1,8 @@
 from repro.kernels.duct_exchange.ops import (  # noqa: F401
     dense_halo_select,
     dense_stage,
+    duct_commit,
+    duct_commit_jnp,
     duct_drain,
     duct_exchange,
     duct_exchange_jnp,
@@ -9,6 +11,7 @@ from repro.kernels.duct_exchange.ops import (  # noqa: F401
     duct_window_jnp,
 )
 from repro.kernels.duct_exchange.ref import (  # noqa: F401
+    duct_commit_ref,
     duct_exchange_ref,
     duct_window_ref,
 )

@@ -194,6 +194,83 @@ def duct_window_kernel(q_avail, q_touch, q_pay, head, size,
             rtouch[:n], hpay[:n], hwin[:n].astype(bool))
 
 
+def _commit_kernel(qa_ref, qt_ref, qp_ref, head_ref, size0_ref, cnt_ref,
+                   pav_ref, ptch_ref, ppay_ref,
+                   qa_out, qt_out, qp_out):
+    """Superstep commit: fold each ring's compact pushbuf (up to W staged
+    pushes) into the base ring at the live-tail slots.  Gather-free: every
+    ring slot recovers its pushbuf index from a column iota and the write
+    is an ascending-j unrolled masked select — dead (j >= cnt) slots keep
+    their base values.
+    """
+    qa = qa_ref[...]                 # (B, C)
+    qt = qt_ref[...]                 # (B, C)
+    qp = qp_ref[...]                 # (B, C, L)
+    head = head_ref[...]             # (B, 1)
+    size0 = size0_ref[...]           # (B, 1)
+    cnt = cnt_ref[...]               # (B, 1)
+    pav, ptch, ppay = pav_ref[...], ptch_ref[...], ppay_ref[...]
+    B, C = qa.shape
+    W = pav.shape[1]
+
+    col = jax.lax.broadcasted_iota(jnp.int32, (B, C), dimension=1)
+    for j in range(W):
+        at = (col == (head + size0 + j) % C) & (j < cnt)
+        qa = jnp.where(at, pav[:, j:j + 1], qa)
+        qt = jnp.where(at, ptch[:, j:j + 1], qt)
+        qp = jnp.where(at[..., None], ppay[:, j:j + 1, :], qp)
+    qa_out[...] = qa
+    qt_out[...] = qt
+    qp_out[...] = qp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def duct_commit_kernel(q_avail, q_touch, q_pay, head, size0, pb_cnt,
+                       pb_avail, pb_touch, pb_pay, *,
+                       interpret: bool = False):
+    """Fused superstep commit over all rings.  Returns the same tuple
+    layout as ``ops.CommitResult``."""
+    R, C = q_avail.shape
+    W = pb_avail.shape[1]
+    L = q_pay.shape[-1]
+    B = min(_BLOCK_EDGES, R)
+    pad = (-R) % B
+    nb = (R + pad) // B
+
+    def prep(x, dtype, tail=()):
+        x = jnp.asarray(x, dtype).reshape((R,) + tail)
+        return jnp.pad(x, ((0, pad),) + ((0, 0),) * len(tail))
+
+    args = (prep(q_avail, jnp.float32, (C,)),
+            prep(q_touch, jnp.int32, (C,)),
+            prep(q_pay, q_pay.dtype, (C, L)),
+            prep(head, jnp.int32, (1,)), prep(size0, jnp.int32, (1,)),
+            prep(pb_cnt, jnp.int32, (1,)),
+            prep(pb_avail, jnp.float32, (W,)),
+            prep(pb_touch, jnp.int32, (W,)),
+            prep(pb_pay, q_pay.dtype, (W, L)))
+
+    spec = lambda *tail: pl.BlockSpec((B,) + tail,  # noqa: E731
+                                      lambda i: (i,) + (0,) * len(tail))
+    out = pl.pallas_call(
+        _commit_kernel,
+        grid=(nb,),
+        in_specs=[spec(C), spec(C), spec(C, L), spec(1), spec(1), spec(1),
+                  spec(W), spec(W), spec(W, L)],
+        out_specs=[spec(C), spec(C), spec(C, L)],
+        out_shape=[
+            jax.ShapeDtypeStruct((R + pad, C), jnp.float32),
+            jax.ShapeDtypeStruct((R + pad, C), jnp.int32),
+            jax.ShapeDtypeStruct((R + pad, C, L), q_pay.dtype),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    qa2, qt2, qp2 = out
+    return qa2[:R], qt2[:R], qp2[:R]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("capacity", "max_pops", "interpret"))
 def duct_exchange_kernel(q_avail, q_touch, head, size,

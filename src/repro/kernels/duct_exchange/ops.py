@@ -246,6 +246,64 @@ def duct_window(q_avail, q_touch, q_pay, head, size,
         interpret=_auto_interpret(interpret)))
 
 
+class CommitResult(NamedTuple):
+    q_avail: jax.Array     # (R, C)
+    q_touch: jax.Array     # (R, C)
+    q_pay: jax.Array       # (R, C, L)
+
+
+def duct_commit_jnp(q_avail, q_touch, q_pay, head, size0, pb_cnt,
+                    pb_avail, pb_touch, pb_pay) -> CommitResult:
+    """jnp twin of the superstep commit: fold the compact pushbuf into the
+    base rings.  Push ``j`` of ring ``r`` lands at slot
+    ``(head[r] + size0[r] + j) % C`` — the live-tail slot the per-window
+    path would have written it to, independent of how the superstep's pops
+    interleaved with its pushes (FIFO: base drains all precede pushbuf
+    drains, so an already-popped pushbuf entry's slot sits behind the
+    advanced head and is dead).  Every ring slot recovers which pushbuf
+    index lands on it; the fold is a one-hot multiply-accumulate over the
+    W pushbuf columns rather than a ``take_along_axis`` (XLA:CPU lowers
+    the (R, C) gather to a serial row loop) or a *sequential* chain of W
+    masked writes (each link materializes a full (R, C[, L]) intermediate
+    — a superstep-dominating copy storm inside a scan).  The sum-of-
+    products form is a pure elementwise DAG, so XLA fuses it into a
+    single sweep per output array."""
+    R, C = q_avail.shape
+    W = pb_avail.shape[1]
+    col = jnp.arange(C, dtype=jnp.int32)[None, :]
+    j = (col - head[:, None] - size0[:, None]) % C
+    wr = j < pb_cnt[:, None]
+    hot = [(j == w) for w in range(W)]
+    acc_a = sum(jnp.where(hot[w], pb_avail[:, w, None], 0.0)
+                for w in range(W))
+    acc_t = sum(jnp.where(hot[w], pb_touch[:, w, None], 0)
+                for w in range(W))
+    acc_p = sum(jnp.where(hot[w][:, :, None], pb_pay[:, w, None, :], 0)
+                for w in range(W))
+    qa = jnp.where(wr, acc_a, q_avail)
+    qt = jnp.where(wr, acc_t, q_touch)
+    qp = jnp.where(wr[:, :, None], acc_p, q_pay)
+    return CommitResult(qa, qt, qp)
+
+
+def duct_commit(q_avail, q_touch, q_pay, head, size0, pb_cnt,
+                pb_avail, pb_touch, pb_pay,
+                *, use_pallas: bool = None,
+                interpret=None) -> CommitResult:
+    """Backend dispatch for the superstep commit: Pallas kernel on TPU
+    (one masked-select sweep per ring block, gather-free), jnp twin
+    elsewhere.  Slot-exact with ``ref.duct_commit_ref``."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return duct_commit_jnp(q_avail, q_touch, q_pay, head, size0,
+                               pb_cnt, pb_avail, pb_touch, pb_pay)
+    from repro.kernels.duct_exchange.kernel import duct_commit_kernel
+    return CommitResult(*duct_commit_kernel(
+        q_avail, q_touch, q_pay, head, size0, pb_cnt,
+        pb_avail, pb_touch, pb_pay, interpret=_auto_interpret(interpret)))
+
+
 def duct_exchange(q_avail, q_touch, head, size,
                   recv_now, recv_active,
                   send_now, send_active, send_lat, send_touch,

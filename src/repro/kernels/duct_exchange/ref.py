@@ -148,3 +148,34 @@ def duct_window_ref(q_avail, q_touch, q_pay, head, size,
                 halo_win[p, j % 4] = True
     return WindowResult(q_avail, q_touch, q_pay, head, size, drained,
                         recv_touch, halo_pay, halo_win)
+
+
+class CommitResult(NamedTuple):
+    q_avail: np.ndarray    # (R, C) availability times
+    q_touch: np.ndarray    # (R, C) touch stamps
+    q_pay: np.ndarray      # (R, C, L) payloads
+
+
+def duct_commit_ref(q_avail, q_touch, q_pay, head, size0, pb_cnt,
+                    pb_avail, pb_touch, pb_pay) -> CommitResult:
+    """Oracle for the superstep commit (DESIGN.md §13).
+
+    During a W-fused superstep the base ring arrays are frozen; this op
+    folds the compact pushbuf — the superstep's accepted sends, in stage
+    order — back into the ring.  Push ``j`` of ring ``r`` lands at slot
+    ``(head[r] + size0[r] + j) % C``, exactly where the per-window path
+    would have written it: FIFO order means the superstep's pops consume
+    base entries before any pushbuf entry, so the tail slots are live (or
+    provably popped, when the write wraps) regardless of interleaving.
+    """
+    q_avail = np.array(q_avail, dtype=np.float32, copy=True)
+    q_touch = np.array(q_touch, dtype=np.int32, copy=True)
+    q_pay = np.array(q_pay, copy=True)
+    R, C = q_avail.shape
+    for r in range(R):
+        for j in range(int(pb_cnt[r])):
+            slot = (int(head[r]) + int(size0[r]) + j) % C
+            q_avail[r, slot] = pb_avail[r, j]
+            q_touch[r, slot] = pb_touch[r, j]
+            q_pay[r, slot] = pb_pay[r, j]
+    return CommitResult(q_avail, q_touch, q_pay)

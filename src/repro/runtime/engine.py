@@ -42,13 +42,21 @@ Orthogonal strategy axes (DESIGN.md §11):
 The jax backend additionally offers ``run_replicates(seeds)``; engines that
 lack a native batched form fall back to sequential runs via
 :func:`run_replicates`.
+
+Callers select strategies with one frozen
+:class:`~repro.runtime.config.RunConfig` value
+(``make_engine(RunConfig(engine="jax", layout="dense", shards=8), app,
+cfg)``); the legacy loose-kwargs spelling survives behind a deprecation
+shim (:func:`_resolve_run`).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
-                    Tuple, runtime_checkable)
+                    Tuple, Union, runtime_checkable)
 
+from repro.runtime.config import STRATEGY_KEYS, RunConfig
 from repro.runtime.faults import FaultModel
 from repro.runtime.simulator import SimConfig, SimResult, Simulator
 
@@ -120,10 +128,8 @@ def _make_jax(app, cfg: SimConfig, faults: Optional[FaultModel],
     if shards and shards > 1:
         from repro.runtime.engine_sharded import ShardedJaxEngine
         return ShardedJaxEngine(app, cfg, faults, shards=shards, **kwargs)
-    # the unsharded engine has exactly one scheduler (per-window);
-    # _validate already rejected anything else without shards
-    kwargs.pop("scheduler", None)
-    kwargs.pop("superstep_windows", None)
+    # the unsharded engine understands window + superstep (the W-fused
+    # dense megakernel); _validate already rejected pipelined here
     from repro.runtime.engine_jax import JaxEngine
     return JaxEngine(app, cfg, faults, **kwargs)
 
@@ -217,13 +223,15 @@ def _validate(spec: EngineSpec, kwargs: dict) -> dict:
     if scheduler == "superstep":
         if superstep <= 1:
             raise ValueError(
-                "scheduler='superstep' batches W windows of boundary "
-                "exchange into one collective; pass superstep_windows > 1 "
+                "scheduler='superstep' fuses W windows per exchange "
+                "(sharded: one collective per superstep; unsharded: one "
+                "ring commit per superstep); pass superstep_windows > 1 "
                 "(--superstep-windows W) to choose W")
-        if shards <= 1:
+        if shards <= 1 and layout == "edge":
             raise ValueError(
-                "superstep_windows > 1 amortizes cross-shard exchanges and "
-                "needs the sharded engine; pass shards > 1 (--shards)")
+                "the unsharded superstep scheduler is the W-fused dense "
+                "megakernel (DESIGN.md §13) and needs the dense layout; "
+                "drop --layout edge or pass shards > 1 (--shards)")
     elif scheduler == "pipelined":
         if superstep <= 1:
             raise ValueError(
@@ -253,28 +261,71 @@ def _validate(spec: EngineSpec, kwargs: dict) -> dict:
     return kwargs
 
 
-def make_engine(name: str, app, cfg: SimConfig,
-                faults: Optional[FaultModel] = None, **kwargs) -> Engine:
-    """Build a registered engine by name.
+def _resolve_run(run: Union[RunConfig, str], kwargs: dict) -> Tuple[str, dict]:
+    """Normalize the two calling conventions to (engine name, kwargs).
 
-    ``kwargs`` are backend options, validated against the engine's
-    :class:`EngineSpec` before the factory runs: ``shards`` (> 1 builds the
-    mesh-sharded engine, DESIGN.md §8), ``layout``
-    (``auto``/``dense``/``edge`` duct layout, DESIGN.md §10 — ``auto``
-    picks the dense receiver-major fast path for degree-regular
-    topologies), ``scheduler`` (``auto``/``window``/``superstep`` exchange
-    cadence, DESIGN.md §9 — ``auto`` follows ``superstep_windows``) with
-    ``superstep_windows`` (> 1 batches that many windows per cross-shard
-    exchange; needs ``shards`` > 1), plus backend extras such as
-    ``max_pops`` / ``chunk``.  The event engine accepts none.
+    The preferred form passes a :class:`~repro.runtime.config.RunConfig`
+    first — one frozen value carrying every strategy axis.  The legacy
+    form (an engine-name string plus loose ``layout=`` / ``scheduler=`` /
+    ``shards=`` / ``superstep_windows=`` kwargs) still works through this
+    shim, with a :class:`DeprecationWarning` pointing at RunConfig.
+    Backend extras (``max_pops``, ``chunk``, ...) pass through either way.
     """
+    if isinstance(run, RunConfig):
+        clash = sorted(set(kwargs) & set(STRATEGY_KEYS))
+        if clash:
+            raise TypeError(
+                f"strategy kwargs {clash} conflict with the RunConfig; "
+                "set them on the RunConfig instead")
+        return run.engine, {**run.engine_kwargs(), **kwargs}
+    legacy = sorted(set(kwargs) & set(STRATEGY_KEYS))
+    if legacy:
+        warnings.warn(
+            f"passing {legacy} as loose kwargs is deprecated; build a "
+            "repro.runtime.config.RunConfig and pass it as the first "
+            "argument (make_engine(RunConfig(engine=..., ...), app, cfg))",
+            DeprecationWarning, stacklevel=3)
+    return run, kwargs
+
+
+def make_engine(run: Union[RunConfig, str], app, cfg: SimConfig,
+                faults: Optional[FaultModel] = None, **kwargs) -> Engine:
+    """Build a registered engine from a RunConfig (or a name, legacy).
+
+    The preferred call passes a :class:`~repro.runtime.config.RunConfig`
+    carrying the strategy axes — ``engine``, ``layout``
+    (``auto``/``dense``/``edge`` duct layout, DESIGN.md §10/§13 — ``auto``
+    resolves to the bucketed dense layout on every built-in topology),
+    ``scheduler`` (``auto``/``window``/``superstep``/``pipelined`` exchange
+    cadence, DESIGN.md §9/§12/§13 — ``auto`` follows
+    ``superstep_windows``), ``shards`` (> 1 builds the mesh-sharded
+    engine, DESIGN.md §8), and ``superstep_windows`` — validated against
+    the engine's :class:`EngineSpec` before the factory runs.  ``kwargs``
+    are backend extras such as ``max_pops`` / ``chunk``.  The event engine
+    accepts none.
+
+    The legacy form ``make_engine("jax", app, cfg, layout=...)`` routes
+    through a deprecation shim; see :func:`_resolve_run`.
+    """
+    name, kwargs = _resolve_run(run, kwargs)
     spec = get_engine_spec(name)
     kwargs = _validate(spec, kwargs)
     return spec.factory(app, cfg, faults, **kwargs)
 
 
-def run_replicates(engine_name: str, make_app, cfg: SimConfig,
-                   seeds: Sequence[int],
+def validate_run_config(run: RunConfig) -> None:
+    """Eagerly check a RunConfig against its engine's registered spec.
+
+    Entry points (the experiments CLI) call this before any app or JAX
+    machinery is built, so a bad combination fails in microseconds with
+    the registry's message.
+    """
+    spec = get_engine_spec(run.engine)
+    _validate(spec, run.engine_kwargs())
+
+
+def run_replicates(run: Union[RunConfig, str], make_app, cfg: SimConfig,
+                   seeds: Optional[Sequence[int]] = None,
                    faults: Optional[FaultModel] = None,
                    **engine_kwargs) -> List[SimResult]:
     """Run one replicate per seed, batched where the backend supports it.
@@ -283,16 +334,24 @@ def run_replicates(engine_name: str, make_app, cfg: SimConfig,
     exposing a native ``run_replicates`` (the jax engine: one vmapped scan,
     sharded over the device mesh when ``shards`` > 1) get all seeds at
     once; others loop.  ``cfg.seed`` is overridden by each replicate's
-    seed.
+    seed.  With a :class:`RunConfig` first argument, ``seeds`` may be
+    omitted: the sweep is ``run.seeds(cfg.seed)`` (``replicates`` seeds
+    rooted at the SimConfig seed).
     """
-    eng = make_engine(engine_name, make_app(int(seeds[0])),
+    if seeds is None:
+        if not isinstance(run, RunConfig):
+            raise TypeError("seeds may only be omitted when a RunConfig "
+                            "is passed (its replicates field sizes the "
+                            "sweep)")
+        seeds = run.seeds(cfg.seed)
+    eng = make_engine(run, make_app(int(seeds[0])),
                       dataclasses.replace(cfg, seed=int(seeds[0])), faults,
                       **engine_kwargs)
     if hasattr(eng, "run_replicates"):
         return eng.run_replicates([int(s) for s in seeds])
     out = [eng.run()]
     for s in seeds[1:]:
-        eng = make_engine(engine_name, make_app(int(s)),
+        eng = make_engine(run, make_app(int(s)),
                           dataclasses.replace(cfg, seed=int(s)), faults,
                           **engine_kwargs)
         out.append(eng.run())

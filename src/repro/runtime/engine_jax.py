@@ -55,6 +55,7 @@ from repro.runtime.window_core import (  # noqa: F401  (re-exports: the RNG
     # here by apps and older callers)
     BARRIER_MODES as _BARRIER_MODES,
     LOCAL_RELEASE,
+    make_dense_spec,
     STREAM_APP,
     STREAM_LAT,
     STREAM_MUT,
@@ -82,12 +83,15 @@ class JaxEngine:
     def __init__(self, app, cfg: SimConfig,
                  faults: Optional[FaultModel] = None,
                  *, max_pops: int = 16, chunk: int = 256,
-                 layout: str = "auto"):
+                 layout: str = "auto", scheduler: str = "window",
+                 superstep_windows: int = 1):
         self.app = app
         self.cfg = cfg
         self.faults = faults or FaultModel()
         self.max_pops = max_pops
         self.chunk = chunk
+        self.scheduler = scheduler
+        self.superstep_windows = int(superstep_windows)
         topo = getattr(app, "injected", None)
         if not isinstance(topo, Topology):
             raise ValueError(
@@ -128,25 +132,49 @@ class JaxEngine:
         self._cfactor = jnp.asarray(
             [self.faults.compute_factor(p) for p in range(n)], jnp.float32)
 
-        # --- duct layout (DESIGN.md §10): dense receiver-major fast path --
-        # for degree-regular topologies, or the general edge-major path
+        # --- duct layout (DESIGN.md §10/§13): bucketed dense receiver-major
+        # fast path (every topology), or the general edge-major path
         self.lplan = plan_layout(topo, layout)
         self.layout = self.lplan.kind
         if self.layout == "dense":
             lp = self.lplan
-            dd = lp.degree
-            self._d_src = jnp.asarray(lp.src)   # (n, d) source pid per row
-            self._d_rev = jnp.asarray(lp.rev)   # (n, d) flat out-edge rows
-            self._d_eid = jnp.asarray(lp.eid)   # (n, d) canonical edge ids
-            self._d_out_slot = jnp.asarray(np.broadcast_to(
-                np.asarray([OPP_IDX[j % 4] for j in range(dd)], np.int32),
-                (n, dd)))
-            self._d_lat = jnp.asarray(
-                lat[lp.eid.reshape(-1)].reshape(n, dd))
+            self._spec = make_dense_spec(lp)
+            self.R = R = int(lp.n_rows)
+            # flat (R,) row tables; dead padding rows carry sentinel
+            # src == n / eid == E and live == False
+            j = np.arange(R) - lp.row_start[lp.dst]
+            self._d_src = jnp.asarray(lp.src)
+            self._d_dst = jnp.asarray(lp.dst)
+            self._d_rev = jnp.asarray(lp.rev)
+            self._d_eid = jnp.asarray(lp.eid)
+            self._d_live = jnp.asarray(lp.live)
+            # row j of a receiver block feeds halo slot j % 4, so the
+            # sender writes the opposite slot — same OPP_IDX formula as
+            # the edge-major path, computed per flat row
+            self._d_out_slot = jnp.asarray(
+                np.asarray(OPP_IDX, np.int32)[j % 4])
+            self._d_lat = jnp.asarray(np.concatenate(
+                [lat, np.zeros(1, np.float32)])[lp.eid])
+        if scheduler == "superstep" and self.layout != "edge":
+            w = self.superstep_windows
+            if w < 2:
+                raise ValueError(
+                    "scheduler='superstep' fuses superstep_windows >= 2 "
+                    f"windows per launch (got {w})")
+            if w > cfg.buffer_capacity:
+                raise ValueError(
+                    f"superstep_windows={w} must not exceed "
+                    f"buffer_capacity={cfg.buffer_capacity}: the compact "
+                    "pushbuf commits at most one slot per window into the "
+                    "ring tail")
+        elif scheduler == "superstep":
+            raise ValueError("scheduler='superstep' needs the dense layout "
+                             "(pass layout='auto' or 'dense')")
 
         self.S = self.core.S
         self._max_windows = self.core.default_max_windows
         self._runner = None
+        self._windows_per_call = self.chunk
 
     # ------------------------------------------------------------------
     def _barrier_cost(self) -> float:
@@ -167,7 +195,10 @@ class JaxEngine:
         array is constant, so the sharded subclass overrides only the row
         count (padded per-shard layout) without re-deriving anything."""
         if self.layout == "dense":
-            return self.core.dense_rings(self.n, self.lplan.degree)
+            if self.scheduler == "superstep":
+                return self.core.superstep_rings(self.R,
+                                                 self.superstep_windows)
+            return self.core.dense_rings(self.R)
         return self.core.edge_rings(self.E)
 
     def _init_carry(self, seed: int) -> Dict[str, jax.Array]:
@@ -241,14 +272,17 @@ class JaxEngine:
         return self._finish_window(u, active, drained_r), None
 
     # ------------------------------------------------------------------
-    def _window_body_dense(self, carry, _):
-        """One lockstep window on the dense receiver-major layout.
+    def _window_body_dense(self, carry, _, fused: bool = False):
+        """One lockstep window on the dense bucketed receiver-major layout.
 
         Same window semantics, regrouped so one fused ``duct_window`` pass
         per window touches the ring state (core.window_dense) and this
         window's sends are staged eagerly (core.stage_dense).  The global
         drain/send sequence — and with it every trajectory and QoS
-        counter — is bitwise identical to the edge-major path.
+        counter — is bitwise identical to the edge-major path.  With
+        ``fused`` the drain runs against frozen base rings via the
+        superstep pushbuf (core.window_dense_fused) — same pops, same
+        accepts, same counters.
         """
         cfg = self.cfg
         core = self.core
@@ -259,7 +293,12 @@ class JaxEngine:
         u = dict(carry)
 
         if comm:
-            upd, drained_r = core.window_dense(carry, t, active)
+            if fused:
+                upd, drained_r = core.window_dense_fused(
+                    carry, t, active, spec=self._spec, dst_row=self._d_dst)
+            else:
+                upd, drained_r = core.window_dense(carry, t, active,
+                                                   spec=self._spec)
             u.update(upd)
 
         app_state, edges_out, steps = core.compute(
@@ -268,15 +307,35 @@ class JaxEngine:
 
         if comm:
             # same (edge, sender step) latency keying as the edge-major
-            # path: row (p, j)'s sender is src[p, j]
+            # path: flat row r's sender is src[r] (sentinel-clipped on
+            # dead rows, whose draws are masked off by `live`)
             lat = self._d_lat * lognormal_factor(
                 cfg.latency_sigma, seed, STREAM_LAT, self._d_eid,
-                steps[self._d_src])
+                steps[jnp.clip(self._d_src, 0, self.n - 1)])
             u.update(core.stage_dense(
                 carry, u, t, active, edges_out, lat,
                 src=self._d_src, rev=self._d_rev,
-                out_slot=self._d_out_slot, degree=self.lplan.degree))
+                out_slot=self._d_out_slot, live=self._d_live,
+                deg=self._deg, spec=self._spec))
         return self._finish_window(u, active, drained_r), None
+
+    # ------------------------------------------------------------------
+    def _superstep_body(self, carry, _):
+        """One W-fused superstep (DESIGN.md §13): W windows against frozen
+        base rings (pushes append to the compact pushbuf, drains walk
+        base-prefix then pushbuf), then ONE ``duct_commit`` folds the
+        superstep's pushes into the rings.  Trajectories, counters, and
+        QoS samples are bitwise identical to the per-window dense path;
+        only the O(R*C) ring sweeps are fused away."""
+
+        def win(c, __):
+            return self._window_body_dense(c, None, fused=True)
+
+        carry, _ = jax.lax.scan(win, carry, None,
+                                length=self.superstep_windows)
+        carry = dict(carry)
+        carry.update(self.core.commit_superstep(carry))
+        return carry, None
 
     # ------------------------------------------------------------------
     def _finish_window(self, u, active, drained_r):
@@ -289,13 +348,24 @@ class JaxEngine:
     # ------------------------------------------------------------------
     def _get_runner(self):
         if self._runner is None:
-            body = (self._window_body_dense if self.layout == "dense"
-                    else self._window_body)
+            if self.layout == "dense" and self.scheduler == "superstep":
+                W = self.superstep_windows
+                sup = max(1, self.chunk // W)
+                self._windows_per_call = sup * W
 
-            def chunk(carry):
-                carry, _ = jax.lax.scan(body, carry, None,
-                                        length=self.chunk)
-                return carry
+                def chunk(carry):
+                    carry, _ = jax.lax.scan(self._superstep_body, carry,
+                                            None, length=sup)
+                    return carry
+            else:
+                body = (self._window_body_dense if self.layout == "dense"
+                        else self._window_body)
+                self._windows_per_call = self.chunk
+
+                def chunk(carry):
+                    carry, _ = jax.lax.scan(body, carry, None,
+                                            length=self.chunk)
+                    return carry
             # donation lets XLA reuse the ring/state buffers across chunks
             self._runner = jax.jit(jax.vmap(chunk), donate_argnums=0)
         return self._runner
@@ -314,7 +384,7 @@ class JaxEngine:
         prev_done = None
         while windows < self._max_windows:
             carry = runner(carry)
-            windows += self.chunk
+            windows += self._windows_per_call
             # pipelined early-exit probe: enqueue this chunk's tiny done
             # reduction, but only *read* the previous chunk's — the host
             # blocks on a result whose chunk already finished while the

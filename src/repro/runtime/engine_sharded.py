@@ -102,6 +102,8 @@ from repro.runtime.topologies import contiguous_partition
 from repro.runtime.window_core import (
     BARRIER_MODES,
     STREAM_LAT,
+    BucketSlab,
+    DenseSpec,
     MeshRelease,
     PipelinedRelease,
     lognormal_factor,
@@ -210,17 +212,44 @@ class ShardedJaxEngine(JaxEngine):
         lsrc, ldst = inv[esrc], inv[edst]     # edge endpoints as positions
         src_sh, dst_sh = lsrc // m, ldst // m
         rows_by_shard = [np.where(dst_sh == s)[0] for s in range(S)]
+        bucket_members: Dict[str, np.ndarray] = {}
         if self.lplan.kind == "dense":
-            # dense receiver-major local rows (DESIGN.md §10): edge e lives
-            # at (local receiver index) * d + j on its receiver's shard,
-            # where j is its sorted-source position there — no padding, and
-            # each receiver's rows stay in canonical-edge-id order, so the
-            # dense halo select ties break like the unsharded engine
-            dd = self.lplan.degree
-            ein = m * dd
+            # bucketed dense receiver-major local rows (DESIGN.md §13):
+            # bucket degrees are global, and every shard hosts its local
+            # members of bucket b in a slab at the SAME static offset —
+            # member block i (ascending local position) owns rows
+            # off_b + i*deg_b .. off_b + (i+1)*deg_b - 1, with j the
+            # edge's sorted-source position there, so each receiver's live
+            # rows stay in canonical-edge-id order and the dense halo
+            # select ties break like the unsharded engine.  Slabs pad to
+            # the max member count over shards with sentinel blocks
+            # (member value m: gathers clamp, scatters drop).
+            lp = self.lplan
+            rows_live = np.where(lp.live)[0]
             jof = np.empty(E, np.int64)
-            jof[self.lplan.eid.reshape(-1)] = np.tile(np.arange(dd), self.n)
-            row_of = (ldst % m) * dd + jof
+            jof[lp.eid[rows_live]] = (rows_live -
+                                      lp.row_start[lp.dst[rows_live]])
+            bdeg_pos = np.asarray(lp.bdeg, np.int64)[perm]  # by position
+            self._bucket_geom: List[tuple] = []
+            row0_pos = np.zeros(self.n, np.int64)  # first local row of the
+            start = 0                              # position's member block
+            for bi, b in enumerate(lp.buckets):
+                counts = [int(np.sum(bdeg_pos[s * m:(s + 1) * m] == b.deg))
+                          for s in range(S)]
+                nb_max = max(1, max(counts))
+                mem = np.full((S, nb_max), m, np.int32)
+                for s in range(S):
+                    loc = np.where(bdeg_pos[s * m:(s + 1) * m] == b.deg)[0]
+                    mem[s, :len(loc)] = loc
+                    row0_pos[s * m + loc] = start + np.arange(len(loc)) * b.deg
+                identity = (len(lp.buckets) == 1 and nb_max == m and
+                            min(counts) == m)
+                self._bucket_geom.append((start, nb_max, b.deg, identity))
+                if not identity:
+                    bucket_members[str(bi)] = mem
+                start += nb_max * b.deg
+            ein = start
+            row_of = row0_pos[ldst] + jof
         else:
             # canonical edge id -> its ring's local row index (ascending
             # canonical order per shard, so local row order == canonical
@@ -322,7 +351,7 @@ class ShardedJaxEngine(JaxEngine):
             row_src=row_src, row_interior=row_interior,
             row_out_slot=row_out_slot, row_rev=row_rev,
             row_halo_key=row_halo_key, row_lat=row_lat,
-            rows_bnd=rows_bnd, bnd=bnd_tables))
+            rows_bnd=rows_bnd, bnd=bnd_tables, bmem=bucket_members))
         self._perm_np = perm
         self._inv_np = inv
 
@@ -392,6 +421,17 @@ class ShardedJaxEngine(JaxEngine):
     # Shard-local window phases: thin wrappers over the shared core with
     # this shard's sentinel-padded tables
     # ------------------------------------------------------------------
+    def _dense_spec_local(self, st) -> DenseSpec:
+        """This shard's bucket-slab geometry: static offsets shared by all
+        shards, member tables from the sharded statics (identity buckets
+        skip theirs and take the zero-gather fast path)."""
+        slabs = tuple(
+            BucketSlab(start=start, nb=nb, deg=deg,
+                       members=None if ident else st["bmem"][str(bi)])
+            for bi, (start, nb, deg, ident)
+            in enumerate(self._bucket_geom))
+        return DenseSpec(n_dst=self._m, n_rows=self._ein, buckets=slabs)
+
     def _drain_phase(self, st, carry, t_pad, act_pad):
         """Drain every local ring (they live on their receiver's shard)
         through the shared core, with this shard's row tables."""
@@ -399,8 +439,8 @@ class ShardedJaxEngine(JaxEngine):
             carry, t_pad[st["row_dst"]], act_pad[st["row_dst"]],
             halo_key=st["row_halo_key"], n_halo=4 * self._m,
             dst=st["row_dst"], n_dst=self._m,
-            dense_degree=(self.lplan.degree
-                          if self.lplan.kind == "dense" else None))
+            dense_spec=(self._dense_spec_local(st)
+                        if self.lplan.kind == "dense" else None))
 
     def _stage_offsets(self, st, t_pad, act_pad, eo_pad, ptouch_pad,
                        seed, steps_pad):

@@ -21,13 +21,19 @@ engine, DESIGN.md §7); ``--replicates R`` sweeps R seeds, dispatched as one
 vmapped scan on the jax engine.  ``--shards S`` partitions the population
 over an S-device mesh (DESIGN.md §8) with the seed axis vmapped inside
 each shard; any shard count reproduces the single-device trajectories
-exactly.  ``--superstep-windows W`` lets each shard run W windows between
-exchanges (one packed ppermute per superstep, DESIGN.md §9; W=1 is
-bitwise-identical), ``--scheduler pipelined`` double-buffers that exchange
-so it overlaps the next superstep's interior windows (boundary messages
-arrive one superstep later — honest latency the QoS stream observes,
-DESIGN.md §12 / docs/QOS.md), and ``--qos-interval`` pins the snapshot
-spacing of the time-resolved ``qos_timeseries`` every row carries.
+exactly.  ``--superstep-windows W`` fuses W windows per exchange (sharded:
+one packed ppermute per superstep, DESIGN.md §9; unsharded: the W-fused
+dense megakernel with one ring commit per superstep, DESIGN.md §13 —
+bitwise-identical either way at W=1, and the unsharded fusion at any W),
+``--scheduler pipelined`` double-buffers the sharded exchange so it
+overlaps the next superstep's interior windows (boundary messages arrive
+one superstep later — honest latency the QoS stream observes, DESIGN.md
+§12 / docs/QOS.md), and ``--qos-interval`` pins the snapshot spacing of
+the time-resolved ``qos_timeseries`` every row carries.
+
+All of these axes travel as one frozen
+:class:`~repro.runtime.config.RunConfig` (built from the CLI namespace by
+``RunConfig.from_args``, stamped into every result row by ``to_dict``).
 
 CLI::
 
@@ -46,7 +52,9 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.modes import AsyncMode
 from repro.core.qos import METRICS, aggregate_reports, aggregate_timeseries
-from repro.runtime.engine import ENGINES, make_engine, run_replicates
+from repro.runtime.config import RunConfig
+from repro.runtime.engine import (ENGINES, make_engine, run_replicates,
+                                  validate_run_config)
 from repro.runtime.faults import faulty_host
 from repro.runtime.simulator import SimConfig
 from repro.runtime.topologies import TOPOLOGIES, Topology, make_topology
@@ -112,19 +120,14 @@ def _topology_for(args, n: int) -> Topology:
     return make_topology(args.topology, n, **kw)
 
 
-def _engine_kwargs(args) -> dict:
-    """Backend options forwarded to ``make_engine``
-    (--shards / --scheduler / --superstep-windows / --layout)."""
-    kw = {}
-    if args.shards > 1:
-        kw["shards"] = args.shards
-    if args.superstep_windows > 1:
-        kw["superstep_windows"] = args.superstep_windows
-    if args.scheduler != "auto":
-        kw["scheduler"] = args.scheduler
-    if args.layout != "auto":
-        kw["layout"] = args.layout
-    return kw
+def _run_config(args) -> RunConfig:
+    """The frozen strategy selection every family launches with.
+
+    One :class:`RunConfig` is built from the CLI namespace in ``main``
+    (the flag names match the field names), validated once against the
+    engine registry, and stamped into every result row via ``to_dict``.
+    """
+    return RunConfig.from_args(args)
 
 
 # ---------------------------------------------------------------------------
@@ -138,12 +141,12 @@ def run_modes(args) -> List[dict]:
     rows = []
     for mode in AsyncMode:
         app = make_app(args.app, n, args.simels, topo, args.seed)
-        res = make_engine(args.engine, app,
-                          _sim_config(args, n, mode=mode),
-                          **_engine_kwargs(args)).run()
+        res = make_engine(args.run, app,
+                          _sim_config(args, n, mode=mode)).run()
         dist = _distributions(res)
         row = dict(family="modes", mode=int(mode), n=n,
                    topology=topo.name, engine=args.engine,
+                   run=args.run.to_dict(),
                    rate_per_cpu=res.update_rate_per_cpu,
                    quality=res.quality,
                    delivery_failure_rate=res.delivery_failure_rate,
@@ -166,11 +169,11 @@ def run_weak_scaling(args) -> List[dict]:
         topo = _topology_for(args, n)
         cfg = _sim_config(args, n)
         t0 = time.perf_counter()
+        # seeds omitted: the RunConfig's replicates field sizes the sweep,
+        # rooted at cfg.seed
         results = run_replicates(
-            args.engine,
-            lambda s: make_app(args.app, n, args.simels, topo, s),
-            cfg, seeds=[args.seed + r for r in range(args.replicates)],
-            **_engine_kwargs(args))
+            args.run,
+            lambda s: make_app(args.app, n, args.simels, topo, s), cfg)
         wall = time.perf_counter() - t0
         # QoS distribution pools (process, window) samples over replicates
         all_qos = [q for res in results for q in res.qos]
@@ -184,6 +187,7 @@ def run_weak_scaling(args) -> List[dict]:
         updates = sum(sum(r.updates) for r in results)
         rows.append(dict(family="weak_scaling", n=n, topology=topo.name,
                          simels=args.simels, engine=args.engine,
+                         run=args.run.to_dict(),
                          shards=args.shards,
                          superstep_windows=args.superstep_windows,
                          scheduler=args.scheduler,
@@ -208,12 +212,12 @@ def run_intensivity(args) -> List[dict]:
         # ~ 200us, matching the benchmark parameterization)
         base = args.base_compute * (1 + simels / 160)
         app = make_app(args.app, n, simels, topo, args.seed)
-        res = make_engine(args.engine, app,
-                          _sim_config(args, n, base_compute=base),
-                          **_engine_kwargs(args)).run()
+        res = make_engine(args.run, app,
+                          _sim_config(args, n, base_compute=base)).run()
         dist = _distributions(res)
         rows.append(dict(family="intensivity", n=n, simels=simels,
                          topology=topo.name, engine=args.engine,
+                         run=args.run.to_dict(),
                          rate_per_cpu=res.update_rate_per_cpu, qos=dist))
         print(f"  simels/process={simels}")
         _print_distributions(dist)
@@ -238,8 +242,8 @@ def run_faults(args) -> List[dict]:
                                                      args.fault_compute,
                                                      args.fault_link))):
         app = make_app(args.app, n, args.simels, topo, args.seed)
-        res = make_engine(args.engine, app, _sim_config(args, n),
-                          faults, **_engine_kwargs(args)).run()
+        res = make_engine(args.run, app, _sim_config(args, n),
+                          faults).run()
         groups = {
             "global": res.qos,
             "clique": [q for p in clique for q in res.qos_by_process[p]],
@@ -254,6 +258,7 @@ def run_faults(args) -> List[dict]:
         }
         row = dict(family="faults", label=label, n=n, topology=topo.name,
                    faulty_host=host, engine=args.engine,
+                   run=args.run.to_dict(),
                    qos={g: aggregate_reports(reps, PERCENTILES)
                         for g, reps in groups.items()},
                    qos_timeseries={
@@ -295,34 +300,39 @@ def build_parser() -> argparse.ArgumentParser:
                         "each shard).  On CPU set XLA_FLAGS="
                         "--xla_force_host_platform_device_count=S")
     p.add_argument("--superstep-windows", type=int, default=1,
-                   help="windows each shard advances per superstep "
-                        "(self-paced scheduler, DESIGN.md §9): boundary "
+                   help="windows fused per exchange (self-paced "
+                        "scheduler, DESIGN.md §9/§13).  Sharded: boundary "
                         "traffic batches into one packed ppermute per "
                         "superstep, cutting the collective count ~W x.  "
-                        "1 = per-window exchange (bitwise-identical "
-                        "trajectories); needs --shards > 1")
+                        "Unsharded: the W-fused dense megakernel commits "
+                        "ring writes once per superstep.  1 = per-window "
+                        "exchange (bitwise-identical trajectories)")
     p.add_argument("--scheduler", default="auto",
                    choices=["auto", "window", "superstep", "pipelined"],
-                   help="exchange cadence strategy (DESIGN.md §11/§12): "
-                        "window = cross-shard boundary exchange every "
-                        "lockstep window, superstep = batched every "
-                        "--superstep-windows windows, pipelined = "
-                        "double-buffered — superstep k's exchange overlaps "
-                        "superstep k+1's interior windows, boundary "
-                        "messages arrive one superstep later (honest "
-                        "added latency the QoS stream observes; see "
-                        "docs/QOS.md).  superstep/pipelined need "
-                        "--shards > 1 and --superstep-windows > 1; auto "
-                        "follows --superstep-windows")
+                   help="exchange cadence strategy (DESIGN.md §11/§12/"
+                        "§13): window = exchange every lockstep window, "
+                        "superstep = batched every --superstep-windows "
+                        "windows (sharded: one collective per superstep; "
+                        "unsharded: the W-fused dense megakernel, "
+                        "bitwise-identical), pipelined = double-buffered "
+                        "— superstep k's exchange overlaps superstep "
+                        "k+1's interior windows, boundary messages arrive "
+                        "one superstep later (honest added latency the "
+                        "QoS stream observes; see docs/QOS.md; needs "
+                        "--shards > 1).  superstep/pipelined need "
+                        "--superstep-windows > 1; auto follows "
+                        "--superstep-windows")
     p.add_argument("--layout", default="auto",
                    choices=["auto", "dense", "edge"],
                    help="duct ring layout for --engine jax (DESIGN.md "
-                        "§10): dense = receiver-major fast path for "
-                        "degree-regular topologies (ring, torus — zero "
-                        "segment/scatter ops per window), edge = the "
-                        "general edge-major path; auto picks dense when "
-                        "eligible and logs the fallback otherwise.  "
-                        "Trajectories are bitwise identical either way")
+                        "§10/§13): dense = the degree-bucketed "
+                        "receiver-major fast path (zero segment/scatter "
+                        "ops per window; exact-degree buckets on ring/"
+                        "torus, padded power-of-two buckets on smallworld/"
+                        "cliques), edge = the general edge-major path.  "
+                        "auto resolves to dense on every built-in "
+                        "topology.  Trajectories are bitwise identical "
+                        "either way")
     p.add_argument("--qos-interval", type=float, default=None,
                    help="QoS snapshot spacing in virtual seconds for the "
                         "time-resolved stream (default: duration/12); "
@@ -359,25 +369,14 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     parser = build_parser()
     args = parser.parse_args(argv)
-    if args.shards > 1 and args.engine != "jax":
-        parser.error("--shards requires --engine jax")
-    if args.superstep_windows < 1:
-        parser.error("--superstep-windows must be >= 1")
-    if args.superstep_windows > 1 and args.shards <= 1:
-        parser.error("--superstep-windows > 1 requires --shards > 1 "
-                     "(it amortizes cross-shard exchanges)")
-    if args.scheduler in ("superstep", "pipelined") \
-            and args.superstep_windows <= 1:
-        parser.error(f"--scheduler {args.scheduler} needs "
-                     "--superstep-windows > 1 to choose the batch size W")
-    if args.scheduler == "window" and args.superstep_windows > 1:
-        parser.error("--scheduler window exchanges every lockstep window; "
-                     "drop --superstep-windows or pass "
-                     "--scheduler superstep")
-    if args.qos_interval is not None and args.qos_interval <= 0:
-        parser.error("--qos-interval must be positive")
-    if args.layout != "auto" and args.engine != "jax":
-        parser.error("--layout requires --engine jax")
+    # one frozen strategy carrier for every family; domain checks happen
+    # in RunConfig, cross-axis rules once against the engine registry —
+    # both before any app or JAX machinery is built
+    try:
+        args.run = _run_config(args)
+        validate_run_config(args.run)
+    except ValueError as e:
+        parser.error(str(e))
     families = list(FAMILIES) if args.family == "all" else [args.family]
     rows: List[dict] = []
     t0 = time.perf_counter()

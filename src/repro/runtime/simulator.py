@@ -214,6 +214,11 @@ class Simulator:
         n = self.n
         comm = cfg.mode != AsyncMode.NO_COMM
         barriered = cfg.mode in _BARRIER_MODES
+        # mode 1 meters its quantum on the WORK clock (compute + halo
+        # pulls): per-message handling rides in the barrier slack, so the
+        # update schedule is a function of (seed, release times) alone —
+        # see window_core.close_window for the invariance argument
+        rolling = cfg.mode == AsyncMode.ROLLING_BARRIER
         duration = cfg.duration
         per_msg_cost = cfg.per_message_cost
         per_pull_cost = cfg.per_pull_cost
@@ -286,7 +291,8 @@ class Simulator:
                 c_ok[pid] += n_ok
                 c_drop[pid] += n_drop
 
-            pending = n_msgs * per_msg_cost + pull_costs[pid]
+            pending = (pull_costs[pid] if rolling
+                       else n_msgs * per_msg_cost + pull_costs[pid])
 
             if t >= next_snap[pid]:
                 snaps = snapshots[pid]

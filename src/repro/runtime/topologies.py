@@ -291,20 +291,21 @@ def contiguous_partition(topo: Topology, n_shards: int) -> ShardPlan:
 # ---------------------------------------------------------------------------
 # Duct layout planning (DESIGN.md §10)
 # ---------------------------------------------------------------------------
-#: layouts a caller may request; "auto" resolves to dense or edge per topology
+#: layouts a caller may request; "auto" resolves to dense on every topology
+#: (the bucketed plan below covers irregular degrees); "edge" keeps the
+#: fully general edge-major layout for comparison runs and parity tests
 LAYOUTS = ("auto", "dense", "edge")
-
-#: auto picks dense only when every process has at most this many in-edges:
-#: one ring row per halo slot keeps the megakernel's receiver tiles square
-#: and avoids slot aliasing on the fast path (cliques, though degree-regular,
-#: exceed it and stay edge-major under auto — force layout="dense" to alias)
-DENSE_AUTO_MAX_DEGREE = 4
 
 
 def regular_degree(topo: Topology) -> Optional[int]:
     """The common in-degree if every process has the same one, else None."""
     degs = {len(nbs) for nbs in topo.neighbors}
     return degs.pop() if len(degs) == 1 else None
+
+
+def next_pow2(k: int) -> int:
+    """Smallest power of two >= k (k >= 1)."""
+    return 1 << (int(k) - 1).bit_length()
 
 
 def canonical_edges(topo: Topology):
@@ -325,96 +326,126 @@ def canonical_edges(topo: Topology):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class DenseBucket:
+    """One degree bucket of the dense plan: a contiguous slab of padded
+    receiver row blocks.  Member ``i`` (ascending pid) owns flat rows
+    ``start + i*deg .. start + (i+1)*deg - 1``."""
+
+    deg: int                 # padded rows per member receiver
+    start: int               # first flat row of this bucket's slab
+    members: np.ndarray      # (nb,) member pids, ascending
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class LayoutPlan:
     """How the vectorized engines lay duct rings out in memory.
 
     ``edge`` is the fully general edge-major layout: one ring per directed
     edge in canonical enumeration order, receiver bookkeeping via
     segment_sum/segment_max over edge rows.  ``dense`` is the
-    receiver-major layout for degree-regular topologies: receiver ``p``
-    owns rows ``(p, 0..d-1)`` — its ``d`` in-edge rings contiguous, in
-    sorted-source order.  That order is *canonical-edge-id order per
-    receiver* (canonical ids are source-major), so the edge-major halo
-    tie-break "highest canonical edge id wins" becomes "highest row ``j``
-    wins" — a per-receiver unrolled select — and every receiver counter is
-    a row reduction over axis ``d``; no segment/scatter op survives.
+    degree-bucketed receiver-major layout (DESIGN.md §13): receivers are
+    grouped by in-degree bucket — the smallest power of two >= their
+    in-degree, clamped to the topology's max in-degree, so degree-regular
+    topologies collapse to a single zero-padding bucket of exactly ``d``
+    rows — and each receiver's row block is padded to its bucket degree
+    with masked *dead* rows.  Live rows keep sorted-source order, which per
+    receiver is canonical-edge-id order (canonical ids are source-major),
+    so the edge-major halo tie-break "highest canonical edge id wins"
+    stays "highest row ``j`` wins" and every receiver counter is a row
+    reduction over the bucket's ``deg`` axis; no segment/scatter op
+    survives on the regular fast path.
 
-    Dense tables (``None`` for the edge layout), all ``(n, d)`` int32:
+    Dense tables (``None`` for the edge layout), flat over the ``n_rows``
+    padded rows:
 
-      src   source pid of the in-edge stored at row ``(p, j)``
-      rev   flat dense row of the reverse edge ``(p -> src)``; because the
-            topology is symmetric this doubles as the *out-edge table*:
-            sender ``p``'s d outgoing rings are rows ``rev[p, :]``
-      eid   canonical edge id of row ``(p, j)`` — keys the per-edge latency
-            RNG stream identically to the edge-major path
+      src        sender pid of the in-edge at flat row ``r``; sentinel
+                 ``n`` on dead rows (gathers clamp, masks kill the value)
+      dst        owner (receiver) pid of row ``r`` — defined on dead rows
+      rev        flat row of the reverse edge; a self-involution that
+                 doubles as the *out-edge table* (sender ``p``'s outgoing
+                 rings are ``rev[rows of p]``); dead rows map to themselves
+      eid        canonical edge id (keys the per-edge latency RNG stream
+                 identically to edge-major); sentinel ``E`` on dead rows
+      live       bool mask — False exactly on dead padding rows
+      row_start  (n,) first flat row of each receiver's block
+      bdeg       (n,) bucket degree of each receiver's block
 
-    The halo slot of row ``(p, j)`` is ``j % 4`` (halo_slot_map round-robins
-    sorted neighbors) and needs no table.
+    The halo slot of flat row ``r`` is ``(r - row_start[dst[r]]) % 4``
+    (halo_slot_map round-robins sorted neighbors) and needs no table.
+    Dead rows' rings are never staged into (the ``live`` mask gates the
+    accept), so they stay empty forever and drain as no-ops.
     """
 
     kind: str
-    degree: int
+    degree: int                       # max bucket degree (0 for edge)
+    n_rows: int = 0                   # total flat padded rows R
+    buckets: Tuple[DenseBucket, ...] = ()
     src: Optional[np.ndarray] = None
+    dst: Optional[np.ndarray] = None
     rev: Optional[np.ndarray] = None
     eid: Optional[np.ndarray] = None
+    live: Optional[np.ndarray] = None
+    row_start: Optional[np.ndarray] = None
+    bdeg: Optional[np.ndarray] = None
 
 
 def _dense_plan(topo: Topology) -> LayoutPlan:
     n = topo.n
-    d = regular_degree(topo)
-    assert d is not None
-    src = np.empty((n, d), np.int32)
-    eid = np.empty((n, d), np.int32)
-    rev = np.empty((n, d), np.int32)
+    degs = [len(nbs) for nbs in topo.neighbors]
+    dmax = max(degs)
     _, _, eindex = canonical_edges(topo)
+    E = len(eindex)
+    # bucket degree per receiver: next power of two, clamped to the max
+    # in-degree (degree-regular topologies collapse to one exact-d bucket)
+    bdeg = np.array([min(next_pow2(k), dmax) if k else 0 for k in degs],
+                    np.int32)
+    buckets: List[DenseBucket] = []
+    row_start = np.zeros(n, np.int64)
+    start = 0
+    for bd in sorted(set(int(b) for b in bdeg if b)):
+        members = np.where(bdeg == bd)[0]
+        buckets.append(DenseBucket(deg=bd, start=start, members=members))
+        row_start[members] = start + np.arange(len(members)) * bd
+        start += len(members) * bd
+    R = start
+    src = np.full(R, n, np.int32)
+    dst = np.empty(R, np.int32)
+    eid = np.full(R, E, np.int32)
+    rev = np.arange(R, dtype=np.int32)     # dead rows: self-involution
+    live = np.zeros(R, bool)
     jindex: Dict[Tuple[int, int], int] = {}
-    for p in range(n):
-        for j, s in enumerate(sorted(topo.neighbors[p])):
-            src[p, j] = s
-            eid[p, j] = eindex[(s, p)]
-            jindex[(s, p)] = j
-    for p in range(n):
-        for j in range(d):
-            s = int(src[p, j])
-            rev[p, j] = s * d + jindex[(p, s)]
-    return LayoutPlan(kind="dense", degree=d, src=src, rev=rev, eid=eid)
+    for b in buckets:
+        for p in b.members.tolist():
+            r0 = int(row_start[p])
+            dst[r0:r0 + b.deg] = p
+            for j, s in enumerate(sorted(topo.neighbors[p])):
+                src[r0 + j] = s
+                eid[r0 + j] = eindex[(s, p)]
+                live[r0 + j] = True
+                jindex[(s, p)] = j
+    rows_live = np.where(live)[0]
+    rev[rows_live] = (row_start[src[rows_live]]
+                      + np.array([jindex[(int(dst[r]), int(src[r]))]
+                                  for r in rows_live], np.int64))
+    return LayoutPlan(kind="dense", degree=dmax, n_rows=R,
+                      buckets=tuple(buckets), src=src, dst=dst, rev=rev,
+                      eid=eid, live=live,
+                      row_start=row_start.astype(np.int32), bdeg=bdeg)
 
 
 def plan_layout(topo: Topology, layout: str = "auto") -> LayoutPlan:
     """Resolve a requested layout against a topology.
 
-    ``auto`` picks dense for degree-regular topologies with degree <=
-    ``DENSE_AUTO_MAX_DEGREE`` (ring, torus) and logs an actionable line
-    when it falls back to edge-major (smallworld: irregular; cliques:
-    degree > 4).  ``dense`` forces the dense layout and raises on
-    irregular topologies; ``edge`` always uses the general path.
+    ``auto`` resolves to the bucketed dense layout on every topology —
+    irregular in-degrees land in power-of-two buckets with masked dead
+    padding rows, degree-regular ones get a single exact-``d`` bucket —
+    so only an explicit ``edge`` keeps the general edge-major path
+    (comparison runs, parity tests).
     """
     if layout not in LAYOUTS:
         raise ValueError(
             f"unknown layout {layout!r}; choose from {LAYOUTS}")
-    d = regular_degree(topo)
     if layout == "edge":
-        return LayoutPlan(kind="edge", degree=0)
-    if layout == "dense":
-        if d is None:
-            raise ValueError(
-                f"layout='dense' needs a degree-regular topology, but "
-                f"{topo.name} has mixed in-degrees; use layout='edge' "
-                "(or 'auto', which falls back automatically)")
-        return _dense_plan(topo)
-    # auto — the fallback lines log at WARNING so they reach stderr through
-    # logging's last-resort handler even when the caller configures nothing
-    if d is None:
-        logger.warning(
-            "layout auto: %s has irregular in-degrees; using the edge-major "
-            "layout (dense requires a degree-regular topology)", topo.name)
-        return LayoutPlan(kind="edge", degree=0)
-    if d > DENSE_AUTO_MAX_DEGREE:
-        logger.warning(
-            "layout auto: %s is degree-regular but d=%d exceeds the %d halo "
-            "slots; using the edge-major layout (pass layout='dense' to "
-            "force the aliased dense layout)", topo.name, d,
-            DENSE_AUTO_MAX_DEGREE)
         return LayoutPlan(kind="edge", degree=0)
     return _dense_plan(topo)
 

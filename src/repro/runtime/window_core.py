@@ -47,6 +47,7 @@ from repro.core.qos import QosReport
 from repro.kernels.duct_exchange.ops import (
     dense_halo_select,
     dense_stage,
+    duct_commit,
     duct_drain,
     duct_send,
     duct_window,
@@ -177,6 +178,47 @@ class SendPhase(NamedTuple):
     sums: Optional[jax.Array]     # (n, 3) attempted/ok/dropped per process
 
 
+class BucketSlab(NamedTuple):
+    """Static view of one dense degree bucket's flat row slab.
+
+    ``members is None`` marks the identity bucket: it covers every
+    receiver (``nb == n_dst``, member i == receiver i), which is what
+    every degree-regular topology collapses to — the per-bucket phases
+    then skip all gathers/scatters and trace exactly the pre-bucketed
+    receiver-major graph.  Otherwise ``members`` maps slab block index to
+    receiver id; sentinel entries (value ``n_dst``) mark dead padding
+    blocks whose scatters drop (the sharded engine pads shards to a
+    uniform slab shape with them)."""
+
+    start: int                       # first flat row of the slab
+    nb: int                          # member blocks in the slab
+    deg: int                         # padded rows per member block
+    members: Optional[jax.Array]     # (nb,) receiver ids, or None
+
+
+class DenseSpec(NamedTuple):
+    """Static dense-layout geometry the bucketed phases iterate over."""
+
+    n_dst: int                       # receivers covered
+    n_rows: int                      # total flat rows R
+    buckets: tuple                   # of BucketSlab
+
+
+def make_dense_spec(plan) -> DenseSpec:
+    """Build the phase-iteration spec from a ``topologies.LayoutPlan``,
+    collapsing full-coverage single buckets to the identity fast path."""
+    slabs = []
+    for b in plan.buckets:
+        nb = len(b.members)
+        identity = (nb == plan.row_start.shape[0] and
+                    bool((np.asarray(b.members) == np.arange(nb)).all()))
+        slabs.append(BucketSlab(
+            start=int(b.start), nb=nb, deg=int(b.deg),
+            members=None if identity else jnp.asarray(b.members, jnp.int32)))
+    return DenseSpec(n_dst=int(plan.row_start.shape[0]),
+                     n_rows=int(plan.n_rows), buckets=tuple(slabs))
+
+
 # ---------------------------------------------------------------------------
 # The core
 # ---------------------------------------------------------------------------
@@ -245,33 +287,58 @@ class WindowCore:
             q_size=jnp.zeros(rows, jnp.int32),
         )
 
-    def dense_rings(self, n: int, d: int) -> Dict[str, jax.Array]:
-        """Fresh dense receiver-major ring state ``(n, d, C)`` plus the
-        staged-send buffers: the send *decision* happens eagerly at stage
+    def dense_rings(self, rows: int) -> Dict[str, jax.Array]:
+        """Fresh dense bucketed ring state: flat ``(R, C)`` rings (the
+        bucketed phases slice per-bucket slabs and reshape) plus the
+        staged-send buffers — the send *decision* happens eagerly at stage
         time, the ring *writes* ride into the next window's fused
-        ``duct_window`` pass (DESIGN.md §10)."""
-        cfg = self.cfg
-        C = cfg.buffer_capacity
+        ``duct_window`` pass (DESIGN.md §10/§13)."""
         L = self.bapp.payload_len
-        return dict(
-            ptouch=jnp.zeros((n, d), jnp.int32),
-            q_avail=jnp.full((n, d, C), jnp.inf, jnp.float32),
-            q_touch=jnp.zeros((n, d, C), jnp.int32),
-            q_pay=jnp.zeros((n, d, C, L), self.bapp.payload_dtype),
-            q_head=jnp.zeros((n, d), jnp.int32),
-            q_size=jnp.zeros((n, d), jnp.int32),
-            stage_pos=jnp.zeros((n, d), jnp.int32),
-            stage_acc=jnp.zeros((n, d), bool),
-            stage_avail=jnp.zeros((n, d), jnp.float32),
-            stage_touch=jnp.zeros((n, d), jnp.int32),
-            stage_pay=jnp.zeros((n, d, L), self.bapp.payload_dtype),
+        u = self.edge_rings(rows)
+        u.update(
+            stage_pos=jnp.zeros(rows, jnp.int32),
+            stage_acc=jnp.zeros(rows, bool),
+            stage_avail=jnp.zeros(rows, jnp.float32),
+            stage_touch=jnp.zeros(rows, jnp.int32),
+            stage_pay=jnp.zeros((rows, L), self.bapp.payload_dtype),
         )
+        return u
+
+    def superstep_rings(self, rows: int, w: int) -> Dict[str, jax.Array]:
+        """Extra carry for the W-fused superstep scheduler (DESIGN.md §13):
+        base rings stay frozen across a superstep while per-window pushes
+        append to a compact ``(R, W)`` pushbuf and drains walk base-prefix
+        then pushbuf; ``duct_commit`` folds the pushbuf into the rings once
+        per superstep."""
+        L = self.bapp.payload_len
+        u = self.dense_rings(rows)
+        u.update(
+            size0=jnp.zeros(rows, jnp.int32),      # base size at superstep start
+            dr_base=jnp.zeros(rows, jnp.int32),    # base pops this superstep
+            pb_cnt=jnp.zeros(rows, jnp.int32),     # pushbuf appends
+            pb_pop=jnp.zeros(rows, jnp.int32),     # pushbuf pops
+            pb_avail=jnp.zeros((rows, w), jnp.float32),
+            pb_touch=jnp.zeros((rows, w), jnp.int32),
+            pb_pay=jnp.zeros((rows, w, L), self.bapp.payload_dtype),
+            # FIFO offset of every ring slot from the frozen superstep
+            # head, precomputed once per superstep (head starts at 0);
+            # int8 when capacity permits — the drain re-reads this table
+            # every window, so its footprint is paid W times per commit
+            base_off=jnp.broadcast_to(
+                jnp.arange(self.cfg.buffer_capacity,
+                           dtype=self._off_dtype()),
+                (rows, self.cfg.buffer_capacity)),
+        )
+        return u
+
+    def _off_dtype(self):
+        return jnp.int8 if self.cfg.buffer_capacity <= 127 else jnp.int32
 
     # ------------------------------------------------------------------
     # Phase 1: drain
     # ------------------------------------------------------------------
     def drain(self, carry, t_rows, act_rows, *, halo_key, n_halo,
-              dst, n_dst, dense_degree: Optional[int] = None):
+              dst, n_dst, dense_spec: Optional[DenseSpec] = None):
         """Edge-major drain over a block of rings living on their
         receiver's device: bounded FIFO pops, halo-winner select, and the
         three receiver-side QoS counter columns.
@@ -282,9 +349,10 @@ class WindowCore:
         the scatter is deterministic on every backend.  Sentinel-padded
         tables work unchanged: invalid rows carry key ``n_halo`` /
         segment ``n_dst``, which land in the sliced-off spare segment.
-        With ``dense_degree`` the rows are receiver-major ``(n_dst, d)``
-        blocks and both the halo merge and the counter sums become plain
-        per-receiver reductions — no scatters at all.
+        With ``dense_spec`` the rows are bucketed receiver-major slabs
+        (DESIGN.md §13) and both the halo merge and the counter sums
+        become per-bucket reshape reductions — gather/scatter only on
+        non-identity buckets, never per edge.
 
         Returns ``(carry updates, drained_r)``.
         """
@@ -296,11 +364,15 @@ class WindowCore:
         delivered = d.drained > 0
         payload = carry["q_pay"][rows, d.pop_pos]
         L = carry["halo"].shape[-1]
-        if dense_degree is not None:
-            halo_pay, halo_win = dense_halo_select(
-                delivered.reshape(n_dst, dense_degree),
-                payload.reshape(n_dst, dense_degree, L))
-            halo = jnp.where(halo_win[:, :, None], halo_pay, carry["halo"])
+        new_touch = d.recv_touch + 1
+        dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
+        ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
+        # one multi-column reduction for all receiver-side counters
+        recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
+                               dtouch], axis=1)
+        if dense_spec is not None:
+            halo, recv_sums = self._merge_buckets(
+                dense_spec, carry["halo"], delivered, payload, recv_cols)
         else:
             winner = jax.ops.segment_max(
                 jnp.where(delivered, rows, -1), halo_key,
@@ -310,15 +382,6 @@ class WindowCore:
             halo = jnp.where(has_win[:, None], fresh,
                              carry["halo"].reshape(n_halo, L)).reshape(
                 n_dst, 4, L)
-        new_touch = d.recv_touch + 1
-        dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
-        ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
-        # one multi-column reduction for all receiver-side counters
-        recv_cols = jnp.stack([d.drained, delivered.astype(jnp.int32),
-                               dtouch], axis=1)
-        if dense_degree is not None:
-            recv_sums = recv_cols.reshape(n_dst, dense_degree, 3).sum(axis=1)
-        else:
             recv_sums = jax.ops.segment_sum(recv_cols, dst,
                                             num_segments=n_dst + 1)[:n_dst]
         return dict(
@@ -329,31 +392,232 @@ class WindowCore:
             q_avail=d.q_avail, q_touch=d.q_touch,
             q_head=d.head, q_size=d.size), recv_sums[:, 0]
 
-    def window_dense(self, carry, t, active):
-        """Dense-layout drain phase: one fused ``duct_window`` pass applies
-        the previous window's staged sends, drains at this window's
-        clocks, and merges halos — per receiver row, zero scatters
-        (DESIGN.md §10).  Returns ``(carry updates, drained_r)``."""
-        w = duct_window(
-            carry["q_avail"], carry["q_touch"], carry["q_pay"],
-            carry["q_head"], carry["q_size"],
-            carry["stage_pos"], carry["stage_acc"],
-            carry["stage_avail"], carry["stage_touch"],
-            carry["stage_pay"], t, active, max_pops=self.max_pops)
-        delivered = w.drained > 0
-        halo = jnp.where(w.halo_win[:, :, None], w.halo_pay, carry["halo"])
-        new_touch = w.recv_touch + 1
+    def _merge_buckets(self, spec: DenseSpec, halo, delivered, payload,
+                       recv_cols):
+        """Bucket-sliced halo merge + receiver counter reduction over flat
+        dense rows.  Each receiver lives in exactly one bucket, so the
+        identity fast path updates whole arrays and non-identity buckets
+        scatter disjoint member sets (sentinel members drop)."""
+        L = halo.shape[-1]
+        cols = recv_cols.shape[-1]
+        recv_sums = jnp.zeros((spec.n_dst, cols), recv_cols.dtype)
+        for b in spec.buckets:
+            sl = slice(b.start, b.start + b.nb * b.deg)
+            hp, hw = dense_halo_select(
+                delivered[sl].reshape(b.nb, b.deg),
+                payload[sl].reshape(b.nb, b.deg, L))
+            sums_b = recv_cols[sl].reshape(b.nb, b.deg, cols).sum(axis=1)
+            if b.members is None:
+                halo = jnp.where(hw[:, :, None], hp, halo)
+                recv_sums = recv_sums + sums_b
+            else:
+                old = halo[jnp.clip(b.members, 0, spec.n_dst - 1)]
+                halo = halo.at[b.members].set(
+                    jnp.where(hw[:, :, None], hp, old), mode="drop")
+                recv_sums = recv_sums.at[b.members].add(sums_b, mode="drop")
+        return halo, recv_sums
+
+    def window_dense(self, carry, t, active, *, spec: DenseSpec):
+        """Dense-layout drain phase: per degree bucket, one fused
+        ``duct_window`` pass applies the previous window's staged sends,
+        drains at this window's clocks, and merges halos (DESIGN.md
+        §10/§13).  Dead padding rows never get staged into, so their empty
+        rings drain as no-ops without any extra masking here.  On the
+        identity bucket (every degree-regular topology) this is zero
+        gathers/scatters.  Returns ``(carry updates, drained_r)``."""
+        C = self.cfg.buffer_capacity
+        L = carry["halo"].shape[-1]
+        R = spec.n_rows
+        halo = carry["halo"]
+        new = {key: carry[key] for key in
+               ("q_avail", "q_touch", "q_pay", "q_head", "q_size",
+                "ptouch")}
+        drained_r = jnp.zeros(spec.n_dst, jnp.int32)
+        laden_r = jnp.zeros(spec.n_dst, jnp.int32)
+        touch_r = jnp.zeros(spec.n_dst, jnp.int32)
+        for b in spec.buckets:
+            sl = slice(b.start, b.start + b.nb * b.deg)
+            shp = (b.nb, b.deg)
+
+            def slab(key, *tail):
+                return carry[key][sl].reshape(shp + tail)
+
+            t_b = t if b.members is None else t[
+                jnp.clip(b.members, 0, spec.n_dst - 1)]
+            act_b = active if b.members is None else (
+                active[jnp.clip(b.members, 0, spec.n_dst - 1)] &
+                (b.members < spec.n_dst))
+            w = duct_window(
+                slab("q_avail", C), slab("q_touch", C), slab("q_pay", C, L),
+                slab("q_head"), slab("q_size"),
+                slab("stage_pos"), slab("stage_acc"),
+                slab("stage_avail"), slab("stage_touch"),
+                slab("stage_pay", L), t_b, act_b, max_pops=self.max_pops)
+            delivered = w.drained > 0
+            new_touch = w.recv_touch + 1
+            pt_b = slab("ptouch")
+            dtouch = jnp.where(delivered, new_touch - pt_b, 0)
+            pt_b = jnp.where(delivered, new_touch, pt_b)
+            dr_b = w.drained.sum(axis=1)
+            laden_b = delivered.astype(jnp.int32).sum(axis=1)
+            tch_b = dtouch.sum(axis=1)
+            if b.members is None:
+                halo = jnp.where(w.halo_win[:, :, None], w.halo_pay, halo)
+                drained_r = drained_r + dr_b
+                laden_r = laden_r + laden_b
+                touch_r = touch_r + tch_b
+            else:
+                old = halo[jnp.clip(b.members, 0, spec.n_dst - 1)]
+                halo = halo.at[b.members].set(
+                    jnp.where(w.halo_win[:, :, None], w.halo_pay, old),
+                    mode="drop")
+                drained_r = drained_r.at[b.members].add(dr_b, mode="drop")
+                laden_r = laden_r.at[b.members].add(laden_b, mode="drop")
+                touch_r = touch_r.at[b.members].add(tch_b, mode="drop")
+
+            def put(cur, val):
+                flat = val.reshape((sl.stop - sl.start,) + val.shape[2:])
+                if sl.start == 0 and sl.stop == R:
+                    return flat
+                return cur.at[sl].set(flat)
+
+            new["q_avail"] = put(new["q_avail"], w.q_avail)
+            new["q_touch"] = put(new["q_touch"], w.q_touch)
+            new["q_pay"] = put(new["q_pay"], w.q_pay)
+            new["q_head"] = put(new["q_head"], w.head)
+            new["q_size"] = put(new["q_size"], w.size)
+            new["ptouch"] = put(new["ptouch"], pt_b)
+        new.update(
+            halo=halo,
+            c_msgs=carry["c_msgs"] + drained_r,
+            c_laden=carry["c_laden"] + laden_r,
+            c_touch=carry["c_touch"] + touch_r)
+        return new, drained_r
+
+    def window_dense_fused(self, carry, t, active, *, spec: DenseSpec,
+                           dst_row):
+        """One window of the W-fused superstep scheduler (DESIGN.md §13).
+
+        The base rings are FROZEN for the whole superstep: this window's
+        accepted push appends to the compact ``(R, W)`` pushbuf instead of
+        writing the ring, and the drain walks the base FIFO prefix with an
+        ``O(max_pops)`` strided gather, then — only once every remaining
+        base message is popped (FIFO: everything in the base ring is older
+        than any push of this superstep) — the pushbuf prefix.  The pop
+        sequence, accept decisions, and counters are therefore *bitwise
+        identical* to running ``window_dense`` every window; only the
+        ``O(R*C)`` ring sweep is deferred to one ``duct_commit`` per
+        superstep.  Returns ``(carry updates, drained_r)``."""
+        C = self.cfg.buffer_capacity
+        R = spec.n_rows
+        P = self.max_pops
+        W = carry["pb_avail"].shape[-1]
+        # --- append the previous window's staged send to the pushbuf ------
+        # masked dense writes over the narrow (R, W) buffers: XLA:CPU
+        # lowers row scatters to serial loops, and this append runs every
+        # window — the where-form vectorizes and is the difference between
+        # the fused path winning and losing to the per-window O(R*C) sweep
+        wcol_a = jnp.arange(W, dtype=jnp.int32)[None, :]
+        at = carry["stage_acc"][:, None] & (wcol_a == carry["pb_cnt"][:, None])
+        pb_avail = jnp.where(at, carry["stage_avail"][:, None],
+                             carry["pb_avail"])
+        pb_touch = jnp.where(at, carry["stage_touch"][:, None],
+                             carry["pb_touch"])
+        pb_pay = jnp.where(at[:, :, None], carry["stage_pay"][:, None, :],
+                           carry["pb_pay"])
+        pb_cnt = carry["pb_cnt"] + carry["stage_acc"]
+        # --- drain: base-prefix walk, head-blocking, bounded --------------
+        # dense formulation over the (R, C) ring (no take_along_axis: XLA
+        # CPU lowers gathers to row loops): FIFO offsets from the FROZEN
+        # superstep head are precomputed once per superstep
+        # (``base_off``), so the pop count is one compare + min — the
+        # offset of the first blocked not-yet-popped slot, clamped by the
+        # remaining base prefix and the pop budget
+        t_r = t[dst_row]
+        act_r = active[dst_row]
+        base_rem = carry["size0"] - carry["dr_base"]
+        off = carry["base_off"]
+        odt = off.dtype
+        blocked = ((off >= carry["dr_base"].astype(odt)[:, None]) &
+                   (off < carry["size0"].astype(odt)[:, None]) &
+                   (carry["q_avail"] > t_r[:, None]))
+        first_block = jnp.where(blocked, off,
+                                jnp.asarray(C, odt)).min(axis=1)
+        n1 = jnp.minimum(first_block.astype(jnp.int32) - carry["dr_base"],
+                         jnp.minimum(base_rem, P))
+        n1 = jnp.where(act_r, n1, 0)
+        # --- then the pushbuf prefix, within the same max_pops budget -----
+        wcol = jnp.arange(W, dtype=jnp.int32)[None, :]
+        pb_ok = ((wcol < pb_cnt[:, None]) & (pb_avail <= t_r[:, None])) | (
+            wcol < carry["pb_pop"][:, None])
+        run = (jnp.cumprod(pb_ok.astype(jnp.int32), axis=1).sum(axis=1) -
+               carry["pb_pop"])
+        n2 = jnp.clip(run, 0, P - n1)
+        n2 = jnp.where(act_r & (n1 == base_rem), n2, 0).astype(jnp.int32)
+        drained = (n1 + n2).astype(jnp.int32)
+        delivered = drained > 0
+        # --- freshest popped message (touch stamp + payload) --------------
+        # ONE element per row: XLA:CPU's serial gather lowering is O(R)
+        # here — unlike the O(R*C) full-ring gathers banished elsewhere —
+        # and avoids pulling two more full (R, C[, L]) passes through the
+        # cache for a one-hot reduction
+        L = carry["q_pay"].shape[-1]
+        last_b = ((carry["q_head"] + carry["dr_base"] + n1 - 1) % C)[:, None]
+        tch_b = jnp.take_along_axis(carry["q_touch"], last_b, axis=1)[:, 0]
+        pay_b = jnp.take_along_axis(
+            carry["q_pay"], jnp.broadcast_to(last_b[:, :, None], (R, 1, L)),
+            axis=1)[:, 0]
+        last_p = jnp.clip(carry["pb_pop"] + n2 - 1, 0, W - 1)[:, None]
+        tch_p = jnp.take_along_axis(pb_touch, last_p, axis=1)[:, 0]
+        pay_p = jnp.take_along_axis(
+            pb_pay, jnp.broadcast_to(last_p[:, :, None], (R, 1, L)),
+            axis=1)[:, 0]
+        has2 = n2 > 0
+        recv_touch = jnp.where(has2, tch_p, jnp.where(n1 > 0, tch_b, 0))
+        fresh_pay = jnp.where(has2[:, None], pay_p, pay_b)
+        # --- halo merge + receiver counters (shared bucket machinery) -----
+        new_touch = recv_touch + 1
         dtouch = jnp.where(delivered, new_touch - carry["ptouch"], 0)
         ptouch = jnp.where(delivered, new_touch, carry["ptouch"])
-        drained_r = w.drained.sum(axis=1)
+        recv_cols = jnp.stack([drained, delivered.astype(jnp.int32),
+                               dtouch], axis=1)
+        halo, recv_sums = self._merge_buckets(
+            spec, carry["halo"], delivered, fresh_pay, recv_cols)
         return dict(
             halo=halo, ptouch=ptouch,
-            c_msgs=carry["c_msgs"] + drained_r,
-            c_laden=carry["c_laden"] +
-            delivered.astype(jnp.int32).sum(axis=1),
-            c_touch=carry["c_touch"] + dtouch.sum(axis=1),
-            q_avail=w.q_avail, q_touch=w.q_touch, q_pay=w.q_pay,
-            q_head=w.head, q_size=w.size), drained_r
+            c_msgs=carry["c_msgs"] + recv_sums[:, 0],
+            c_laden=carry["c_laden"] + recv_sums[:, 1],
+            c_touch=carry["c_touch"] + recv_sums[:, 2],
+            q_size=carry["q_size"] - drained,
+            dr_base=carry["dr_base"] + n1.astype(jnp.int32),
+            pb_pop=carry["pb_pop"] + n2,
+            pb_cnt=pb_cnt, pb_avail=pb_avail, pb_touch=pb_touch,
+            pb_pay=pb_pay), recv_sums[:, 0]
+
+    def commit_superstep(self, carry):
+        """Superstep epilogue for the fused scheduler: ONE ``duct_commit``
+        launch folds the whole superstep's accepted pushes into the base
+        rings (push j of ring r lands at slot ``(head0 + size0 + j) % C``,
+        independent of how pops interleaved — already-popped pushbuf
+        entries land behind the advanced head, on provably dead slots) and
+        re-bases the head/size counters for the next superstep."""
+        C = self.cfg.buffer_capacity
+        qa, qt, qp = duct_commit(
+            carry["q_avail"], carry["q_touch"], carry["q_pay"],
+            carry["q_head"], carry["size0"], carry["pb_cnt"],
+            carry["pb_avail"], carry["pb_touch"], carry["pb_pay"])
+        z = jnp.zeros_like(carry["pb_cnt"])
+        # new base size counts only committed messages: the last window's
+        # staged accept (already in q_size) rides into the NEXT superstep's
+        # pushbuf at its first window, not into the base ring
+        size0 = (carry["size0"] - carry["dr_base"] +
+                 carry["pb_cnt"] - carry["pb_pop"])
+        head = (carry["q_head"] + carry["dr_base"] + carry["pb_pop"]) % C
+        col = jnp.arange(C, dtype=jnp.int32)[None, :]
+        return dict(
+            q_avail=qa, q_touch=qt, q_pay=qp, q_head=head,
+            size0=size0, dr_base=z, pb_cnt=z, pb_pop=z,
+            base_off=((col - head[:, None]) % C).astype(self._off_dtype()))
 
     # ------------------------------------------------------------------
     # Phase 2: compute
@@ -410,21 +674,35 @@ class WindowCore:
     # Phase 3': stage (dense layout)
     # ------------------------------------------------------------------
     def stage_dense(self, carry, u, t, active, edges_out, lat,
-                    *, src, rev, out_slot, degree):
+                    *, src, rev, out_slot, live, deg, spec: DenseSpec):
         """Stage this window's sends on the dense layout: decide
         drop-iff-full NOW against the post-drain rings (exactly what the
         edge-major send attempt sees, so counters land in this window)
         and defer only the ring writes to the next fused pass.  Sender
-        counters come through the out-edge table as gathers — row
-        ``(p, j)``'s sender is ``p`` by construction, so no scatters."""
-        s_avail = t[src] + lat
-        s_act = active[src]
-        s_touch = u["ptouch"].reshape(-1)[rev]
-        s_pay = edges_out[src, out_slot]
+        counters come through the out-edge table as gathers — flat row
+        ``r``'s sender is its receiver by construction, so no scatters on
+        the identity bucket.  ``live`` masks the dead padding rows: they
+        never accept a push, so their rings stay empty forever."""
+        n = t.shape[0]
+        src_c = jnp.clip(src, 0, n - 1)     # sentinel n on dead rows
+        s_avail = t[src_c] + lat
+        s_act = live & active[src_c]
+        s_touch = u["ptouch"][rev]
+        s_pay = edges_out[src_c, out_slot]
         s_pos, s_acc = dense_stage(u["q_head"], u["q_size"], s_act,
                                    capacity=self.cfg.buffer_capacity)
-        ok_r = s_acc.reshape(-1)[rev].astype(jnp.int32).sum(axis=1)
-        att_r = jnp.where(active, degree, 0)
+        # acceptance of receiver p's own sends lives at its out-edge rows
+        # rev[rows of p]; dead rows rev to themselves and contribute 0
+        acc_out = s_acc[rev].astype(jnp.int32)
+        ok_r = jnp.zeros(spec.n_dst, jnp.int32)
+        for b in spec.buckets:
+            sl = slice(b.start, b.start + b.nb * b.deg)
+            ok_b = acc_out[sl].reshape(b.nb, b.deg).sum(axis=1)
+            if b.members is None:
+                ok_r = ok_r + ok_b
+            else:
+                ok_r = ok_r.at[b.members].add(ok_b, mode="drop")
+        att_r = jnp.where(active, deg, 0)
         return dict(q_size=u["q_size"] + s_acc,
                     c_att=carry["c_att"] + att_r,
                     c_ok=carry["c_ok"] + ok_r,
@@ -452,9 +730,20 @@ class WindowCore:
         t, steps = u["t"], u["steps"]
         n = t.shape[0]
         done, waiting = u["done"], u["waiting"]
-        pending = (drained_r.astype(jnp.float32) * np.float32(
-            cfg.per_message_cost) +
-            deg.astype(jnp.float32) * np.float32(cfg.per_pull_cost))
+        # rolling barriers meter their quantum on the WORK clock: compute
+        # plus the (degree-fixed) halo pull cost, with per-message handling
+        # absorbed into barrier slack.  That makes the number of updates a
+        # quantum holds — and hence every release and the horizon straddle —
+        # independent of drain timing, so the superstep scheduler's boundary
+        # staging (which perturbs drop/drain patterns) cannot drift the
+        # update schedule: rolling-barrier runs are exactly W-invariant.
+        # The free-running modes keep the drain-coupled clock.
+        pull_cost = deg.astype(jnp.float32) * np.float32(cfg.per_pull_cost)
+        if mode == AsyncMode.ROLLING_BARRIER:
+            pending = pull_cost
+        else:
+            pending = (drained_r.astype(jnp.float32) * np.float32(
+                cfg.per_message_cost) + pull_cost)
         snap_idx = u["snap_idx"]
         thr = (np.float32(cfg.snapshot_warmup) +
                snap_idx.astype(jnp.float32) * np.float32(

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.kernels.duct_exchange.ops import duct_exchange_jnp, duct_window_jnp
 from repro.kernels.duct_exchange.ref import duct_exchange_ref, duct_window_ref
 from repro.runtime.simulator import SimConfig
-from repro.runtime.window_core import WindowCore
+from repro.runtime.window_core import BucketSlab, DenseSpec, WindowCore
 
 try:
     from hypothesis import given, settings, strategies as hyp_st
@@ -416,13 +416,18 @@ def run_core_edge_sequence(seed: int, n: int, d: int, C: int,
 def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
                             max_pops: int, steps: int):
     """Drive ``WindowCore.window_dense`` / ``stage_dense`` through a random
-    op sequence on the dense receiver-major layout with self-loop out-edge
-    tables (row ``(p, j)`` is both process p's in-ring and its j-th
-    out-edge), checking the same mirror-queue invariants plus the staged
-    send-decision counters (att/ok/drop per process, every step)."""
+    op sequence on the flat bucketed dense layout (DESIGN.md §13) with
+    self-loop out-edge tables (flat row ``p*d + q`` is both process p's
+    in-ring q and its q-th out-edge), checking the same mirror-queue
+    invariants plus the staged send-decision counters (att/ok/drop per
+    process, every step) on the identity single-bucket spec."""
     rng = np.random.default_rng(seed)
     core = _make_core(n, C, max_pops)
-    carry = {k: v for k, v in core.dense_rings(n, d).items()}
+    R = n * d
+    spec = DenseSpec(n_dst=n, n_rows=R,
+                     buckets=(BucketSlab(start=0, nb=n, deg=d,
+                                         members=None),))
+    carry = {k: v for k, v in core.dense_rings(R).items()}
     carry.update(halo=jnp.zeros((n, 4, 1), jnp.int32),
                  c_msgs=jnp.zeros(n, jnp.int32),
                  c_laden=jnp.zeros(n, jnp.int32),
@@ -430,9 +435,11 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
                  c_att=jnp.zeros(n, jnp.int32),
                  c_ok=jnp.zeros(n, jnp.int32),
                  c_drop=jnp.zeros(n, jnp.int32))
-    src = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, d))
-    rev = np.arange(n * d, dtype=np.int32).reshape(n, d)
-    out_slot = np.zeros((n, d), np.int32)
+    src = (np.arange(R, dtype=np.int32) // d).astype(np.int32)
+    rev = np.arange(R, dtype=np.int32)
+    out_slot = np.zeros(R, np.int32)
+    live = np.ones(R, bool)
+    deg = np.full(n, d, np.int32)
     mirror = [[collections.deque() for _ in range(d)] for _ in range(n)]
     staged = None   # python twin of the carried stage_* buffers
     acc_tot = np.zeros((n, d), np.int64)
@@ -441,12 +448,15 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
     drain_tot = np.zeros((n, d), np.int64)
     now = np.zeros(n, np.float32)
 
+    def by_ring(x):
+        return np.asarray(x).reshape((n, d) + np.asarray(x).shape[1:])
+
     for _ in range(steps):
         now = (now + rng.uniform(0.5, 1.5, n)).astype(np.float32)
         ract = rng.random(n) < 0.8
         prev = {k: np.asarray(v) for k, v in carry.items()}
         upd, drained_r = core.window_dense(carry, jnp.asarray(now),
-                                           jnp.asarray(ract))
+                                           jnp.asarray(ract), spec=spec)
         u = dict(carry)
         u.update(upd)
         # last window's staged pushes enter the mirror first (accepted at
@@ -459,6 +469,8 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
                             (staged["avail"][p, q], staged["touch"][p, q],
                              staged["pay"][p, q]))
         halo = np.asarray(u["halo"])
+        ptouch2 = by_ring(u["ptouch"])
+        qsize2 = by_ring(u["q_size"])
         for p in range(n):
             fresh = {}
             drained = np.zeros(d, np.int64)
@@ -475,11 +487,9 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
                 for _ in range(expect):
                     last = mirror[p][q].popleft()
                 if expect:
-                    assert int(np.asarray(u["ptouch"])[p, q]) == \
-                        last[1] + 1, (p, q)
+                    assert int(ptouch2[p, q]) == last[1] + 1, (p, q)
                     fresh[q] = last[2]
-                assert int(np.asarray(u["q_size"])[p, q]) == \
-                    len(mirror[p][q]), (p, q)
+                assert int(qsize2[p, q]) == len(mirror[p][q]), (p, q)
             drain_tot[p] += drained
             assert int(np.asarray(drained_r)[p]) == drained.sum()
             assert (np.asarray(u["c_msgs"]) - prev["c_msgs"])[p] == \
@@ -497,16 +507,16 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
         pay = rng.integers(0, 99, (n, 1, 1)).astype(np.int32)
         st = core.stage_dense(
             u, u, jnp.asarray(now), jnp.asarray(sact),
-            jnp.asarray(pay), jnp.asarray(lat),
+            jnp.asarray(pay), jnp.asarray(lat.reshape(R)),
             src=jnp.asarray(src), rev=jnp.asarray(rev),
-            out_slot=jnp.asarray(out_slot), degree=d)
+            out_slot=jnp.asarray(out_slot), live=jnp.asarray(live),
+            deg=jnp.asarray(deg), spec=spec)
         u.update(st)
         sizes = np.array([[len(mirror[p][q]) for q in range(d)]
                           for p in range(n)])
         exp_acc = sact[:, None] & (sizes < C)
-        assert np.array_equal(np.asarray(u["stage_acc"]), exp_acc)
-        assert np.array_equal(np.asarray(u["q_size"]),
-                              sizes + exp_acc)
+        assert np.array_equal(by_ring(u["stage_acc"]), exp_acc)
+        assert np.array_equal(by_ring(u["q_size"]), sizes + exp_acc)
         att = np.where(sact, d, 0)
         assert np.array_equal(
             np.asarray(u["c_att"]) - prev["c_att"], att)
@@ -520,8 +530,8 @@ def run_core_dense_sequence(seed: int, n: int, d: int, C: int,
         drop_tot += sact[:, None] & ~exp_acc
         staged = dict(acc=exp_acc,
                       avail=now[:, None] + lat,
-                      touch=np.asarray(u["stage_touch"]),
-                      pay=np.asarray(u["stage_pay"])[:, :, 0])
+                      touch=by_ring(u["stage_touch"]),
+                      pay=by_ring(u["stage_pay"])[:, :, 0])
         # conservation: accepted == drained + queued + staged-not-applied
         assert np.all(acc_tot == drain_tot + sizes + exp_acc)
         assert np.all(att_tot == acc_tot + drop_tot)
@@ -688,3 +698,131 @@ if HAVE_HYPOTHESIS:
     def test_shadow_buffer_properties_hypothesis(seed, n, d, C, max_pops,
                                                  steps):
         run_shadow_sequence(seed, n, d, C, max_pops, steps)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed layout planner properties (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+from repro.kernels.duct_exchange import dense_stage  # noqa: E402
+from repro.runtime.topologies import (  # noqa: E402
+    Topology,
+    canonical_edges,
+    next_pow2,
+    plan_layout,
+)
+
+
+def random_irregular_topology(seed: int, n: int) -> Topology:
+    """Random connected symmetric graph: a ring spine plus random chords,
+    so in-degrees vary and the planner must genuinely bucket."""
+    rng = np.random.default_rng(seed)
+    nbrs = [set() for _ in range(n)]
+    for i in range(n):
+        nbrs[i].add((i + 1) % n)
+        nbrs[(i + 1) % n].add(i)
+    for _ in range(int(rng.integers(1, 2 * n))):
+        a, b = (int(x) for x in rng.integers(0, n, 2))
+        if a != b:
+            nbrs[a].add(b)
+            nbrs[b].add(a)
+    return Topology("randgraph", n,
+                    tuple(tuple(sorted(s)) for s in nbrs),
+                    tuple(0 for _ in range(n))).validate()
+
+
+def check_bucketed_plan(topo: Topology):
+    """Structural invariants of the degree-bucketed dense plan:
+
+      bucket assignment   bdeg[p] = min(next_pow2(deg_p), dmax), exact
+      row blocks          live prefix of deg_p rows in sorted-source
+                          (= canonical-edge-id) order, dead padding after
+      sentinels           dead rows carry src == n, eid == E
+      rev involution      rev[rev] = id on ALL rows; dead rows are fixed
+                          points; live rows map edge (s, p) to (p, s)
+      dead rows           never accept a stage, even with room and every
+                          sender active — the live mask gates the push
+    """
+    plan = plan_layout(topo, "dense")
+    n = topo.n
+    degs = [topo.degree(p) for p in range(n)]
+    dmax = max(degs)
+    _, _, eindex = canonical_edges(topo)
+    E = len(eindex)
+    assert plan.kind == "dense" and plan.degree == dmax
+    np.testing.assert_array_equal(
+        plan.bdeg, [min(next_pow2(k), dmax) for k in degs])
+    assert plan.n_rows == int(plan.bdeg.sum())
+    rows = np.arange(plan.n_rows)
+    live, dead = plan.live, ~plan.live
+    np.testing.assert_array_equal(plan.rev[plan.rev], rows)
+    np.testing.assert_array_equal(plan.rev[dead], rows[dead])
+    np.testing.assert_array_equal(plan.src[plan.rev][live],
+                                  plan.dst[live])
+    np.testing.assert_array_equal(plan.dst[plan.rev][live],
+                                  plan.src[live])
+    for p in range(n):
+        sl = slice(int(plan.row_start[p]),
+                   int(plan.row_start[p]) + int(plan.bdeg[p]))
+        assert live[sl].sum() == degs[p] and live[sl][:degs[p]].all()
+        assert (plan.dst[sl] == p).all()
+        assert list(plan.src[sl][:degs[p]]) == sorted(topo.neighbors[p])
+        assert (plan.src[sl][degs[p]:] == n).all()
+        assert (plan.eid[sl][degs[p]:] == E).all()
+        assert list(plan.eid[sl][:degs[p]]) == [
+            eindex[(s, p)] for s in sorted(topo.neighbors[p])]
+    # dead rows never receive: the stage accept mask is gated by `live`
+    # (window_core.WindowCore.stage_dense), so with empty rings and every
+    # sender active only live rows accept
+    head = jnp.zeros(plan.n_rows, jnp.int32)
+    size = jnp.zeros(plan.n_rows, jnp.int32)
+    _, acc = dense_stage(head, size, jnp.asarray(plan.live), capacity=2)
+    acc = np.asarray(acc)
+    assert not acc[dead].any() and acc[live].all()
+
+
+PLANNER_CASES = [(0, 6), (1, 9), (2, 12), (3, 16), (4, 24), (5, 7)]
+
+
+@pytest.mark.parametrize("seed,n", PLANNER_CASES)
+def test_bucketed_planner_properties_seeded(seed, n):
+    check_bucketed_plan(random_irregular_topology(seed, n))
+
+
+def test_bucketed_planner_properties_builtin_topologies():
+    from repro.runtime.topologies import make_topology
+
+    for name in ("ring", "torus", "smallworld", "cliques"):
+        check_bucketed_plan(make_topology(name, 16))
+
+
+@pytest.mark.parametrize("seed,n", [(0, 8), (3, 12)])
+def test_bucketed_dense_matches_edge_on_random_graphs(seed, n):
+    """End-to-end closure of the padding argument: on a random irregular
+    graph the bucketed dense engine reproduces the edge-major engine's
+    full QoS signature bitwise — dead rows contribute nothing, ever."""
+    from engine_cases import jittered_cfg
+    from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+    from repro.core.qos import qos_signature
+    from repro.runtime.engine import make_engine
+
+    topo = random_irregular_topology(seed, n)
+    cfg = jittered_cfg(0.02, seed=seed)
+
+    def app():
+        return GraphColorApp(
+            GraphColorConfig(n_processes=n, nodes_per_process=1),
+            topology=topo)
+
+    res_e = make_engine("jax", app(), cfg, layout="edge").run()
+    res_d = make_engine("jax", app(), cfg, layout="dense").run()
+    assert qos_signature(res_d) == qos_signature(res_e)
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        seed=hyp_st.integers(0, 2**31 - 1),
+        n=hyp_st.integers(4, 24),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_bucketed_planner_properties_hypothesis(seed, n):
+        check_bucketed_plan(random_irregular_topology(seed, n))

@@ -99,11 +99,6 @@ def _exact_variants():
     return cells
 
 
-def _dense_ok(topology: str) -> bool:
-    from repro.runtime.topologies import make_topology, regular_degree
-    return regular_degree(make_topology(topology, 16)) is not None
-
-
 def test_registry_covers_reference_and_vectorized_engines():
     names = [s.name for s in engine_specs()]
     assert "event" in names
@@ -121,8 +116,9 @@ def test_registry_covers_reference_and_vectorized_engines():
 @pytest.mark.parametrize("scenario", EXACT_SCENARIOS,
                          ids=[s.name for s in EXACT_SCENARIOS])
 def test_bitwise_conformance_vs_event_oracle(scenario, engine, layout):
-    if layout == "dense" and not _dense_ok(scenario.topology):
-        pytest.skip(f"{scenario.topology} is not degree-regular")
+    # the bucketed planner (DESIGN.md §13) gives every built-in topology a
+    # dense plan, so the dense column runs the full scenario matrix —
+    # including the irregular smallworld/cliques cells — with no skips.
     # quality is excluded from cross-backend comparison by design: the
     # event engine's app fragments draw decisions from a sequential numpy
     # RNG while the batched step uses counter-based hash draws, so color
@@ -214,7 +210,8 @@ def _signature_match(label, res_a, res_b, engine="jax", variant=""):
 
 
 @pytest.mark.parametrize("mode", VARIANT_MODES, ids=lambda m: m.name.lower())
-@pytest.mark.parametrize("topology", ["ring", "torus", "cliques"])
+@pytest.mark.parametrize("topology", ["ring", "torus", "cliques",
+                                      "smallworld"])
 def test_dense_matches_edge_bitwise(topology, mode):
     seed = case_seed(topology)
     cfg = jittered_cfg(0.02, seed=seed, mode=mode)
@@ -417,14 +414,16 @@ def test_event_engine_rejects_vectorized_strategies():
 
 
 def test_scheduler_combinations_validate():
-    # superstep needs a batch size AND a populated mesh
+    # superstep needs a batch size; unsharded it is the W-fused dense
+    # megakernel (DESIGN.md §13), so it composes with every layout except
+    # an explicit edge-major request
     with pytest.raises(ValueError, match="superstep_windows > 1"):
         make_engine("jax", gc_app(8), _cfg01(), scheduler="superstep")
-    with pytest.raises(ValueError, match="shards"):
+    with pytest.raises(ValueError, match="dense"):
         make_engine("jax", gc_app(8), _cfg01(), scheduler="superstep",
-                    superstep_windows=8)
-    with pytest.raises(ValueError, match="shards"):
-        make_engine("jax", gc_app(8), _cfg01(), superstep_windows=8)
+                    superstep_windows=8, layout="edge")
+    eng = make_engine("jax", gc_app(8), _cfg01(), superstep_windows=8)
+    assert eng.scheduler == "superstep" and eng.layout == "dense"
     # window scheduler contradicts a batched-exchange request
     with pytest.raises(ValueError, match="scheduler='superstep'"):
         make_engine("jax", gc_app(16), _cfg01(), scheduler="window",
@@ -448,10 +447,15 @@ def test_scheduler_combinations_validate():
                          scheduler="pipelined")
 
 
-def test_dense_forced_on_irregular_topology_is_actionable():
-    with pytest.raises(ValueError, match="degree-regular"):
-        make_engine("jax", gc_app(16, "smallworld"), _cfg01(),
-                    layout="dense")
+def test_dense_on_irregular_topology_buckets_instead_of_raising():
+    # irregular topologies used to be rejected with a "degree-regular"
+    # error; the bucketed planner now pads them into power-of-two degree
+    # buckets, so forcing dense simply works (and auto resolves to it)
+    eng = make_engine("jax", gc_app(16, "smallworld"), _cfg01(),
+                      layout="dense")
+    assert eng.layout == "dense"
+    auto = make_engine("jax", gc_app(16, "smallworld"), _cfg01())
+    assert auto.layout == "dense"
 
 
 def test_shard_partition_errors_are_actionable():

@@ -176,17 +176,20 @@ def test_superstep_parity_and_amortization():
         rw4 = ShardedJaxEngine(gc_app(16, "ring"), cfg, shards=8,
                                superstep_windows=4).run()
         assert r1.updates == rw4.updates, "barrier-every-step W-invariance"
-        # rolling barriers jump released clocks forward, which can unmask
-        # the boundary staging delay (a message delivered at the superstep
-        # boundary instead of its arrival window) — a documented semantic
-        # approximation worth at most a couple of updates per process
+        # rolling barriers meter their quantum on the WORK clock (compute
+        # + degree-fixed pull cost; per-message handling rides in barrier
+        # slack — window_core.close_window), so the update schedule is a
+        # function of (seed, release times) alone: boundary staging may
+        # perturb drop patterns but can never drift the update counts.
+        # Rolling runs are therefore EXACTLY W-invariant, horizon
+        # straddles included
         cfg = cfgf("ring", mode=AsyncMode.ROLLING_BARRIER,
                    rolling_quantum=0.004)
         r1 = JaxEngine(gc_app(16, "ring"), cfg).run()
         rw4 = ShardedJaxEngine(gc_app(16, "ring"), cfg, shards=8,
                                superstep_windows=4).run()
-        assert all(abs(b - a) <= 2
-                   for a, b in zip(r1.updates, rw4.updates))
+        assert r1.updates == rw4.updates, "rolling-barrier W-invariance"
+        assert r1.sent == rw4.sent, "rolling-barrier W-invariance (sent)"
         print("SUPERSTEP-OK")
     """))
     assert "SUPERSTEP-OK" in out

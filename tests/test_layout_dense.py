@@ -1,15 +1,14 @@
-"""Dense duct-layout tests: the planner and the fused megakernel.
+"""Dense duct-layout tests: the bucketed planner and the fused megakernel.
 
 The dense receiver-major layout is a pure memory-layout change; its
 bitwise parity with the edge-major path — across topologies, modes, fault
 injection, and block payloads — is asserted by the registry-driven suite
 (``tests/test_engine_conformance.py``, family 3).  This file keeps what is
-specific to the layout machinery itself: the planner's auto/fallback
-rules, interpret-mode Pallas parity for the ``duct_window`` megakernel,
-and the dense path's replicate plumbing.
+specific to the layout machinery itself: the degree-bucketed planner's
+tables, interpret-mode Pallas parity for the ``duct_window`` /
+``duct_commit`` megakernel family, the W-fused superstep scheduler's
+bitwise parity on every topology, and the dense path's replicate plumbing.
 """
-
-import logging
 
 import numpy as np
 import pytest
@@ -17,18 +16,30 @@ import pytest
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp  # noqa: E402
 
-from engine_cases import gc_app, jittered_cfg  # noqa: E402
+from engine_cases import case_seed, gc_app, jittered_cfg  # noqa: E402
+from repro.core.qos import qos_signature  # noqa: E402
 from repro.kernels.duct_exchange import (  # noqa: E402
+    duct_commit,
+    duct_commit_jnp,
+    duct_commit_ref,
     duct_window,
     duct_window_jnp,
     duct_window_ref,
 )
 from repro.runtime.engine import make_engine  # noqa: E402
 from repro.runtime.engine_jax import JaxEngine  # noqa: E402
-from repro.runtime.topologies import make_topology, plan_layout, regular_degree  # noqa: E402
+from repro.runtime.topologies import (  # noqa: E402
+    canonical_edges,
+    make_topology,
+    next_pow2,
+    plan_layout,
+    regular_degree,
+)
 
 _app = gc_app
 _cfg = jittered_cfg
+
+TOPOLOGIES = ("ring", "torus", "smallworld", "cliques")
 
 
 # ---------------------------------------------------------------------------
@@ -41,31 +52,76 @@ def test_plan_dense_for_regular_topologies():
         assert plan.kind == "dense"
         assert plan.degree == want_d
         assert regular_degree(topo) == want_d
+        # degree-regular topologies collapse to ONE exact-d bucket: no
+        # padding, every flat row live, receiver p's block at p*d
+        assert len(plan.buckets) == 1 and plan.buckets[0].deg == want_d
+        assert plan.n_rows == n * want_d
+        assert plan.live.all()
+        np.testing.assert_array_equal(plan.row_start,
+                                      np.arange(n) * want_d)
+        np.testing.assert_array_equal(plan.bdeg, np.full(n, want_d))
         # row (p, j) holds in-edge j of receiver p in sorted-source order
         for p in range(n):
-            assert list(plan.src[p]) == sorted(topo.neighbors[p])
-        # rev is an involution: the reverse of the reverse is the row itself
-        flat_rev = plan.rev.reshape(-1)
-        np.testing.assert_array_equal(flat_rev[flat_rev], np.arange(n * want_d))
+            rows = slice(p * want_d, (p + 1) * want_d)
+            assert list(plan.src[rows]) == sorted(topo.neighbors[p])
+            assert (plan.dst[rows] == p).all()
+        # rev is an involution: the reverse of the reverse is the row
+        np.testing.assert_array_equal(plan.rev[plan.rev],
+                                      np.arange(n * want_d))
 
 
-def test_plan_auto_falls_back_with_actionable_log(caplog):
-    # WARNING level: visible on stderr via logging's last-resort handler
-    # even when the caller never configures logging
-    with caplog.at_level(logging.WARNING, logger="repro.runtime.topologies"):
-        plan = plan_layout(make_topology("smallworld", 16), "auto")
-    assert plan.kind == "edge"
-    assert "irregular" in caplog.text and "edge-major" in caplog.text
-    caplog.clear()
-    with caplog.at_level(logging.WARNING, logger="repro.runtime.topologies"):
-        plan = plan_layout(make_topology("cliques", 16), "auto")
-    assert plan.kind == "edge"
-    assert "halo" in caplog.text and "layout='dense'" in caplog.text
+@pytest.mark.parametrize("name", ["smallworld", "cliques"])
+def test_plan_buckets_irregular_topologies(name):
+    topo = make_topology(name, 16)
+    n = topo.n
+    degs = [len(nbs) for nbs in topo.neighbors]
+    dmax = max(degs)
+    plan = plan_layout(topo, "auto")
+    assert plan.kind == "dense"
+    assert plan.degree == dmax
+    # bucket degree = next power of two, clamped to the max in-degree
+    np.testing.assert_array_equal(
+        plan.bdeg, [min(next_pow2(k), dmax) for k in degs])
+    assert plan.n_rows == int(plan.bdeg.sum())
+    # each receiver's block: live prefix of its true in-degree in
+    # sorted-source (= canonical-edge-id) order, dead padding after
+    _, _, eindex = canonical_edges(topo)
+    E = len(eindex)
+    for p in range(n):
+        rows = slice(plan.row_start[p], plan.row_start[p] + plan.bdeg[p])
+        live = plan.live[rows]
+        assert live.sum() == degs[p] and live[:degs[p]].all()
+        assert (plan.dst[rows] == p).all()
+        srcs = plan.src[rows]
+        assert list(srcs[:degs[p]]) == sorted(topo.neighbors[p])
+        # dead rows carry sentinels: src == n, eid == E
+        assert (srcs[degs[p]:] == n).all()
+        assert (plan.eid[rows][degs[p]:] == E).all()
+        eids = plan.eid[rows][:degs[p]]
+        assert list(eids) == [eindex[(s, p)] for s in sorted(
+            topo.neighbors[p])]
+    # rev is a full involution; dead rows map to themselves
+    np.testing.assert_array_equal(plan.rev[plan.rev],
+                                  np.arange(plan.n_rows))
+    dead = ~plan.live
+    np.testing.assert_array_equal(plan.rev[dead],
+                                  np.arange(plan.n_rows)[dead])
+    # bucket slabs tile the flat row space with ascending members
+    covered = 0
+    for b in plan.buckets:
+        assert b.start == covered
+        assert (np.diff(b.members) > 0).all() or len(b.members) == 1
+        covered += b.deg * len(b.members)
+    assert covered == plan.n_rows
 
 
-def test_plan_forced_dense_raises_on_irregular():
-    with pytest.raises(ValueError, match="degree-regular"):
-        plan_layout(make_topology("smallworld", 16), "dense")
+def test_plan_forced_layouts_and_unknown_layout():
+    # forcing dense on an irregular topology now buckets instead of
+    # raising; forcing edge still yields the fully general layout
+    assert plan_layout(make_topology("smallworld", 16), "dense").kind \
+        == "dense"
+    assert plan_layout(make_topology("smallworld", 16), "edge").kind \
+        == "edge"
     with pytest.raises(ValueError, match="unknown layout"):
         plan_layout(make_topology("ring", 8), "banana")
 
@@ -131,6 +187,56 @@ def test_duct_window_degree_one_and_empty_rings():
         np.testing.assert_array_equal(np.asarray(b), np.asarray(a), err_msg=name)
 
 
+def _random_commit_state(rng, R=24, C=6, L=2, W=5):
+    qa = (rng.random((R, C)) * 2).astype(np.float32)
+    qt = rng.integers(0, 50, (R, C)).astype(np.int32)
+    qp = rng.integers(0, 99, (R, C, L)).astype(np.int32)
+    head = rng.integers(0, C, R).astype(np.int32)
+    size0 = rng.integers(0, C, R).astype(np.int32)
+    # the engine guarantees pb_cnt pushes fit behind the frozen tail
+    cnt = np.minimum(rng.integers(0, W + 1, R), C - size0).astype(np.int32)
+    pa = (rng.random((R, W)) * 2).astype(np.float32)
+    pt = rng.integers(0, 50, (R, W)).astype(np.int32)
+    pp = rng.integers(0, 99, (R, W, L)).astype(np.int32)
+    return (qa, qt, qp, head, size0, cnt, pa, pt, pp)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_duct_commit_matches_ref(impl):
+    """The superstep commit is slot-exact across all three backends:
+    push j of ring r lands at (head + size0 + j) % C, untouched slots
+    keep their frozen base values bit-for-bit."""
+    rng = np.random.default_rng(17)
+    args = _random_commit_state(rng)
+    ref = duct_commit_ref(*args)
+    if impl == "jnp":
+        out = duct_commit_jnp(*map(jnp.asarray, args))
+    else:
+        out = duct_commit(*map(jnp.asarray, args), use_pallas=True,
+                          interpret=True)
+    for name, a, b in zip(ref._fields, ref, out):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"{impl}: field {name}")
+
+
+# ---------------------------------------------------------------------------
+# W-fused superstep scheduler: bitwise vs per-window dense on EVERY topology
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+def test_superstep_fusion_bitwise_per_topology(topology):
+    """Fusing W windows into one launch (frozen rings + compact pushbuf +
+    one duct_commit) is a pure execution-strategy change: the full QoS
+    signature must match the per-window dense engine bit-for-bit — on the
+    padded bucketed rows of the irregular topologies too."""
+    cfg = _cfg(0.02, seed=case_seed(topology))
+    base = make_engine("jax", _app(16, topology), cfg).run()
+    for w in (2, 4):
+        fused = make_engine("jax", _app(16, topology), cfg,
+                            superstep_windows=w).run()
+        assert qos_signature(fused) == qos_signature(base), \
+            f"{topology}: W={w} fused diverged from per-window dense"
+
+
 # ---------------------------------------------------------------------------
 # Replicate plumbing and auto-layout resolution on the dense path
 # ---------------------------------------------------------------------------
@@ -147,8 +253,7 @@ def test_dense_engine_replicates_and_registry():
     assert reps[0].updates != reps[1].updates
 
 
-def test_auto_layout_resolves_per_topology():
+def test_auto_layout_resolves_dense_everywhere():
     cfg = _cfg(0.01)
-    assert JaxEngine(_app(16, "torus"), cfg).layout == "dense"
-    assert JaxEngine(_app(16, "smallworld"), cfg).layout == "edge"
-    assert JaxEngine(_app(16, "cliques"), cfg).layout == "edge"
+    for topology in TOPOLOGIES:
+        assert JaxEngine(_app(16, topology), cfg).layout == "dense", topology
