@@ -1,0 +1,188 @@
+"""A/B service bench: best-effort vs barrier modes under identical load.
+
+The live-service acceptance experiment (runtime/service.py): every arm
+replays the SAME open-loop arrival trace (the cumulative arrival table is
+a pure function of ``(cfg, seed)`` and ignores the async mode), so the
+comparison isolates the communication discipline — best-effort vs
+barrier-every-step — and the exchange scheduler — per-window vs the
+W-fused superstep (and the pipelined overlap when ``--shards`` > 1) —
+at matched demand.
+
+Per arm, ``--replicates`` seeds run as one vmapped dispatch; the recorded
+``updates_per_sec`` (and its bootstrap percentile CI over replicates)
+feeds the CI regression gate (``check_regression.py`` keys service rows
+by mode + traffic on top of the engine/n/scheduler point).  Served-item
+throughput and end-of-run QoS medians ride along so the A/B table reads
+as the paper's payoff/price split: period = payoff, latency = price.
+
+Run: PYTHONPATH=src:. python benchmarks/bench_service.py \
+         [--procs 64] [--duration 0.02] [--traffic poisson] \
+         [--replicates 5] [--superstep-windows 4] [--shards 1]
+
+Writes ``benchmarks/results/BENCH_service.json``.  CI replays the n=64
+jax arms and gates ``updates_per_sec`` against the checked-in baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def _bootstrap_ci(vals, n_boot: int = 1000, q=(2.5, 97.5), seed: int = 0):
+    """Percentile bootstrap CI for the mean of ``vals``."""
+    import numpy as np
+
+    arr = np.asarray(vals, float)
+    if arr.size < 2:
+        v = float(arr.mean()) if arr.size else 0.0
+        return v, v
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, arr.size, size=(n_boot, arr.size))
+    means = arr[idx].mean(axis=1)
+    lo, hi = np.percentile(means, q)
+    return float(lo), float(hi)
+
+
+def bench_arm(engine: str, mode, scheduler: str, superstep_windows: int,
+              n: int, duration: float, topology: str, traffic: str,
+              arrival_rate: float, shards: int, replicates: int,
+              seed: int, warmup: bool):
+    from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+    from repro.core.qos import median_of_process_medians
+    from repro.runtime.config import RunConfig
+    from repro.runtime.engine import run_replicates
+    from repro.runtime.simulator import SimConfig
+    from repro.runtime.topologies import make_topology
+
+    topo = make_topology(topology, n)
+
+    def make_app(s: int):
+        return GraphColorApp(
+            GraphColorConfig(n_processes=n, nodes_per_process=1, seed=s),
+            topology=topo)
+
+    cfg = SimConfig(mode=mode, duration=duration,
+                    snapshot_warmup=duration / 6,
+                    snapshot_interval=duration / 12, seed=seed,
+                    arrival_rate=arrival_rate, arrival_shape=traffic)
+    rc = RunConfig(engine=engine, shards=shards, scheduler=scheduler,
+                   superstep_windows=superstep_windows,
+                   replicates=replicates)
+    if warmup and engine == "jax":
+        run_replicates(rc, make_app, cfg)
+    t0 = time.perf_counter()
+    results = run_replicates(rc, make_app, cfg)
+    wall = time.perf_counter() - t0
+    per_rep_rate = [sum(r.updates) / (wall / len(results)) for r in results]
+    updates = sum(sum(r.updates) for r in results)
+    served = sum(sum(r.service["served"]) for r in results if r.service)
+    arrivals = sum(sum(r.service["arrivals"]) for r in results if r.service)
+    lo, hi = _bootstrap_ci(per_rep_rate)
+    all_qos = {}
+    for res in results:
+        for pid, reps in res.qos_by_process.items():
+            all_qos.setdefault(pid, []).extend(reps)
+    resolved = "superstep" if scheduler == "auto" and superstep_windows > 1 \
+        else ("window" if scheduler == "auto" else scheduler)
+    return dict(
+        engine=engine, n=n, shards=shards, topology=topo.name,
+        scheduler=resolved, superstep_windows=superstep_windows,
+        mode=mode.name.lower(), traffic=traffic,
+        arrival_rate=arrival_rate, duration=duration,
+        replicates=replicates, warm=bool(warmup and engine == "jax"),
+        wall_seconds=wall, updates=updates,
+        updates_per_sec=updates / wall,
+        updates_per_sec_ci=[lo, hi],
+        served=served, arrivals=arrivals,
+        served_per_sec=served / wall,
+        backlog_fraction=(arrivals - served) / max(arrivals, 1),
+        simstep_period_p50=median_of_process_medians(
+            all_qos, "simstep_period"),
+        simstep_latency_p50=median_of_process_medians(
+            all_qos, "simstep_latency"),
+        delivery_failure_p50=median_of_process_medians(
+            all_qos, "delivery_failure_rate"),
+    )
+
+
+def run(n: int = 64, duration: float = 0.02, topology: str = "torus",
+        traffic: str = "poisson", arrival_rate: float = 1e5,
+        replicates: int = 5, superstep_windows: int = 4, shards: int = 1,
+        seed: int = 0, warmup: bool = False, engine: str = "jax"):
+    from benchmarks.common import emit, save_json
+    from repro.core.modes import AsyncMode
+
+    arms = [
+        (AsyncMode.BEST_EFFORT, "window", 1),
+        (AsyncMode.BARRIER_EVERY_STEP, "window", 1),
+        (AsyncMode.BEST_EFFORT, "superstep", superstep_windows),
+        (AsyncMode.BARRIER_EVERY_STEP, "superstep", superstep_windows),
+    ]
+    if shards > 1:
+        arms += [
+            (AsyncMode.BEST_EFFORT, "pipelined", superstep_windows),
+            (AsyncMode.BARRIER_EVERY_STEP, "pipelined", superstep_windows),
+        ]
+    rows = []
+    for mode, scheduler, w in arms:
+        row = bench_arm(engine, mode, scheduler, w, n, duration, topology,
+                        traffic, arrival_rate, shards, replicates, seed,
+                        warmup)
+        rows.append(row)
+        emit(f"service/{row['mode']}/{row['scheduler']}W{w}/n{n}",
+             row["wall_seconds"] * 1e6,
+             f"upd_per_sec={row['updates_per_sec']:.0f} "
+             f"ci=[{row['updates_per_sec_ci'][0]:.0f},"
+             f"{row['updates_per_sec_ci'][1]:.0f}] "
+             f"served_per_sec={row['served_per_sec']:.0f} "
+             f"backlog={row['backlog_fraction']:.3f} "
+             f"fail_p50={row['delivery_failure_p50']:.3f}")
+    # A/B headline: best-effort over barrier at matched arrival trace,
+    # per scheduler (the paper's C1 claim, live-service edition)
+    summary = {}
+    for scheduler in {r["scheduler"] for r in rows}:
+        be = next(r for r in rows if r["scheduler"] == scheduler
+                  and r["mode"] == "best_effort")
+        ba = next(r for r in rows if r["scheduler"] == scheduler
+                  and r["mode"] == "barrier_every_step")
+        key = f"n{n}_{scheduler}_best_effort_over_barrier"
+        summary[key] = dict(
+            speedup=be["updates_per_sec"] / ba["updates_per_sec"],
+            served_ratio=be["served"] / max(ba["served"], 1),
+            superstep_windows=be["superstep_windows"])
+        emit(f"service/ab/{scheduler}/n{n}", 0.0,
+             f"best_effort_over_barrier={summary[key]['speedup']:.2f}x "
+             f"served_ratio={summary[key]['served_ratio']:.2f}x")
+    save_json("BENCH_service", {"rows": rows, "summary": summary})
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--procs", type=int, default=64)
+    p.add_argument("--duration", type=float, default=0.02)
+    p.add_argument("--topology", default="torus")
+    p.add_argument("--traffic", default="poisson",
+                   choices=["poisson", "bursty", "diurnal"])
+    p.add_argument("--arrival-rate", type=float, default=1e5)
+    p.add_argument("--replicates", type=int, default=5)
+    p.add_argument("--superstep-windows", type=int, default=4)
+    p.add_argument("--shards", type=int, default=1)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--engine", default="jax", choices=["event", "jax"])
+    p.add_argument("--force-host-devices", type=int, default=0,
+                   help="set XLA_FLAGS=--xla_force_host_platform_device_"
+                        "count=N (must run before jax initializes devices)")
+    p.add_argument("--warmup", action="store_true",
+                   help="pre-run each arm once so the timed run excludes "
+                        "jit compilation (used by the CI perf guard)")
+    a = p.parse_args()
+    if a.force_host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{a.force_host_devices}").strip()
+    run(a.procs, a.duration, a.topology, a.traffic, a.arrival_rate,
+        a.replicates, a.superstep_windows, a.shards, a.seed, a.warmup,
+        a.engine)

@@ -55,6 +55,10 @@ def _points(path: str) -> dict:
         # W-fused unsharded point share n with the torus matrix and would
         # otherwise collide.  Older rows default to the values those
         # baselines actually measured (bench torus, per-window W=1).
+        # mode and traffic joined the key with the live-service A/B bench
+        # (bench_service.py): its arms differ only by async mode (and
+        # arrival shape) at one (engine, n, scheduler) point.  Batch rows
+        # carry neither field and key on the defaults they measured.
         key = (
             r["engine"],
             r["n"],
@@ -63,6 +67,8 @@ def _points(path: str) -> dict:
             r.get("scheduler", "window"),
             r.get("topology", "torus"),
             r.get("superstep_windows", 1),
+            r.get("mode", "-"),
+            r.get("traffic", "-"),
         )
         if key in points:
             # e.g. a run benching both "auto" and the layout it resolves
@@ -103,10 +109,11 @@ def check(
         status = "OK" if f >= floor else "REGRESSION"
         if f < floor:
             failures += 1
-        engine, n, shards, layout, sched, topo, w = key
+        engine, n, shards, layout, sched, topo, w, mode, traffic = key
+        ab = f"/{mode}/{traffic}" if mode != "-" else ""
         print(
             f"  {status:<10} {engine}/{topo}/n{n}/s{shards}/{layout}/"
-            f"{sched}W{w}: "
+            f"{sched}W{w}{ab}: "
             f"{metric} fresh={f:.0f} baseline={b:.0f} "
             f"floor={floor:.0f} ({f / b:.2f}x)"
         )

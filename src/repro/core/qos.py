@@ -16,6 +16,7 @@ Counters mirror the paper's Inlet/Outlet instrumentation:
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -54,9 +55,18 @@ class QosReport:
 
 
 def simstep_period(before: Counters, after: Counters) -> float:
+    """Seconds of wall time per completed update.
+
+    A zero-update observation window (idle, barrier-parked, or churned-out
+    process) reports an explicit ``inf`` sentinel rather than ``wall / 1``:
+    the old clamp made a stalled process look like one *fast* update per
+    window, which inverts SLO verdicts under churn.  Aggregators filter the
+    sentinel deliberately (see :func:`aggregate_reports`)."""
     updates = after.update_count - before.update_count
     wall = after.wall_time - before.wall_time
-    return wall / max(updates, 1)
+    if updates <= 0:
+        return float("inf")
+    return wall / updates
 
 
 def simstep_latency(before: Counters, after: Counters) -> float:
@@ -71,6 +81,10 @@ def simstep_latency(before: Counters, after: Counters) -> float:
 
 
 def walltime_latency(before: Counters, after: Counters) -> float:
+    """Seconds per one-way delivery; ``inf`` on a zero-update window (the
+    guard keeps the sentinel from collapsing to ``0 * inf = nan``)."""
+    if after.update_count - before.update_count <= 0:
+        return float("inf")
     return simstep_latency(before, after) * simstep_period(before, after)
 
 
@@ -161,10 +175,16 @@ def aggregate_reports(reports, percentiles=(50, 95)):
     Returns ``{metric: {"median": v, "p95": v, ...}}`` — percentile 50 is
     keyed ``"median"``, every other q as ``"p{q}"``.  Empty input yields
     empty per-metric dicts.
+
+    Zero-update windows stamp ``inf`` sentinels into the period/latency
+    metrics (see :func:`simstep_period`); percentiles are taken over the
+    *finite* samples only, so one idle process cannot saturate a tail
+    statistic — a metric whose every sample is the sentinel reports
+    ``None``, the same as no data.
     """
     out = {}
     for m in METRICS:
-        vals = [getattr(r, m) for r in reports]
+        vals = [v for r in reports if math.isfinite(v := getattr(r, m))]
         summary = {}
         for q in percentiles:
             key = "median" if q == 50 else f"p{int(q)}"
@@ -175,9 +195,14 @@ def aggregate_reports(reports, percentiles=(50, 95)):
 
 def median_of_process_medians(qos_by_process, metric: str):
     """The paper's headline statistic: median over processes of each
-    process's median over observation windows.  None if no windows."""
-    meds = [np.median([getattr(q, metric) for q in reps])
-            for reps in qos_by_process.values() if reps]
+    process's median over observation windows.  None if no windows.
+    Idle-window ``inf`` sentinels are excluded per process; a process with
+    only sentinel windows contributes no median."""
+    meds = []
+    for reps in qos_by_process.values():
+        vals = [v for q in reps if math.isfinite(v := getattr(q, metric))]
+        if vals:
+            meds.append(np.median(vals))
     return float(np.median(meds)) if meds else None
 
 
@@ -201,13 +226,19 @@ def aggregate_timeseries(process_reports, percentiles=(50, 95)):
     windows simply stops contributing.  Returns one row per interval::
 
         {"interval": i, "t_start": ..., "t_end": ..., "n_samples": k,
-         "qos": {metric: {"median": ..., "p95": ...}}}
+         "complete": bool, "qos": {metric: {"median": ..., "p95": ...}}}
 
     where the t bounds are medians over the contributing processes' own
-    snapshot clocks.
+    snapshot clocks.  ``complete`` marks intervals every process
+    contributed a window to; ragged-tail rows (a process finished early,
+    left the service, or never reached the interval) pool whatever samples
+    exist but carry ``complete: False`` so time-sliced SLO verdicts can
+    flag rather than trust them.
     """
     columns = []
+    n_procs = 0
     for reps in process_reports:
+        n_procs += 1
         for i, r in enumerate(reps):
             if i >= len(columns):
                 columns.append([])
@@ -219,6 +250,7 @@ def aggregate_timeseries(process_reports, percentiles=(50, 95)):
             "t_start": float(np.median([r.t_start for r in bucket])),
             "t_end": float(np.median([r.t_end for r in bucket])),
             "n_samples": len(bucket),
+            "complete": len(bucket) == n_procs,
             "qos": aggregate_reports(bucket, percentiles),
         })
     return rows

@@ -208,7 +208,18 @@ class JaxEngine:
         t0 = self.core.base_total * self._step_factor(
             seed_arr, jnp.zeros(n, jnp.int32))
         state, halo = bapp.init(seed)
+        extra: Dict[str, jax.Array] = {}
+        if self.cfg.arrival_rate > 0:
+            # open-loop service arrivals: the cumulative per-(pid, bin)
+            # arrival table is precomputed host-side (pure function of
+            # (cfg, seed)) and carried so close_window's serve hook reads
+            # the same stream every engine injects
+            from repro.runtime.service import cum_arrivals
+            extra["arr_cum"] = jnp.asarray(
+                cum_arrivals(self.cfg, seed, n), jnp.int32)
+            extra["served"] = jnp.zeros(n, jnp.int32)
         return dict(
+            **extra,
             seed=seed_arr,
             k=jnp.asarray(0, jnp.int32),
             t=t0,

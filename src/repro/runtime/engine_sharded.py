@@ -112,10 +112,12 @@ from repro.runtime.window_core import (
 #: window schedulers this engine implements (registry vocabulary)
 _SCHEDULERS = ("window", "superstep", "pipelined")
 
-#: carry keys indexed by the process axis (permuted into shard layout)
+#: carry keys indexed by the process axis (permuted into shard layout);
+#: the service keys ("arr_cum", "served") are present only when the config
+#: enables open-loop arrivals, so layout transforms guard on membership
 _PROC_KEYS = ("t", "steps", "done", "waiting", "barrier_seq", "last_release",
               "pending", "c_touch", "c_att", "c_ok", "c_drop", "c_laden",
-              "c_msgs", "snap", "snap_idx", "halo")
+              "c_msgs", "snap", "snap_idx", "halo", "arr_cum", "served")
 #: carry keys indexed by the edge axis (re-laid-out per shard, padded)
 _EDGE_KEYS = ("ptouch", "q_avail", "q_touch", "q_pay", "q_head", "q_size")
 #: per-replicate scalars (replicated across shards)
@@ -398,7 +400,8 @@ class ShardedJaxEngine(JaxEngine):
         perm = self._perm_np
         out = dict(carry)
         for key in _PROC_KEYS:
-            out[key] = carry[key][:, perm]
+            if key in carry:
+                out[key] = carry[key][:, perm]
         out["app"] = jax.tree.map(lambda x: x[:, perm], carry["app"])
         return out
 
@@ -407,7 +410,8 @@ class ShardedJaxEngine(JaxEngine):
         inv = self._inv_np
         out = dict(carry)
         for key in _PROC_KEYS:
-            out[key] = carry[key][:, inv]
+            if key in carry:
+                out[key] = carry[key][:, inv]
         out["app"] = jax.tree.map(lambda x: x[:, inv], carry["app"])
         return out
 

@@ -46,16 +46,19 @@ runs every family.  See EXPERIMENTS.md for the full matrix.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.modes import AsyncMode
 from repro.core.qos import METRICS, aggregate_reports, aggregate_timeseries
+from repro.core.slo import SloPolicy
 from repro.runtime.config import RunConfig
 from repro.runtime.engine import (ENGINES, make_engine, run_replicates,
                                   validate_run_config)
 from repro.runtime.faults import faulty_host
+from repro.runtime.service import default_timeline, run_service
 from repro.runtime.simulator import SimConfig
 from repro.runtime.topologies import TOPOLOGIES, Topology, make_topology
 
@@ -272,11 +275,61 @@ def run_faults(args) -> List[dict]:
     return rows
 
 
+def run_serve(args) -> List[dict]:
+    """Live-service scenario: open-loop traffic + churn + SLO verdicts.
+
+    One long-running serve on the first ``--procs`` count: the
+    ``--traffic`` arrival shape feeds every process's work queue at
+    ``--arrival-rate``, ``--churn`` incidents (host fault/heal, process
+    leave/join) split the run into epochs with patched topologies, and
+    the per-interval QoS stream is scored against the ``--slo-*`` budgets
+    (``runtime/service.py`` / ``core/slo.py``).
+    """
+    n = args.procs[0]
+    topo = _topology_for(args, n)
+    timeline = default_timeline(topo, args.churn, args.duration,
+                                args.fault_compute, args.fault_link)
+    policy = SloPolicy(latency_p99_budget=args.slo_latency,
+                       failure_p99_budget=args.slo_failure,
+                       burn_window=args.burn_window,
+                       burn_threshold=args.burn_threshold)
+    cfg = _sim_config(args, n, arrival_rate=args.arrival_rate,
+                      arrival_shape=args.traffic)
+    print(f"[serve] app={args.app} topology={topo.name} n={n} "
+          f"traffic={args.traffic}@{args.arrival_rate:g}/s churn={args.churn} "
+          f"engine={args.engine} slo=(lat_p99<={policy.latency_p99_budget}, "
+          f"fail_p99<={policy.failure_p99_budget})")
+    out = run_service(
+        args.run,
+        lambda topology, s: make_app(args.app, topology.n, args.simels,
+                                     topology, s),
+        cfg, topo, timeline, policy)
+    for ep in out["epochs"]:
+        print(f"  epoch {ep['epoch']}: t=[{ep['t_start']:.4f}, "
+              f"{ep['t_end']:.4f}) procs={ep['n_procs']} "
+              f"absent={ep['absent_pids']} faulty={ep['faulty_hosts']} "
+              f"({ep['intervals']} intervals)")
+    s = out["slo"]["summary"]
+    svc = out["service"]
+    print(f"  slo: {s['intervals']} intervals, {s['breaches']} breaches, "
+          f"{s['no_data']} no-data, max_burn={s['max_burn_rate']:.2f} "
+          f"-> {'OK' if s['ok'] else 'BREACH'}")
+    print(f"  service: {svc['arrivals']} arrivals, {svc['served']} served, "
+          f"{svc['backlog']} backlogged")
+    _print_distributions(out["qos"])
+    row = dict(family="serve", n=n, topology=topo.name, engine=args.engine,
+               run=args.run.to_dict(), traffic=args.traffic,
+               arrival_rate=args.arrival_rate, churn=args.churn,
+               policy=dataclasses.asdict(policy), **out)
+    return [row]
+
+
 FAMILIES = {
     "modes": run_modes,
     "weak_scaling": run_weak_scaling,
     "intensivity": run_intensivity,
     "faults": run_faults,
+    "serve": run_serve,
 }
 
 
@@ -362,6 +415,29 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--faulty-host", type=int, default=None)
     p.add_argument("--fault-compute", type=float, default=30.0)
     p.add_argument("--fault-link", type=float, default=30.0)
+    # --- live-service family (--family serve) ---------------------------
+    p.add_argument("--traffic", default="poisson",
+                   choices=["poisson", "bursty", "diurnal"],
+                   help="open-loop arrival shape feeding each process's "
+                        "work queue (runtime/service.py)")
+    p.add_argument("--arrival-rate", type=float, default=1e5,
+                   help="mean arrivals per process per virtual second")
+    p.add_argument("--churn", type=int, default=0,
+                   help="churn incidents spread over the run: even "
+                        "incidents fault+heal a host, odd ones make a "
+                        "process leave+rejoin (duct rings spliced via "
+                        "patch_topology)")
+    p.add_argument("--slo-latency", type=float, default=50.0,
+                   help="per-interval p99 simstep-latency budget (updates "
+                        "per one-way delivery)")
+    p.add_argument("--slo-failure", type=float, default=0.35,
+                   help="per-interval p99 delivery-failure-rate budget")
+    p.add_argument("--burn-window", type=int, default=5,
+                   help="trailing data-bearing intervals in the burn-rate "
+                        "window")
+    p.add_argument("--burn-threshold", type=float, default=0.5,
+                   help="burn rate above which an interval is marked "
+                        "burning (sustained breach)")
     p.add_argument("--json", default=None, help="write rows to this path")
     return p
 

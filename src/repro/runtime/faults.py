@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -108,6 +108,100 @@ def faulty_host(topology, host: int, compute_factor: float = 30.0,
             links[(p, nb)] = link_factor
             links[(nb, p)] = link_factor
     return FaultModel({p: compute_factor for p in pids}, links)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineEvent:
+    """One scheduled churn event on the service timeline.
+
+    ``kind`` is one of:
+
+      fault   host ``host`` degrades (compute + clique links slow down)
+      heal    host ``host`` recovers
+      leave   process ``pid`` (original numbering) departs; its duct ring
+              is spliced closed by ``topologies.patch_topology``
+      join    process ``pid`` returns; the pristine ring segment reappears
+    """
+
+    t: float
+    kind: str
+    host: int = -1
+    pid: int = -1
+
+    def __post_init__(self):
+        assert self.kind in ("fault", "heal", "leave", "join"), self.kind
+        assert self.t > 0, "timeline events must be strictly inside the run"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTimeline:
+    """A schedule of churn events extending the static :class:`FaultModel`.
+
+    The static model answers "which processes/links are slow"; the
+    timeline answers "when does that change".  ``runtime/service.py``
+    splits the run into epochs at :meth:`boundaries` and rebuilds the
+    epoch's topology (from :meth:`absent_pids`) and fault model (from
+    :meth:`fault_model`) at each boundary — churn state is piecewise
+    constant, never mid-epoch.
+    """
+
+    events: Tuple[TimelineEvent, ...] = ()
+    compute_factor: float = 30.0
+    link_factor: float = 50.0
+
+    def boundaries(self, duration: float) -> List[float]:
+        """Distinct event times strictly inside ``(0, duration)``."""
+        return sorted({e.t for e in self.events if 0 < e.t < duration})
+
+    def absent_pids(self, t: float) -> frozenset:
+        """Original pids that have left (and not rejoined) by time ``t``.
+
+        An event at exactly ``t`` has taken effect (epochs are closed on
+        the left: the epoch starting at a boundary sees its events).
+        """
+        absent = set()
+        for e in sorted(self.events, key=lambda e: e.t):
+            if e.t > t:
+                break
+            if e.kind == "leave":
+                absent.add(e.pid)
+            elif e.kind == "join":
+                absent.discard(e.pid)
+        return frozenset(absent)
+
+    def faulty_hosts(self, t: float) -> frozenset:
+        """Hosts degraded (faulted, not yet healed) at time ``t``."""
+        hosts = set()
+        for e in sorted(self.events, key=lambda e: e.t):
+            if e.t > t:
+                break
+            if e.kind == "fault":
+                hosts.add(e.host)
+            elif e.kind == "heal":
+                hosts.discard(e.host)
+        return frozenset(hosts)
+
+    def fault_model(self, topology, t: float):
+        """Compose the active host faults at ``t`` into one FaultModel.
+
+        ``topology`` is the *patched* epoch topology (post-churn pid
+        numbering), so the composed slowdown dicts speak the numbering
+        the engine actually runs with.  A faulted host whose processes
+        have all left contributes nothing.
+        """
+        compute: Dict[int, float] = {}
+        links: Dict[Tuple[int, int], float] = {}
+        for host in sorted(self.faulty_hosts(t)):
+            pids = topology.host_pids(host)
+            if not pids:
+                continue
+            fm = faulty_host(topology, host, self.compute_factor,
+                             self.link_factor)
+            compute.update(fm.compute_slowdown)
+            links.update(fm.link_slowdown)
+        if not compute and not links:
+            return None
+        return FaultModel(compute, links)
 
 
 class Jitter:

@@ -56,6 +56,20 @@ class SimConfig:
     snapshot_interval: float = 0.2     # QoS snapshot spacing
     snapshot_warmup: float = 0.2
     seed: int = 0
+    # --- open-loop service arrivals (runtime/service.py) ----------------
+    # rate > 0 switches the run into the live-service posture: a
+    # deterministic splitmix-hashed arrival stream feeds each process's
+    # work queue, and every update serves up to service_chunk queued items
+    # at per_item_cost compute seconds each.  The stream is precomputed
+    # per (seed, pid, time bin) so every engine injects identical load.
+    arrival_rate: float = 0.0          # mean arrivals /process /vsecond
+    arrival_shape: str = "poisson"     # poisson | bursty | diurnal
+    arrival_bin: float = 1e-3          # arrival-draw bin width (vseconds)
+    arrival_burst_prob: float = 0.05   # bursty: per-bin global surge odds
+    arrival_burst_factor: float = 8.0  # bursty: surge rate multiplier
+    arrival_period: float = 0.02       # diurnal: sinusoid period
+    service_chunk: int = 4             # max queue items served per update
+    per_item_cost: float = 2e-6        # compute seconds per served item
 
 
 @dataclasses.dataclass
@@ -67,6 +81,9 @@ class SimResult:
     qos_by_process: Dict[int, List[QosReport]]
     dropped: int
     sent: int
+    #: live-service queue accounting (``cfg.arrival_rate > 0`` only):
+    #: {"arrivals": [...], "served": [...], "backlog": [...]} per process
+    service: Optional[dict] = None
 
     @property
     def update_rate_per_cpu(self) -> float:
@@ -242,6 +259,21 @@ class Simulator:
         pull_costs = [d * per_pull_cost for d in self._deg]
         heappush, heappop = heapq.heappush, heapq.heappop
 
+        # --- open-loop service arrivals (runtime/service.py) --------------
+        # the cumulative arrival table is a pure function of (cfg, seed,
+        # pid, bin), precomputed host-side; the vectorized engines carry
+        # the identical table, so every backend injects the same load
+        arr_rows = None
+        if cfg.arrival_rate > 0:
+            from repro.runtime.service import cum_arrivals
+            arr_np = cum_arrivals(cfg, cfg.seed, n)
+            arr_rows = arr_np.tolist()
+            arr_bins = arr_np.shape[1] - 1
+            arr_bin = cfg.arrival_bin
+            serve_chunk = cfg.service_chunk
+            item_cost = cfg.per_item_cost
+            served = [0] * n
+
         heap: List[Tuple[float, int, int]] = [
             (self._step_duration(pid, 0), pid, pid) for pid in range(n)]
         heapq.heapify(heap)
@@ -307,6 +339,22 @@ class Simulator:
                 seq = self._try_release_barriers(heap, seq)
                 continue
 
+            # --- serve queued arrivals (continuing processes only) ----------
+            # arrivals of bin b are queued once b has fully elapsed on the
+            # process's own clock; each update serves up to service_chunk
+            # items, whose cost rides on the work clock with the compute —
+            # same recurrence as window_core.close_window, so the update
+            # schedule stays engine-, layout-, and W-invariant
+            if arr_rows is not None:
+                b = int(t / arr_bin)
+                if b > arr_bins:
+                    b = arr_bins
+                backlog = arr_rows[pid][b] - served[pid]
+                if backlog > 0:
+                    k = backlog if backlog < serve_chunk else serve_chunk
+                    served[pid] += k
+                    pending += k * item_cost
+
             # --- scheduling / barriers --------------------------------------
             if barriered and self._barrier_due(pid, t):
                 b = self._barrier_seq[pid]
@@ -327,6 +375,15 @@ class Simulator:
             qos_by_proc[pid] = reps
             all_qos.extend(reps)
 
+        service = None
+        if arr_rows is not None:
+            totals = [int(row[-1]) for row in arr_rows]
+            service = {
+                "arrivals": totals,
+                "served": [int(s) for s in served],
+                "backlog": [int(a - s) for a, s in zip(totals, served)],
+            }
+
         sent = sum(self._c_att)
         return SimResult(
             updates=updates,
@@ -336,6 +393,7 @@ class Simulator:
             qos_by_process=qos_by_proc,
             dropped=sum(self._c_drop),
             sent=sent,
+            service=service,
         )
 
     # ------------------------------------------------------------------

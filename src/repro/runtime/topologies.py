@@ -450,6 +450,53 @@ def plan_layout(topo: Topology, layout: str = "auto") -> LayoutPlan:
     return _dense_plan(topo)
 
 
+def patch_topology(topo: Topology,
+                   absent: Sequence[int]) -> Tuple[Topology, Dict[int, int]]:
+    """Remove ``absent`` pids and splice their duct rings closed.
+
+    The elastic-churn patch-up (runtime/service.py): each absent process
+    is excised one at a time, and its live neighbors are stitched into a
+    cycle (consecutive members of its adjacency ring gain an edge), so the
+    survivors keep a connected, symmetric graph without the departed hop.
+    Sequential excision handles adjacent departures naturally — by the
+    time the second of two neighboring processes leaves, it has already
+    inherited splice edges from the first.
+
+    Surviving pids are renumbered contiguously (host assignment carries
+    over).  Returns the validated patched topology plus the
+    ``original pid -> patched pid`` mapping.  Always patches from the
+    pristine base, so a later rejoin is just a patch with a smaller
+    absent set — rejoining every process reproduces ``topo`` exactly.
+    """
+    absent_set = set(absent)
+    bad = sorted(p for p in absent_set if not 0 <= p < topo.n)
+    if bad:
+        raise ValueError(f"absent pids {bad} out of range for n={topo.n}")
+    if len(absent_set) >= topo.n - 1:
+        raise ValueError(
+            f"cannot remove {len(absent_set)} of {topo.n} processes; "
+            "at least 2 must survive")
+    nbrs = [list(ns) for ns in topo.neighbors]
+    alive = [True] * topo.n
+    for a in sorted(absent_set):
+        ring_members = [v for v in nbrs[a] if alive[v]]
+        alive[a] = False
+        for u in ring_members:
+            nbrs[u] = [v for v in nbrs[u] if v != a]
+        for i in range(len(ring_members)):
+            u = ring_members[i]
+            v = ring_members[(i + 1) % len(ring_members)]
+            if u != v and v not in nbrs[u]:
+                nbrs[u].append(v)
+                nbrs[v].append(u)
+    keep = [p for p in range(topo.n) if alive[p]]
+    newid = {p: i for i, p in enumerate(keep)}
+    adj = [sorted(newid[v] for v in nbrs[p]) for p in keep]
+    node_of = [topo.node_of[p] for p in keep]
+    name = (f"{topo.name}-{len(keep)}live" if absent_set else topo.name)
+    return _freeze(adj, name, node_of), newid
+
+
 TOPOLOGIES = {
     "ring": ring,
     "torus": torus,

@@ -763,6 +763,29 @@ class WindowCore:
         # --- termination / barriers / time advance ------------------------
         newly_done = active & (t >= np.float32(cfg.duration))
         done = done | newly_done
+
+        # --- open-loop service arrivals (runtime/service.py) --------------
+        # arrivals of time bin b queue up once b has fully elapsed on the
+        # process's own clock (the cumulative table travels in the carry,
+        # rows keyed by original pid); each update serves up to
+        # service_chunk items whose cost rides on the work clock with the
+        # compute.  The recurrence reads only (t, served), never drain
+        # state, so the update schedule stays engine-, layout-, shard- and
+        # W-invariant — and bit-identical to simulator.run's serve block.
+        served = u.get("served")
+        if served is not None:
+            cont = active & ~newly_done
+            arr_cum = u["arr_cum"]
+            nbins = arr_cum.shape[-1] - 1
+            b = jnp.minimum(
+                (t / np.float32(cfg.arrival_bin)).astype(jnp.int32), nbins)
+            avail = jnp.take_along_axis(arr_cum, b[:, None], axis=1)[:, 0]
+            serve = jnp.clip(avail - served, 0, cfg.service_chunk)
+            serve = jnp.where(cont, serve, 0)
+            pending = pending + serve.astype(jnp.float32) * np.float32(
+                cfg.per_item_cost)
+            served = served + serve
+
         d_next = self.base_total * self.step_factor(u["seed"], steps,
                                                     pids, cfactor)
         barrier_seq = u["barrier_seq"]
@@ -816,6 +839,8 @@ class WindowCore:
         out.update(k=u["k"] + 1, t=t, done=done, waiting=waiting,
                    barrier_seq=barrier_seq, last_release=last_release,
                    pending=pending_saved, snap=snap, snap_idx=snap_idx)
+        if served is not None:
+            out["served"] = served
         if release is not None and release.staged and barriered:
             # store fresh post-release reductions for the next boundary
             fresh_ready = (release.all_stopped(waiting | done) &
@@ -849,9 +874,15 @@ class WindowCore:
         dup, dtch, datt = d[..., 0], d[..., 1], d[..., 2]
         ddrop, dladen, dmsg, dwall = (d[..., 4], d[..., 5], d[..., 6],
                                       d[..., 7])
-        period = dwall / np.maximum(dup, 1)
+        # zero-update windows stamp the explicit inf sentinel, mirroring
+        # qos.simstep_period / qos.walltime_latency (idle != fast)
+        idle = dup <= 0
+        fin_period = dwall / np.maximum(dup, 1)
+        period = np.where(idle, np.inf, fin_period)
         lat = dup / np.maximum(dtch, 1)
-        wall_lat = lat * period
+        # product over the finite period only: 0 * inf would leak nan
+        # through np.where's eagerly evaluated branch
+        wall_lat = np.where(idle, np.inf, lat * fin_period)
         fail = np.where(datt > 0, ddrop / np.maximum(datt, 1), 0.0)
         dpull = dup * deg[:, None] if comm else np.zeros_like(dup)
         opp = np.minimum(dmsg, dpull)
@@ -874,6 +905,16 @@ class WindowCore:
             qos_by_proc[p] = reps
             all_qos.extend(reps)
 
+        service = None
+        if "served" in carry:
+            srv = np.asarray(carry["served"][r])
+            tot = np.asarray(carry["arr_cum"][r])[:, -1]
+            service = {
+                "arrivals": [int(x) for x in tot],
+                "served": [int(x) for x in srv],
+                "backlog": [int(a - s) for a, s in zip(tot, srv)],
+            }
+
         return SimResult(
             updates=[int(x) for x in steps],
             horizon=cfg.duration,
@@ -882,4 +923,5 @@ class WindowCore:
             qos_by_process=qos_by_proc,
             dropped=int(np.sum(carry["c_drop"][r])),
             sent=int(np.sum(carry["c_att"][r])),
+            service=service,
         )

@@ -322,9 +322,11 @@ _SHARD_SCRIPT = textwrap.dedent("""
     rp = make_engine("jax", gc_app(64, "torus"), cfg, shards=8,
                      superstep_windows=W, scheduler="pipelined").run()
     ok = True
-    du = abs(sum(rp.updates) - sum(rs.updates)) / max(sum(rs.updates), 1)
-    ok &= du <= 0.02
-    assert du <= 0.02, ("pipelined updates drift", du)
+    # the staging delay can shift each process by at most the one window
+    # straddling a boundary decision — anything more is a scheduler bug
+    du = max(abs(a - b) for a, b in zip(rp.updates, rs.updates))
+    ok &= du <= 1
+    assert du <= 1, ("pipelined updates drift", du)
     assert abs(rp.sent - rs.sent) <= 0.02 * rs.sent, (rp.sent, rs.sent)
     assert abs(rp.dropped - rs.dropped) <= 0.10 * max(rs.dropped, 1), (
         rp.dropped, rs.dropped)
@@ -345,6 +347,25 @@ _SHARD_SCRIPT = textwrap.dedent("""
     rows.append(dict(scenario="torus64-jittered", engine="jax",
                      variant=f"pipelined W={W} vs superstep", exact=False,
                      match=bool(ok)))
+
+    # rolling-barrier pipelined runs, by contrast, are EXACTLY W-invariant:
+    # the quantum is metered on the work clock (compute + degree-fixed pull
+    # cost — window_core.close_window), so the update schedule is a
+    # function of (seed, release times) alone and the double-buffered
+    # staging delay is invisible to it.  Per-process update counts and the
+    # send total must match the per-window unsharded engine bitwise — no
+    # drift tolerated.
+    from repro.core.modes import AsyncMode
+    cfgr = jittered_cfg(0.02, seed=case_seed("torus"),
+                        mode=AsyncMode.ROLLING_BARRIER)
+    rb = make_engine("jax", gc_app(64, "torus"), cfgr).run()
+    rpr = make_engine("jax", gc_app(64, "torus"), cfgr, shards=8,
+                      superstep_windows=W, scheduler="pipelined").run()
+    assert rpr.updates == rb.updates, "rolling pipelined update drift"
+    assert rpr.sent == rb.sent, (rpr.sent, rb.sent)
+    rows.append(dict(scenario="torus64-rolling", engine="jax",
+                     variant=f"pipelined W={W} exact W-invariance",
+                     exact=True, match=True))
 
     # float32-payload bitcast boundary hop (evo app)
     from repro.apps.evo import EvoApp, EvoConfig

@@ -190,6 +190,13 @@ def test_superstep_parity_and_amortization():
                                superstep_windows=4).run()
         assert r1.updates == rw4.updates, "rolling-barrier W-invariance"
         assert r1.sent == rw4.sent, "rolling-barrier W-invariance (sent)"
+        # the pipelined scheduler's staging delay is equally invisible to
+        # the work clock: exact W-invariance, no drift tolerated
+        rp4 = ShardedJaxEngine(gc_app(16, "ring"), cfg, shards=8,
+                               superstep_windows=4,
+                               scheduler="pipelined").run()
+        assert r1.updates == rp4.updates, "rolling pipelined W-invariance"
+        assert r1.sent == rp4.sent, "rolling pipelined W-invariance (sent)"
         print("SUPERSTEP-OK")
     """))
     assert "SUPERSTEP-OK" in out
