@@ -1,0 +1,210 @@
+"""Quarantine A/B bench: barrier release policy under a crashed clique.
+
+The robustness acceptance experiment for DESIGN.md §14: every arm runs the
+SAME workload (graph coloring on a torus, matched seeds) with every process
+on host ``n_nodes // 2`` crashed from t=0 (``runtime.faults.crashed_host``
+— the topology is untouched, so the clique's survivors keep sending into
+dead ducts).  Only the barrier release policy differs:
+
+  ``barrier_plain``       BARRIER_EVERY_STEP with ``barrier_timeout=0``.
+                          The cohort waits for arrivals that never come:
+                          the swarm stalls after its first step and the
+                          engine's window budget bounds the run, so the
+                          arm terminates with near-zero throughput — the
+                          failure mode the paper's best-effort design
+                          exists to avoid.
+  ``barrier_quarantine``  BARRIER_EVERY_STEP with ``barrier_timeout > 0``.
+                          Once the crashed clique's (never-coming, +inf)
+                          arrivals lag the cohort front by the timeout,
+                          releases exclude it and the survivors keep
+                          stepping in lockstep — degraded, not dead.
+  ``best_effort``         No barrier at all: the throughput upper bound.
+
+Per arm, ``--replicates`` seeds run as one vmapped dispatch; the recorded
+``updates_per_sec`` (with a bootstrap CI over replicates) feeds the CI
+regression gate — ``check_regression.py`` keys rows by the arm name in the
+``mode`` field, so all three arms share the (engine, n, scheduler) point
+without colliding.  Drop attribution (``dropped_dead`` vs ``dropped_loss``
+vs capacity) rides along per row, and the summary pins the headline
+ordering::
+
+    barrier_plain  <  barrier_quarantine  <  best_effort   (updates/sec)
+
+Run: PYTHONPATH=src:. python benchmarks/bench_faults.py \
+         [--procs 64] [--duration 0.02] [--replicates 5] \
+         [--barrier-timeout 1.5e-3] [--warmup]
+
+Writes ``benchmarks/results/BENCH_faults.json``.  CI replays the n=64 jax
+arms and gates ``updates_per_sec`` against the checked-in baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+#: default quarantine timeout (virtual seconds): an order of magnitude
+#: above the worst healthy straggle under the default jitter model
+#: (stall_factor x jitter on a 15us step is ~0.2ms), an order of
+#: magnitude below the 20ms bench horizon — only the crashed clique's
+#: +inf arrivals ever lag the cohort front this far
+DEFAULT_TIMEOUT = 1.5e-3
+
+
+def _bootstrap_ci(vals, n_boot: int = 1000, q=(2.5, 97.5), seed: int = 0):
+    """Percentile bootstrap CI for the mean of ``vals``."""
+    import numpy as np
+
+    arr = np.asarray(vals, float)
+    if arr.size < 2:
+        v = float(arr.mean()) if arr.size else 0.0
+        return v, v
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, arr.size, size=(n_boot, arr.size))
+    means = arr[idx].mean(axis=1)
+    lo, hi = np.percentile(means, q)
+    return float(lo), float(hi)
+
+
+def bench_arm(engine: str, arm: str, mode, barrier_timeout: float, n: int,
+              duration: float, topology: str, shards: int, replicates: int,
+              seed: int, warmup: bool):
+    from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
+    from repro.core.qos import median_of_process_medians
+    from repro.runtime.config import RunConfig
+    from repro.runtime.engine import run_replicates
+    from repro.runtime.faults import crashed_host
+    from repro.runtime.simulator import SimConfig
+    from repro.runtime.topologies import make_topology
+
+    topo = make_topology(topology, n)
+    host = topo.n_nodes // 2
+    victims = sorted(set(topo.host_pids(host)))
+    faults = crashed_host(topo, host)
+
+    def make_app(s: int):
+        return GraphColorApp(
+            GraphColorConfig(n_processes=n, nodes_per_process=1, seed=s),
+            topology=topo)
+
+    cfg = SimConfig(mode=mode, duration=duration,
+                    snapshot_warmup=duration / 6,
+                    snapshot_interval=duration / 12, seed=seed,
+                    barrier_timeout=barrier_timeout)
+    rc = RunConfig(engine=engine, shards=shards, replicates=replicates)
+    if warmup and engine == "jax":
+        run_replicates(rc, make_app, cfg, faults=faults)
+    t0 = time.perf_counter()
+    results = run_replicates(rc, make_app, cfg, faults=faults)
+    wall = time.perf_counter() - t0
+    per_rep_rate = [sum(r.updates) / (wall / len(results)) for r in results]
+    updates = sum(sum(r.updates) for r in results)
+    lo, hi = _bootstrap_ci(per_rep_rate)
+    # QoS medians over the SURVIVORS only: crashed processes take no
+    # snapshots, so their (empty) report lists would poison the pool.
+    # The medians can still be None — the barrier_plain arm stalls before
+    # its first snapshot, which is exactly the story the row tells
+    survivors = [p for p in range(n) if p not in victims]
+    all_qos = {}
+    for res in results:
+        for pid in survivors:
+            all_qos.setdefault(pid, []).extend(res.qos_by_process[pid])
+    return dict(
+        engine=engine, n=n, shards=shards, topology=topo.name,
+        scheduler="window", superstep_windows=1,
+        mode=arm, barrier_timeout=barrier_timeout,
+        crashed_host=host, crashed_pids=len(victims),
+        duration=duration, replicates=replicates,
+        warm=bool(warmup and engine == "jax"),
+        wall_seconds=wall, updates=updates,
+        updates_per_sec=updates / wall,
+        updates_per_sec_ci=[lo, hi],
+        dropped=sum(r.dropped for r in results),
+        dropped_dead=sum(r.dropped_dead for r in results),
+        dropped_loss=sum(r.dropped_loss for r in results),
+        simstep_period_p50=median_of_process_medians(
+            all_qos, "simstep_period"),
+        simstep_latency_p50=median_of_process_medians(
+            all_qos, "simstep_latency"),
+        delivery_failure_p50=median_of_process_medians(
+            all_qos, "delivery_failure_rate"),
+    )
+
+
+def run(n: int = 64, duration: float = 0.02, topology: str = "torus",
+        replicates: int = 5, barrier_timeout: float = DEFAULT_TIMEOUT,
+        shards: int = 1, seed: int = 0, warmup: bool = False,
+        engine: str = "jax"):
+    from benchmarks.common import emit, save_json
+    from repro.core.modes import AsyncMode
+
+    arms = [
+        ("barrier_plain", AsyncMode.BARRIER_EVERY_STEP, 0.0),
+        ("barrier_quarantine", AsyncMode.BARRIER_EVERY_STEP,
+         barrier_timeout),
+        ("best_effort", AsyncMode.BEST_EFFORT, 0.0),
+    ]
+    rows = []
+    for arm, mode, tau in arms:
+        row = bench_arm(engine, arm, mode, tau, n, duration, topology,
+                        shards, replicates, seed, warmup)
+        rows.append(row)
+        fail = row["delivery_failure_p50"]
+        emit(f"faults/{arm}/n{n}", row["wall_seconds"] * 1e6,
+             f"upd_per_sec={row['updates_per_sec']:.0f} "
+             f"ci=[{row['updates_per_sec_ci'][0]:.0f},"
+             f"{row['updates_per_sec_ci'][1]:.0f}] "
+             f"dropped_dead={row['dropped_dead']} "
+             f"fail_p50={'stalled' if fail is None else f'{fail:.3f}'}")
+    by = {r["mode"]: r for r in rows}
+    plain, quar, be = (by["barrier_plain"], by["barrier_quarantine"],
+                       by["best_effort"])
+    summary = {
+        f"n{n}_quarantine_over_plain":
+            quar["updates_per_sec"] / max(plain["updates_per_sec"], 1e-9),
+        f"n{n}_best_effort_over_quarantine":
+            be["updates_per_sec"] / max(quar["updates_per_sec"], 1e-9),
+        f"n{n}_ordering_holds": bool(
+            plain["updates_per_sec"] < quar["updates_per_sec"]
+            < be["updates_per_sec"]),
+    }
+    emit(f"faults/ab/n{n}", 0.0,
+         f"quarantine_over_plain="
+         f"{summary[f'n{n}_quarantine_over_plain']:.1f}x "
+         f"best_effort_over_quarantine="
+         f"{summary[f'n{n}_best_effort_over_quarantine']:.2f}x "
+         f"ordering_holds={summary[f'n{n}_ordering_holds']}")
+    save_json("BENCH_faults", {"rows": rows, "summary": summary})
+    if not summary[f"n{n}_ordering_holds"]:
+        raise SystemExit(
+            "bench_faults: throughput ordering violated — expected "
+            f"barrier_plain ({plain['updates_per_sec']:.0f}) < "
+            f"barrier_quarantine ({quar['updates_per_sec']:.0f}) < "
+            f"best_effort ({be['updates_per_sec']:.0f}) updates/sec")
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--procs", type=int, default=64)
+    p.add_argument("--duration", type=float, default=0.02)
+    p.add_argument("--topology", default="torus")
+    p.add_argument("--replicates", type=int, default=5)
+    p.add_argument("--barrier-timeout", type=float, default=DEFAULT_TIMEOUT)
+    p.add_argument("--shards", type=int, default=1)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--engine", default="jax", choices=["event", "jax"])
+    p.add_argument("--force-host-devices", type=int, default=0,
+                   help="set XLA_FLAGS=--xla_force_host_platform_device_"
+                        "count=N (must run before jax initializes devices)")
+    p.add_argument("--warmup", action="store_true",
+                   help="pre-run each arm once so the timed run excludes "
+                        "jit compilation (used by the CI perf guard)")
+    a = p.parse_args()
+    if a.force_host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{a.force_host_devices}").strip()
+    run(a.procs, a.duration, a.topology, a.replicates, a.barrier_timeout,
+        a.shards, a.seed, a.warmup, a.engine)

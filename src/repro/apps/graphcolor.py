@@ -195,6 +195,30 @@ class _Fragment:
         edges = self._edges()
         return {nb: edges for nb in set(nbs.values())}
 
+    def adopt(self, state):
+        """Resume from a carried ``(colors, probs)`` snapshot (service
+        epochs, runtime/service.py).  Halos restart from own edges exactly
+        like a fresh init — with the -1 sentinel on unfed slots — so a
+        survivor's first window is a pure function of the carried block
+        state, identical across engines."""
+        self.colors = np.array(state["colors"], dtype=self.colors.dtype)
+        self.probs = np.array(state["probs"], dtype=self.probs.dtype)
+        if self.scalar:
+            c = int(self.colors[0, 0])
+            self._c = c
+            self._p = self.probs[0, 0].tolist()
+            self._onehot = max(self._p) >= 1.0
+            self.halo = {"n": c, "s": c, "w": c, "e": c}
+        else:
+            self.halo = {"n": self.colors[0].copy(),
+                         "s": self.colors[-1].copy(),
+                         "w": self.colors[:, 0].copy(),
+                         "e": self.colors[:, -1].copy()}
+        if self.nbr_dirs is not None:
+            for d in set("nswe") - set(self.nbr_dirs.values()):
+                self.halo[d] = -1 if self.scalar \
+                    else np.full_like(self.halo[d], -1)
+
     def _edges(self):
         return {"n": self.colors[0].copy(), "s": self.colors[-1].copy(),
                 "w": self.colors[:, 0].copy(), "e": self.colors[:, -1].copy()}
@@ -240,7 +264,8 @@ _OPP = {"n": "s", "s": "n", "w": "e", "e": "w"}
 
 
 class GraphColorApp:
-    def __init__(self, cfg: GraphColorConfig, topology=None):
+    def __init__(self, cfg: GraphColorConfig, topology=None,
+                 initial_state=None):
         self.cfg = cfg
         self.n_processes = cfg.n_processes
         self.grid = proc_grid(cfg.n_processes)
@@ -250,15 +275,34 @@ class GraphColorApp:
             assert topology.n == cfg.n_processes, \
                 f"topology is for {topology.n} processes, app has {cfg.n_processes}"
         self.injected = topology  # runtime.topologies.Topology or None
+        # {seed: {pid: {"colors","probs"}}} — carried state for service
+        # epochs (runtime/service.py).  Keyed by replicate seed so one app
+        # instance serves the vectorized engine's whole replicate batch;
+        # pids absent from the dict initialize fresh (rejoin semantics).
+        self.initial_state = initial_state
 
     def make_fragments(self) -> List[_Fragment]:
         if self.injected is not None:
             no_wrap = {"ns": False, "ew": False}
-            return [_Fragment(i, self.cfg, self.grid, self.block, no_wrap,
-                              nbr_dirs=direction_map(self.injected.neighbors[i]))
-                    for i in range(self.cfg.n_processes)]
-        return [_Fragment(i, self.cfg, self.grid, self.block, self.self_wrap)
-                for i in range(self.cfg.n_processes)]
+            frags = [_Fragment(i, self.cfg, self.grid, self.block, no_wrap,
+                               nbr_dirs=direction_map(self.injected.neighbors[i]))
+                     for i in range(self.cfg.n_processes)]
+        else:
+            frags = [_Fragment(i, self.cfg, self.grid, self.block,
+                               self.self_wrap)
+                     for i in range(self.cfg.n_processes)]
+        carried = (self.initial_state or {}).get(self.cfg.seed) or {}
+        for f in frags:
+            state = carried.get(f.pid)
+            if state is not None:
+                f.adopt(state)
+        return frags
+
+    def export_state(self, fragments) -> Dict[int, dict]:
+        """Snapshot each fragment's carriable state (service epoch carry)."""
+        return {f.pid: {"colors": np.asarray(f.colors).copy(),
+                        "probs": np.asarray(f.probs).copy()}
+                for f in fragments}
 
     def topology(self):
         if self.injected is not None:
@@ -335,12 +379,25 @@ class BatchedGraphColor:
         for p in range(n):
             rng = np.random.default_rng((seed, p))
             colors[p] = rng.integers(0, cfg.n_colors, size=(H, W))
-        probs = jnp.full((n, H, W, cfg.n_colors), 1.0 / cfg.n_colors,
-                         jnp.float32)
+        probs = np.full((n, H, W, cfg.n_colors), 1.0 / cfg.n_colors,
+                        np.float32)
+        carried = (self.app.initial_state or {}).get(int(seed)) or {}
+        for p, state in carried.items():
+            colors[p] = state["colors"]
+            probs[p] = state["probs"]
         halo = np.where(self.fed[:, :, None], self._edges_np(colors),
                         np.int32(-1))
-        state = dict(colors=jnp.asarray(colors), probs=probs)
+        state = dict(colors=jnp.asarray(colors), probs=jnp.asarray(probs))
         return state, jnp.asarray(halo)
+
+    def export_state(self, state) -> Dict[int, dict]:
+        """Per-pid numpy snapshot of one replicate's final app state, in the
+        same layout :meth:`GraphColorApp.export_state` produces — so the
+        service layer can carry state across epochs engine-agnostically."""
+        colors = np.asarray(state["colors"])
+        probs = np.asarray(state["probs"])
+        return {p: {"colors": colors[p].copy(), "probs": probs[p].copy()}
+                for p in range(self.n)}
 
     def step(self, state, halo, steps, seed, pids=None):
         """One population step.  ``pids`` are the *original* process ids of

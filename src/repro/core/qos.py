@@ -6,8 +6,15 @@ Counters mirror the paper's Inlet/Outlet instrumentation:
   touch_count            round-trip touch counter (+2 per completed round trip)
   attempted_send_count   messages pushed toward a duct
   successful_send_count  messages accepted by the duct (buffer not full)
-  dropped_send_count     messages rejected by a full duct (counted at the
-                         drop site, never derived as attempted - successful)
+  dropped_send_count     messages that failed delivery, counted at the drop
+                         site (never derived as attempted - successful).
+                         This is the TOTAL across all three drop causes;
+                         the two subset counters below attribute it:
+  loss_dropped_send_count   subset dropped by a lossy or flapping link
+                            (deterministic per-send hash draw)
+  dead_dropped_send_count   subset sent toward a crashed (dead) process
+                         capacity drops (full duct) are the remainder:
+                         dropped - loss_dropped - dead_dropped
   laden_pull_count       pull attempts that retrieved >= 1 fresh message
   message_count          messages received
   pull_attempt_count     pull attempts
@@ -28,6 +35,8 @@ class Counters:
     attempted_send_count: int = 0
     successful_send_count: int = 0
     dropped_send_count: int = 0
+    loss_dropped_send_count: int = 0
+    dead_dropped_send_count: int = 0
     laden_pull_count: int = 0
     message_count: int = 0
     pull_attempt_count: int = 0
@@ -148,6 +157,8 @@ def qos_signature(result) -> dict:
         "updates": [int(u) for u in result.updates],
         "sent": int(result.sent),
         "dropped": int(result.dropped),
+        "dropped_loss": int(result.dropped_loss),
+        "dropped_dead": int(result.dropped_dead),
         "quality": float(result.quality),
         "qos": {},
     }

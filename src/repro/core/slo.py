@@ -43,10 +43,22 @@ class SloPolicy:
     burn_threshold: float = 0.5
 
     def __post_init__(self):
-        assert self.latency_p99_budget > 0
-        assert 0 <= self.failure_p99_budget <= 1
-        assert self.burn_window >= 1
-        assert 0 <= self.burn_threshold <= 1
+        # ValueError (not assert) so the checks survive ``python -O``
+        if not self.latency_p99_budget > 0:
+            raise ValueError(
+                f"latency_p99_budget must be > 0, got "
+                f"{self.latency_p99_budget}")
+        if not 0 <= self.failure_p99_budget <= 1:
+            raise ValueError(
+                f"failure_p99_budget must be in [0, 1], got "
+                f"{self.failure_p99_budget}")
+        if self.burn_window < 1:
+            raise ValueError(
+                f"burn_window must be >= 1, got {self.burn_window}")
+        if not 0 <= self.burn_threshold <= 1:
+            raise ValueError(
+                f"burn_threshold must be in [0, 1], got "
+                f"{self.burn_threshold}")
 
 
 def _p99(row: dict, metric: str) -> Optional[float]:

@@ -122,12 +122,30 @@ class JaxEngine:
         self._pids = jnp.arange(n, dtype=jnp.int32)
 
         lat = np.empty(E, np.float32)
+        loss = np.empty(E, np.float32)
+        flap = np.empty(E, np.float32)
+        dead = np.empty(E, bool)
         for e, (s, d) in enumerate(zip(esrc, edst)):
             base = cfg.base_latency
             if cfg.intra_node_latency is not None and topo.same_node(s, d):
                 base = cfg.intra_node_latency
             lat[e] = base * self.faults.link_factor(s, d)
+            loss[e] = self.faults.loss_prob(s, d)
+            flap[e] = self.faults.flap_frac(s, d)
+            dead[e] = self.faults.is_crashed(d)
         self._lat_base = jnp.asarray(lat)
+        # typed faults (DESIGN.md §14): per-edge loss/flap probabilities and
+        # dead-destination flags, plus the crashed-process mask.  All static
+        # per run — TimelineEvent faults re-instantiate the engine per epoch
+        crashed_np = np.asarray(
+            [self.faults.is_crashed(p) for p in range(n)], bool)
+        self._has_faults = bool(loss.any() or flap.any() or dead.any())
+        self._any_crashed = bool(crashed_np.any())
+        self._crashed = jnp.asarray(crashed_np)
+        if self._has_faults:
+            self._loss = jnp.asarray(loss)
+            self._flap = jnp.asarray(flap)
+            self._dead = jnp.asarray(dead)
         self._deg = jnp.asarray([topo.degree(p) for p in range(n)], jnp.int32)
         self._cfactor = jnp.asarray(
             [self.faults.compute_factor(p) for p in range(n)], jnp.float32)
@@ -155,6 +173,13 @@ class JaxEngine:
                 np.asarray(OPP_IDX, np.int32)[j % 4])
             self._d_lat = jnp.asarray(np.concatenate(
                 [lat, np.zeros(1, np.float32)])[lp.eid])
+            if self._has_faults:
+                self._d_loss = jnp.asarray(np.concatenate(
+                    [loss, np.zeros(1, np.float32)])[lp.eid])
+                self._d_flap = jnp.asarray(np.concatenate(
+                    [flap, np.zeros(1, np.float32)])[lp.eid])
+                self._d_dead = jnp.asarray(np.concatenate(
+                    [dead, np.zeros(1, bool)])[lp.eid])
         if scheduler == "superstep" and self.layout != "edge":
             w = self.superstep_windows
             if w < 2:
@@ -209,6 +234,16 @@ class JaxEngine:
             seed_arr, jnp.zeros(n, jnp.int32))
         state, halo = bapp.init(seed)
         extra: Dict[str, jax.Array] = {}
+        if self._any_crashed:
+            # a crashed process's clock IS its next barrier arrival: +inf
+            # keeps it out of every snapshot/release and lets the
+            # quarantine gate see it as unreachable under any finite tau
+            t0 = jnp.where(self._crashed, jnp.inf, t0)
+        if self._has_faults:
+            extra["c_loss"] = jnp.zeros(n, jnp.int32)
+            extra["c_dead"] = jnp.zeros(n, jnp.int32)
+        if self.cfg.barrier_timeout > 0 and self.cfg.mode in _BARRIER_MODES:
+            extra["quar"] = jnp.zeros(n, bool)
         if self.cfg.arrival_rate > 0:
             # open-loop service arrivals: the cumulative per-(pid, bin)
             # arrival table is precomputed host-side (pure function of
@@ -253,6 +288,8 @@ class JaxEngine:
         esrc, edst = self._esrc, self._edst
         seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
+        if self._any_crashed:
+            active = active & ~self._crashed
         drained_r = jnp.zeros(n, jnp.int32)
         u = dict(carry)
 
@@ -273,13 +310,38 @@ class JaxEngine:
             # scheduler — it executes under, so W-invariance is exact
             lat = self._lat_base * lognormal_factor(
                 cfg.latency_sigma, seed, STREAM_LAT, self._eids, steps[esrc])
+            act_e = active[esrc]
+            send_act = act_e
+            if self._has_faults:
+                # a lost / flapped / dead-bound send is killed before the
+                # ring: it still counts attempted + dropped (total), and
+                # the per-cause segment sums attribute it
+                loss_kill, dead_kill = core.fault_masks(
+                    seed, t[esrc], steps[esrc], self._eids,
+                    self._loss, self._flap, self.faults.flap_period,
+                    self._dead)
+                send_act = act_e & ~(loss_kill | dead_kill)
             sp = core.send_edge(
-                u, t[esrc], active[esrc], lat, u["ptouch"][self._rev],
+                u, t[esrc], send_act, lat, u["ptouch"][self._rev],
                 edges_out[esrc, self._out_slot], esrc, n, sorted_src=True)
             u.update(sp.rings)
-            u.update(c_att=carry["c_att"] + sp.sums[:, 0],
-                     c_ok=carry["c_ok"] + sp.sums[:, 1],
-                     c_drop=carry["c_drop"] + sp.sums[:, 2])
+            if self._has_faults:
+                kill_cols = jnp.stack(
+                    [(act_e & loss_kill).astype(jnp.int32),
+                     (act_e & dead_kill).astype(jnp.int32)], axis=1)
+                ks = jax.ops.segment_sum(kill_cols, esrc,
+                                         num_segments=n + 1,
+                                         indices_are_sorted=True)[:n]
+                killed = ks[:, 0] + ks[:, 1]
+                u.update(c_att=carry["c_att"] + sp.sums[:, 0] + killed,
+                         c_ok=carry["c_ok"] + sp.sums[:, 1],
+                         c_drop=carry["c_drop"] + sp.sums[:, 2] + killed,
+                         c_loss=carry["c_loss"] + ks[:, 0],
+                         c_dead=carry["c_dead"] + ks[:, 1])
+            else:
+                u.update(c_att=carry["c_att"] + sp.sums[:, 0],
+                         c_ok=carry["c_ok"] + sp.sums[:, 1],
+                         c_drop=carry["c_drop"] + sp.sums[:, 2])
         return self._finish_window(u, active, drained_r), None
 
     # ------------------------------------------------------------------
@@ -300,6 +362,8 @@ class JaxEngine:
         comm = cfg.mode != AsyncMode.NO_COMM
         seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
+        if self._any_crashed:
+            active = active & ~self._crashed
         drained_r = jnp.zeros(self.n, jnp.int32)
         u = dict(carry)
 
@@ -320,14 +384,21 @@ class JaxEngine:
             # same (edge, sender step) latency keying as the edge-major
             # path: flat row r's sender is src[r] (sentinel-clipped on
             # dead rows, whose draws are masked off by `live`)
+            src_c = jnp.clip(self._d_src, 0, self.n - 1)
             lat = self._d_lat * lognormal_factor(
                 cfg.latency_sigma, seed, STREAM_LAT, self._d_eid,
-                steps[jnp.clip(self._d_src, 0, self.n - 1)])
+                steps[src_c])
+            km = None
+            if self._has_faults:
+                km = core.fault_masks(
+                    seed, t[src_c], steps[src_c], self._d_eid,
+                    self._d_loss, self._d_flap, self.faults.flap_period,
+                    self._d_dead)
             u.update(core.stage_dense(
                 carry, u, t, active, edges_out, lat,
                 src=self._d_src, rev=self._d_rev,
                 out_slot=self._d_out_slot, live=self._d_live,
-                deg=self._deg, spec=self._spec))
+                deg=self._deg, spec=self._spec, kill_masks=km))
         return self._finish_window(u, active, drained_r), None
 
     # ------------------------------------------------------------------
@@ -402,7 +473,10 @@ class JaxEngine:
             # next chunk keeps the device busy, so the dispatch pipeline
             # never drains.  Costs one extra (state-invariant: every
             # process is inactive) chunk after the run completes.
-            all_done = jnp.all(carry["done"])
+            # crashed processes never reach the horizon; the probe treats
+            # them as terminally stopped
+            all_done = (jnp.all(carry["done"] | self._crashed)
+                        if self._any_crashed else jnp.all(carry["done"]))
             if prev_done is not None and bool(prev_done):
                 break
             prev_done = all_done
@@ -416,4 +490,7 @@ class JaxEngine:
         app_state = jax.tree_util.tree_map(lambda x: x[r], carry["app"])
         return self.core.assemble(
             carry, r, np.asarray(self._deg, np.int64),
-            self.bapp.quality(app_state))
+            self.bapp.quality(app_state),
+            app_state=(self.bapp.export_state(app_state)
+                       if self.cfg.carry_app_state
+                       and hasattr(self.bapp, "export_state") else None))

@@ -113,11 +113,13 @@ from repro.runtime.window_core import (
 _SCHEDULERS = ("window", "superstep", "pipelined")
 
 #: carry keys indexed by the process axis (permuted into shard layout);
-#: the service keys ("arr_cum", "served") are present only when the config
-#: enables open-loop arrivals, so layout transforms guard on membership
+#: the service keys ("arr_cum", "served"), the fault-attribution counters
+#: ("c_loss", "c_dead"), and the quarantine flags ("quar") are present only
+#: when the config enables them, so layout transforms guard on membership
 _PROC_KEYS = ("t", "steps", "done", "waiting", "barrier_seq", "last_release",
               "pending", "c_touch", "c_att", "c_ok", "c_drop", "c_laden",
-              "c_msgs", "snap", "snap_idx", "halo", "arr_cum", "served")
+              "c_msgs", "c_loss", "c_dead", "quar", "snap", "snap_idx",
+              "halo", "arr_cum", "served")
 #: carry keys indexed by the edge axis (re-laid-out per shard, padded)
 _EDGE_KEYS = ("ptouch", "q_avail", "q_touch", "q_pay", "q_head", "q_size")
 #: per-replicate scalars (replicated across shards)
@@ -263,6 +265,17 @@ class ShardedJaxEngine(JaxEngine):
         self._ein = ein
 
         i32, f32 = np.int32, np.float32
+        has_f = self._has_faults
+        if has_f:
+            # per-canonical-edge fault parameters, re-laid-out onto this
+            # shard's local rows (and, below, its boundary send tables) so
+            # every kill draw stays keyed by canonical edge id
+            loss_e = np.asarray(self._loss, f32)
+            flap_e = np.asarray(self._flap, f32)
+            dead_e = np.asarray(self._dead, bool)
+            row_loss = np.zeros((S, ein), f32)
+            row_flap = np.zeros((S, ein), f32)
+            row_dead = np.zeros((S, ein), bool)
         row_canon = np.zeros((S, ein), i32)
         row_valid = np.zeros((S, ein), bool)
         row_dst = np.full((S, ein), m, i32)
@@ -287,6 +300,10 @@ class ShardedJaxEngine(JaxEngine):
             row_rev[s, r] = np.where(interior, row_of[rev[e]], ein)
             row_halo_key[s, r] = (ldst[e] - s * m) * 4 + slot[e]
             row_lat[s, r] = lat_base[e]
+            if has_f:
+                row_loss[s, r] = loss_e[e]
+                row_flap[s, r] = flap_e[e]
+                row_dead[s, r] = dead_e[e]
 
         # boundary edges grouped by shard offset: one ppermute per offset
         bnd = np.where(src_sh != dst_sh)[0]
@@ -305,6 +322,10 @@ class ShardedJaxEngine(JaxEngine):
             snd_canon = np.zeros((S, bd), i32)
             snd_lat = np.zeros((S, bd), f32)
             rcv_row = np.full((S, bd), ein, i32)
+            if has_f:
+                snd_loss = np.zeros((S, bd), f32)
+                snd_flap = np.zeros((S, bd), f32)
+                snd_dead = np.zeros((S, bd), bool)
             for s in range(S):
                 e = per_s[s]
                 k = len(e)
@@ -313,11 +334,18 @@ class ShardedJaxEngine(JaxEngine):
                 snd_rev[s, :k] = row_of[rev[e]]
                 snd_canon[s, :k] = e
                 snd_lat[s, :k] = lat_base[e]
+                if has_f:
+                    snd_loss[s, :k] = loss_e[e]
+                    snd_flap[s, :k] = flap_e[e]
+                    snd_dead[s, :k] = dead_e[e]
                 # sender s's entry j lands at receiver (s+d)%S, entry j
                 rcv_row[(s + d) % S, :k] = row_of[e]
             bnd_tables[str(d)] = dict(
                 snd_src=snd_src, snd_oslot=snd_oslot, snd_rev=snd_rev,
                 snd_canon=snd_canon, snd_lat=snd_lat, rcv_row=rcv_row)
+            if has_f:
+                bnd_tables[str(d)].update(
+                    snd_loss=snd_loss, snd_flap=snd_flap, snd_dead=snd_dead)
 
         # compact boundary-row set: the union of every offset's receiver
         # rows, per shard.  Mid push passes (superstep/pipelined boundary
@@ -345,6 +373,13 @@ class ShardedJaxEngine(JaxEngine):
                         rcv_pos[s, j] = pos_of[s][r]
             tb["rcv_pos"] = rcv_pos
 
+        extra = {}
+        if has_f:
+            extra.update(row_loss=row_loss, row_flap=row_flap,
+                         row_dead=row_dead)
+        if self._any_crashed:
+            extra["crashed"] = (
+                np.asarray(self._crashed)[perm].reshape(S, m))
         self._statics = jax.tree.map(jnp.asarray, dict(
             pids=perm.reshape(S, m).astype(i32),
             cfactor=np.asarray(self._cfactor)[perm].reshape(S, m),
@@ -353,7 +388,9 @@ class ShardedJaxEngine(JaxEngine):
             row_src=row_src, row_interior=row_interior,
             row_out_slot=row_out_slot, row_rev=row_rev,
             row_halo_key=row_halo_key, row_lat=row_lat,
-            rows_bnd=rows_bnd, bnd=bnd_tables, bmem=bucket_members))
+            rows_bnd=rows_bnd, bnd=bnd_tables, bmem=bucket_members,
+            **extra))
+        self._crashed_pos = jnp.asarray(np.asarray(self._crashed)[perm])
         self._perm_np = perm
         self._inv_np = inv
 
@@ -392,6 +429,10 @@ class ShardedJaxEngine(JaxEngine):
                 # reductions issued at boundary i, consumed at i+1
                 carry["rel_ready"] = jnp.zeros(S, bool)
                 carry["rel_t"] = jnp.full(S, -np.inf, jnp.float32)
+                if self.cfg.barrier_timeout > 0:
+                    # quarantine gate's cohort front rides the same
+                    # one-boundary stage as the release decision
+                    carry["rel_ref"] = jnp.full(S, -np.inf, jnp.float32)
         return carry
 
     def _to_sharded_layout(self, carry):
@@ -454,9 +495,19 @@ class ShardedJaxEngine(JaxEngine):
         counter, and the sender-active bit.  Stamps are drawn NOW, at the
         sender's window, so a batched exchange at the superstep boundary
         still delivers exact virtual-time metadata (latency/clumpiness QoS
-        is computed from these stamps, not from arrival windows)."""
-        cfg = self.cfg
+        is computed from these stamps, not from arrival windows).
+
+        Typed fault kills (lossy / flapping / dead-destination links,
+        DESIGN.md §14) are decided HERE, sender-side: a killed boundary
+        send is staged with a zero att bit — it never crosses the mesh as
+        an attempt — and its attempted/dropped/cause counts come back as
+        the second return value ``(m, 2)`` [loss, dead] for the caller to
+        fold in this very window, exactly when the unsharded engine counts
+        it.  Draws are keyed by canonical edge id and sender step count,
+        so kill decisions are shard-count invariant."""
+        cfg, m = self.cfg, self._m
         staged = {}
+        bks = (jnp.zeros((m, 2), jnp.int32) if self._has_faults else None)
         for off in self._offsets:
             b = st["bnd"][str(off)]
             # latency draws keyed by (canonical edge id, sender step
@@ -469,12 +520,38 @@ class ShardedJaxEngine(JaxEngine):
             avail_b = t_pad[b["snd_src"]] + lat_b
             att_b = act_pad[b["snd_src"]]
             tch_b = ptouch_pad[b["snd_rev"]]
+            if self._has_faults:
+                l_k, d_k = self.core.fault_masks(
+                    seed, t_pad[b["snd_src"]], steps_pad[b["snd_src"]],
+                    b["snd_canon"], b["snd_loss"], b["snd_flap"],
+                    self.faults.flap_period, b["snd_dead"])
+                cols = jnp.stack([(att_b & l_k).astype(jnp.int32),
+                                  (att_b & d_k).astype(jnp.int32)], axis=1)
+                bks = bks + jax.ops.segment_sum(
+                    cols, b["snd_src"], num_segments=m + 1)[:m]
+                att_b = att_b & ~(l_k | d_k)
             staged[str(off)] = jnp.concatenate([
                 _bits_i32(pay_b),
                 _bits_i32(avail_b)[:, None],
                 tch_b[:, None],
                 att_b[:, None].astype(jnp.int32)], axis=1)
-        return staged
+        return staged, bks
+
+    def _interior_kills(self, st, seed, t_pad, steps_pad, x_act):
+        """Kill mask + per-process ``(m, 2)`` [loss, dead] counts for this
+        window's interior sends, from the same canonical-eid draws as the
+        unsharded engine.  Boundary and padding rows carry the m sentinel
+        in ``row_src``, so their counts fall into the spare segment (and
+        their garbage draws are masked by ``x_act``)."""
+        loss_kill, dead_kill = self.core.fault_masks(
+            seed, t_pad[st["row_src"]], steps_pad[st["row_src"]],
+            st["row_canon"], st["row_loss"], st["row_flap"],
+            self.faults.flap_period, st["row_dead"])
+        cols = jnp.stack([(x_act & loss_kill).astype(jnp.int32),
+                          (x_act & dead_kill).astype(jnp.int32)], axis=1)
+        ks = jax.ops.segment_sum(cols, st["row_src"],
+                                 num_segments=self._m + 1)[:self._m]
+        return loss_kill | dead_kill, ks
 
     def _close_window(self, st, u, active, drained_r, *, release: bool):
         """Shared window tail with mesh release reductions; mid-superstep
@@ -501,6 +578,8 @@ class ShardedJaxEngine(JaxEngine):
         comm = cfg.mode != AsyncMode.NO_COMM
         seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
+        if self._any_crashed:
+            active = active & ~st["crashed"]
         # sentinel-padded per-process vectors: index m = inactive dummy
         t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
         act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
@@ -520,22 +599,36 @@ class ShardedJaxEngine(JaxEngine):
             ptouch_pad = jnp.concatenate([u["ptouch"],
                                           jnp.zeros(1, jnp.int32)])
             steps_pad = jnp.concatenate([steps, jnp.zeros(1, jnp.int32)])
-            staged = self._stage_offsets(st, t_pad, act_pad, eo_pad,
-                                         ptouch_pad, seed, steps_pad)
+            staged, bks = self._stage_offsets(st, t_pad, act_pad, eo_pad,
+                                              ptouch_pad, seed, steps_pad)
             # interior-only send attempt (drop iff full)
             lat_row = st["row_lat"] * lognormal_factor(
                 cfg.latency_sigma, seed, STREAM_LAT, st["row_canon"],
                 steps_pad[st["row_src"]])
             x_act = act_pad[st["row_src"]] & st["row_interior"]
+            send_act = x_act
+            if self._has_faults:
+                kill, iks = self._interior_kills(st, seed, t_pad,
+                                                 steps_pad, x_act)
+                send_act = x_act & ~kill
             sp = self.core.send_edge(
-                u, t_pad[st["row_src"]] + lat_row, x_act, jnp.float32(0.0),
-                ptouch_pad[st["row_rev"]],
+                u, t_pad[st["row_src"]] + lat_row, send_act,
+                jnp.float32(0.0), ptouch_pad[st["row_rev"]],
                 eo_pad[st["row_src"], st["row_out_slot"]],
                 st["row_src"], m)
             u.update(sp.rings)
-            u.update(c_att=carry["c_att"] + sp.sums[:, 0],
-                     c_ok=carry["c_ok"] + sp.sums[:, 1],
-                     c_drop=carry["c_drop"] + sp.sums[:, 2])
+            if self._has_faults:
+                ks = bks + iks
+                killed = ks[:, 0] + ks[:, 1]
+                u.update(c_att=carry["c_att"] + sp.sums[:, 0] + killed,
+                         c_ok=carry["c_ok"] + sp.sums[:, 1],
+                         c_drop=carry["c_drop"] + sp.sums[:, 2] + killed,
+                         c_loss=carry["c_loss"] + ks[:, 0],
+                         c_dead=carry["c_dead"] + ks[:, 1])
+            else:
+                u.update(c_att=carry["c_att"] + sp.sums[:, 0],
+                         c_ok=carry["c_ok"] + sp.sums[:, 1],
+                         c_drop=carry["c_drop"] + sp.sums[:, 2])
         return self._close_window(st, u, active, drained_r,
                                   release=False), staged
 
@@ -554,6 +647,8 @@ class ShardedJaxEngine(JaxEngine):
         comm = cfg.mode != AsyncMode.NO_COMM
         seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
+        if self._any_crashed:
+            active = active & ~st["crashed"]
         t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
         act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
         u = dict(carry)
@@ -572,8 +667,8 @@ class ShardedJaxEngine(JaxEngine):
             ptouch_pad = jnp.concatenate([u["ptouch"],
                                           jnp.zeros(1, jnp.int32)])
             steps_pad = jnp.concatenate([steps, jnp.zeros(1, jnp.int32)])
-            own = self._stage_offsets(st, t_pad, act_pad, eo_pad,
-                                      ptouch_pad, seed, steps_pad)
+            own, bks = self._stage_offsets(st, t_pad, act_pad, eo_pad,
+                                           ptouch_pad, seed, steps_pad)
             # --- payload hop: ONE packed ppermute per offset for all W ----
             staged_l, staged_r = {}, {}
             for off in self._offsets:
@@ -594,6 +689,10 @@ class ShardedJaxEngine(JaxEngine):
             int_avail = t_pad[st["row_src"]] + lat_row
             int_act = act_pad[st["row_src"]] & st["row_interior"]
             int_tch = ptouch_pad[st["row_rev"]]
+            if self._has_faults:
+                kill, iks = self._interior_kills(st, seed, t_pad,
+                                                 steps_pad, int_act)
+                int_act = int_act & ~kill
 
             rings = {key: u[key] for key in
                      ("q_avail", "q_touch", "q_head", "q_size", "q_pay")}
@@ -615,9 +714,20 @@ class ShardedJaxEngine(JaxEngine):
                     (att & ~ok).astype(jnp.int32).sum(0)], axis=1)
                 send_sums = send_sums + jax.ops.segment_sum(
                     cols_b, b["snd_src"], num_segments=m + 1)[:m]
-            u.update(c_att=carry["c_att"] + send_sums[:, 0],
-                     c_ok=carry["c_ok"] + send_sums[:, 1],
-                     c_drop=carry["c_drop"] + send_sums[:, 2])
+            if self._has_faults:
+                # killed sends (att bit zeroed at staging) fold here: they
+                # count attempted + dropped + cause, never ok
+                ks = bks + iks
+                killed = ks[:, 0] + ks[:, 1]
+                u.update(c_att=carry["c_att"] + send_sums[:, 0] + killed,
+                         c_ok=carry["c_ok"] + send_sums[:, 1],
+                         c_drop=carry["c_drop"] + send_sums[:, 2] + killed,
+                         c_loss=carry["c_loss"] + ks[:, 0],
+                         c_dead=carry["c_dead"] + ks[:, 1])
+            else:
+                u.update(c_att=carry["c_att"] + send_sums[:, 0],
+                         c_ok=carry["c_ok"] + send_sums[:, 1],
+                         c_drop=carry["c_drop"] + send_sums[:, 2])
         return self._close_window(st, u, active, drained_r, release=True)
 
     def _push_passes(self, st, rings, bufs, int_pay, int_avail, int_act,
@@ -731,6 +841,8 @@ class ShardedJaxEngine(JaxEngine):
         comm = cfg.mode != AsyncMode.NO_COMM
         seed, t = carry["seed"], carry["t"]
         active = ~carry["done"] & ~carry["waiting"]
+        if self._any_crashed:
+            active = active & ~st["crashed"]
         t_pad = jnp.concatenate([t, jnp.zeros(1, t.dtype)])
         act_pad = jnp.concatenate([active, jnp.zeros(1, bool)])
         u = dict(carry)
@@ -749,8 +861,8 @@ class ShardedJaxEngine(JaxEngine):
             ptouch_pad = jnp.concatenate([u["ptouch"],
                                           jnp.zeros(1, jnp.int32)])
             steps_pad = jnp.concatenate([steps, jnp.zeros(1, jnp.int32)])
-            own = self._stage_offsets(st, t_pad, act_pad, eo_pad,
-                                      ptouch_pad, seed, steps_pad)
+            own, bks = self._stage_offsets(st, t_pad, act_pad, eo_pad,
+                                           ptouch_pad, seed, steps_pad)
 
             # interior send inputs for THIS window
             lat_row = st["row_lat"] * lognormal_factor(
@@ -760,6 +872,10 @@ class ShardedJaxEngine(JaxEngine):
             int_avail = t_pad[st["row_src"]] + lat_row
             int_act = act_pad[st["row_src"]] & st["row_interior"]
             int_tch = ptouch_pad[st["row_rev"]]
+            if self._has_faults:
+                kill, iks = self._interior_kills(st, seed, t_pad,
+                                                 steps_pad, int_act)
+                int_act = int_act & ~kill
 
             # --- push the shadow buffers staged at the PREVIOUS boundary --
             bufs = {str(off): u[f"fly_fwd_{off}"] for off in self._offsets}
@@ -782,9 +898,21 @@ class ShardedJaxEngine(JaxEngine):
                     (att & (1 - okb)).sum(0)], axis=1)
                 send_sums = send_sums + jax.ops.segment_sum(
                     cols_b, b["snd_src"], num_segments=m + 1)[:m]
-            u.update(c_att=carry["c_att"] + send_sums[:, 0],
-                     c_ok=carry["c_ok"] + send_sums[:, 1],
-                     c_drop=carry["c_drop"] + send_sums[:, 2])
+            if self._has_faults:
+                # kills are counted at stage time (this window), while the
+                # killed sends' att bits are zero for the rest of the
+                # pipeline — the deferred folds never see them
+                ks = bks + iks
+                killed = ks[:, 0] + ks[:, 1]
+                u.update(c_att=carry["c_att"] + send_sums[:, 0] + killed,
+                         c_ok=carry["c_ok"] + send_sums[:, 1],
+                         c_drop=carry["c_drop"] + send_sums[:, 2] + killed,
+                         c_loss=carry["c_loss"] + ks[:, 0],
+                         c_dead=carry["c_dead"] + ks[:, 1])
+            else:
+                u.update(c_att=carry["c_att"] + send_sums[:, 0],
+                         c_ok=carry["c_ok"] + send_sums[:, 1],
+                         c_drop=carry["c_drop"] + send_sums[:, 2])
 
             # --- dispatch the next hops, consumed at the NEXT boundary ----
             for off in self._offsets:
@@ -920,8 +1048,11 @@ class ShardedJaxEngine(JaxEngine):
             # pipelined early-exit probe (same pattern as JaxEngine): only
             # the *previous* dispatch's done reduction is read, so the host
             # never stalls the mesh on a fresh round-trip — at the cost of
-            # one state-invariant extra dispatch after the run completes
-            all_done = jnp.all(carry["done"])
+            # one state-invariant extra dispatch after the run completes.
+            # crashed processes never reach the horizon; the probe treats
+            # them as terminally stopped (position order, like the carry)
+            all_done = (jnp.all(carry["done"] | self._crashed_pos)
+                        if self._any_crashed else jnp.all(carry["done"]))
             if prev_done is not None and bool(prev_done):
                 break
             prev_done = all_done

@@ -57,7 +57,8 @@ from repro.core.slo import SloPolicy
 from repro.runtime.config import RunConfig
 from repro.runtime.engine import (ENGINES, make_engine, run_replicates,
                                   validate_run_config)
-from repro.runtime.faults import faulty_host
+from repro.runtime.faults import (crashed_host, faulty_host, flapping_host,
+                                  lossy_host)
 from repro.runtime.service import default_timeline, run_service
 from repro.runtime.simulator import SimConfig
 from repro.runtime.topologies import TOPOLOGIES, Topology, make_topology
@@ -70,13 +71,15 @@ _UNITS = {"simstep_period": ("us", 1e6), "simstep_latency": ("steps", 1.0),
 
 
 def make_app(name: str, n: int, simels: int, topology: Optional[Topology],
-             seed: int = 0):
+             seed: int = 0, initial_state=None):
     if name == "graphcolor":
         from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
         return GraphColorApp(
             GraphColorConfig(n_processes=n, nodes_per_process=simels,
-                             seed=seed), topology=topology)
+                             seed=seed), topology=topology,
+            initial_state=initial_state)
     if name == "evo":
+        # evo carries no state across service epochs yet; it restarts fresh
         from repro.apps.evo import EvoApp, EvoConfig
         return EvoApp(EvoConfig(n_processes=n, cells_per_process=simels,
                                 seed=seed), topology=topology)
@@ -95,7 +98,8 @@ def _sim_config(args, n: int, mode: AsyncMode = AsyncMode.BEST_EFFORT,
                 base_latency=args.base_latency,
                 intra_node_latency=args.intra_latency,
                 snapshot_warmup=warmup, snapshot_interval=interval,
-                buffer_capacity=args.buffer, seed=args.seed)
+                buffer_capacity=args.buffer, seed=args.seed,
+                barrier_timeout=args.barrier_timeout)
     base.update(overrides)
     return SimConfig(**base)
 
@@ -227,6 +231,22 @@ def run_intensivity(args) -> List[dict]:
     return rows
 
 
+def _fault_model(args, topo, host):
+    """Build the --fault-kind model for the faults family (DESIGN.md §14):
+    slowdown = the paper's degraded host (compute + link factors), crash =
+    the host's processes die without churn splicing (neighbors keep
+    sending into dead ducts), lossy = clique links drop each message with
+    probability --loss-prob, flap = clique links cycle down/up on the
+    deterministic hash schedule with down fraction --loss-prob."""
+    if args.fault_kind == "crash":
+        return crashed_host(topo, host)
+    if args.fault_kind == "lossy":
+        return lossy_host(topo, host, args.loss_prob)
+    if args.fault_kind == "flap":
+        return flapping_host(topo, host, args.loss_prob)
+    return faulty_host(topo, host, args.fault_compute, args.fault_link)
+
+
 def run_faults(args) -> List[dict]:
     n = args.procs[0]
     topo = _topology_for(args, n)
@@ -236,14 +256,12 @@ def run_faults(args) -> List[dict]:
     for p in victims:
         clique.update(topo.clique_of(p))
     print(f"[faults] app={args.app} topology={topo.name} n={n} "
-          f"faulty host={host} ({len(victims)} procs, clique of "
-          f"{len(clique)}) engine={args.engine}")
+          f"faulty host={host} kind={args.fault_kind} ({len(victims)} "
+          f"procs, clique of {len(clique)}) engine={args.engine}")
 
     rows = []
     for label, faults in (("without_fault", None),
-                          ("with_fault", faulty_host(topo, host,
-                                                     args.fault_compute,
-                                                     args.fault_link))):
+                          ("with_fault", _fault_model(args, topo, host))):
         app = make_app(args.app, n, args.simels, topo, args.seed)
         res = make_engine(args.run, app, _sim_config(args, n),
                           faults).run()
@@ -260,7 +278,8 @@ def run_faults(args) -> List[dict]:
                      if p not in clique],
         }
         row = dict(family="faults", label=label, n=n, topology=topo.name,
-                   faulty_host=host, engine=args.engine,
+                   faulty_host=host, fault_kind=args.fault_kind,
+                   engine=args.engine,
                    run=args.run.to_dict(),
                    qos={g: aggregate_reports(reps, PERCENTILES)
                         for g, reps in groups.items()},
@@ -301,8 +320,9 @@ def run_serve(args) -> List[dict]:
           f"fail_p99<={policy.failure_p99_budget})")
     out = run_service(
         args.run,
-        lambda topology, s: make_app(args.app, topology.n, args.simels,
-                                     topology, s),
+        lambda topology, s, init_state=None: make_app(
+            args.app, topology.n, args.simels, topology, s,
+            initial_state=init_state),
         cfg, topo, timeline, policy)
     for ep in out["epochs"]:
         print(f"  epoch {ep['epoch']}: t=[{ep['t_start']:.4f}, "
@@ -415,6 +435,28 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--faulty-host", type=int, default=None)
     p.add_argument("--fault-compute", type=float, default=30.0)
     p.add_argument("--fault-link", type=float, default=30.0)
+    p.add_argument("--fault-kind", default="slowdown",
+                   choices=["slowdown", "crash", "lossy", "flap"],
+                   help="faults-family fault type (DESIGN.md §14): "
+                        "slowdown = the paper's degraded host "
+                        "(--fault-compute/--fault-link factors), crash = "
+                        "the host's processes die mid-run (no churn "
+                        "splicing — neighbors keep sending into dead "
+                        "ducts), lossy = clique links drop messages with "
+                        "probability --loss-prob, flap = clique links "
+                        "cycle down/up deterministically with down "
+                        "fraction --loss-prob")
+    p.add_argument("--loss-prob", type=float, default=0.05,
+                   help="per-send drop probability for --fault-kind lossy "
+                        "(and the down fraction for flap)")
+    p.add_argument("--barrier-timeout", type=float, default=0.0,
+                   help="quarantine threshold tau in virtual seconds for "
+                        "barrier modes (DESIGN.md §14): a process whose "
+                        "next barrier arrival lags the cohort front by "
+                        "more than tau is excluded from the release (and "
+                        "readmitted with hysteresis once it catches up "
+                        "within tau/2).  0 = plain barriers; crashed "
+                        "processes are excluded under any finite tau")
     # --- live-service family (--family serve) ---------------------------
     p.add_argument("--traffic", default="poisson",
                    choices=["poisson", "bursty", "diurnal"],

@@ -20,9 +20,11 @@ rather than a batch job):
     The run is split into epochs at event boundaries; each epoch patches
     the pristine topology (``topologies.patch_topology`` splices the duct
     rings of departed processes closed) and composes the active host
-    faults, then runs on the selected engine.  Application state restarts
-    per epoch — the harness measures QoS of the serving fabric under
-    churn, not application convergence across membership changes.
+    faults, then runs on the selected engine.  Processes present on both
+    sides of a membership change carry their application state across the
+    boundary (``SimResult.app_state`` round-trips through the builder's
+    ``initial_state`` argument); departed processes re-initialize fresh
+    on rejoin.
   * **SLO verdicts** — per-epoch QoS timeseries rows are shifted onto the
     global clock, concatenated, and scored by
     :func:`repro.core.slo.evaluate_timeseries`.
@@ -149,7 +151,11 @@ def cum_arrivals(cfg: SimConfig, seed: int, n: int) -> np.ndarray:
     counts = arrival_table(cfg, seed, n)
     cum = np.zeros((n, counts.shape[1] + 1), dtype=np.int64)
     np.cumsum(counts, axis=1, out=cum[:, 1:])
-    assert cum.max(initial=0) < 2 ** 31, "arrival totals overflow int32"
+    if cum.max(initial=0) >= 2 ** 31:
+        raise ValueError(
+            "arrival totals overflow int32: lower arrival_rate or "
+            "duration (max cumulative count "
+            f"{int(cum.max(initial=0))})")
     return cum.astype(np.int32)
 
 
@@ -219,35 +225,70 @@ def run_service(run: RunConfig,
          "service": {"arrivals": A, "served": S, "backlog": A - S}}
 
     ``epochs`` logs each membership/fault regime (bounds, live process
-    count, absent original pids, faulty hosts).  Application state
-    restarts at each epoch boundary — the harness measures serving-fabric
-    QoS under churn, not cross-epoch application convergence.
+    count, absent original pids, faulty hosts).  When the app exports
+    carriable state (``SimResult.app_state``) and ``app_builder`` accepts
+    a third ``initial_state`` argument, processes present on both sides
+    of an epoch boundary resume from their previous epoch's final state;
+    departed-then-rejoined processes re-initialize fresh.  Builders with
+    the legacy two-argument signature keep the old restart-every-epoch
+    behavior.
     """
     # deferred: repro.runtime.engine imports this module's consumers
+    import inspect
+
     from repro.runtime.engine import run_replicates
 
     timeline = timeline or FaultTimeline()
     policy = policy or SloPolicy()
+    timeline.validate(topo)
     bounds = timeline.boundaries(cfg.duration)
     edges = [0.0, *bounds, cfg.duration]
+    try:
+        carries = len(inspect.signature(app_builder).parameters) >= 3
+    except (TypeError, ValueError):
+        carries = False
 
     epochs: List[dict] = []
     all_rows: List[dict] = []
     pooled_qos: List = []
     totals = {"arrivals": 0, "served": 0, "backlog": 0}
     interval = 0
+    #: per replicate position: {original pid: app state} from the previous
+    #: epoch (None before the first epoch or when the app exports nothing)
+    carried: Optional[List[dict]] = None
     for ei in range(len(edges) - 1):
         t0, t1 = edges[ei], edges[ei + 1]
         absent = timeline.absent_pids(t0)
-        patched, _ = patch_topology(topo, absent)
-        faults = timeline.fault_model(patched, t0)
+        patched, pid_map = patch_topology(topo, absent)
+        faults = timeline.fault_model(patched, t0, pid_map=pid_map)
         ep_len = t1 - t0
         ep_cfg = dataclasses.replace(
             cfg, duration=ep_len,
             snapshot_warmup=min(cfg.snapshot_warmup, ep_len / 6),
-            seed=cfg.seed + 7919 * ei)
+            seed=cfg.seed + 7919 * ei,
+            carry_app_state=carries)
+        seeds = run.seeds(ep_cfg.seed)
+        init_state = None
+        if carries and carried is not None:
+            # survivors resume: re-key each replicate's carried state from
+            # original to this epoch's patched pids (departed pids fall out
+            # of pid_map and so re-initialize fresh on rejoin), indexed by
+            # the replicate's seed so one app serves a whole batch
+            init_state = {
+                seeds[i]: {pid_map[p]: st for p, st in carried[i].items()
+                           if p in pid_map}
+                for i in range(len(seeds))}
+        build = ((lambda s: app_builder(patched, s, init_state)) if carries
+                 else (lambda s: app_builder(patched, s)))
         results = run_replicates(
-            run, lambda s: app_builder(patched, s), ep_cfg, faults=faults)
+            run, build, ep_cfg, seeds=seeds, faults=faults)
+        inv_map = {v: k for k, v in pid_map.items()}
+        if all(res.app_state is not None for res in results):
+            # back to original pid numbering for the next epoch's re-key
+            carried = [{inv_map[p]: st for p, st in res.app_state.items()}
+                       for res in results]
+        else:
+            carried = None
 
         reps_lists = [_shift_reports(reps, t0)
                       for res in results

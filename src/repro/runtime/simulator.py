@@ -24,10 +24,18 @@ import heapq
 import math
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.modes import AsyncMode
 from repro.core.qos import Counters, QosReport, report
 from repro.runtime.channels import Duct
-from repro.runtime.faults import FaultModel, Jitter
+from repro.runtime.faults import (
+    STREAM_FLAP,
+    STREAM_LOSS,
+    FaultModel,
+    Jitter,
+    np_hash_uniform,
+)
 
 _BARRIER_MODES = (AsyncMode.BARRIER_EVERY_STEP, AsyncMode.ROLLING_BARRIER,
                   AsyncMode.FIXED_BARRIER)
@@ -51,6 +59,12 @@ class SimConfig:
     buffer_capacity: int = 64
     barrier_base: float = 2e-5
     barrier_per_log2: float = 1.5e-5   # sync cost grows with CPU count
+    # barrier quarantine (DESIGN.md §14): > 0 releases a barrier without
+    # processes whose next arrival lags the cohort front by more than this
+    # many virtual seconds (a crashed process's next arrival is +inf, so any
+    # finite timeout excludes it); quarantined processes rejoin after
+    # catching up to within timeout/2 (hysteresis).  0 = plain barrier.
+    barrier_timeout: float = 0.0
     rolling_quantum: float = 0.01      # mode 1 work chunk (10 ms, paper)
     fixed_interval: float = 0.25       # mode 2 sync timepoints
     snapshot_interval: float = 0.2     # QoS snapshot spacing
@@ -70,6 +84,12 @@ class SimConfig:
     arrival_period: float = 0.02       # diurnal: sinusoid period
     service_chunk: int = 4             # max queue items served per update
     per_item_cost: float = 2e-6        # compute seconds per served item
+    # export final app state into SimResult.app_state (when the app
+    # implements export_state).  Off by default: the snapshot copies the
+    # whole population's state per replicate, which batch sweeps never
+    # read; runtime/service.py turns it on to carry survivors' state
+    # across epoch boundaries.
+    carry_app_state: bool = False
 
 
 @dataclasses.dataclass
@@ -81,9 +101,18 @@ class SimResult:
     qos_by_process: Dict[int, List[QosReport]]
     dropped: int
     sent: int
+    #: drop attribution (DESIGN.md §14): ``dropped`` is the total across all
+    #: causes; these two split out lossy/flapping-link drops and sends toward
+    #: a crashed destination.  Capacity drops (full duct) are the remainder.
+    dropped_loss: int = 0
+    dropped_dead: int = 0
     #: live-service queue accounting (``cfg.arrival_rate > 0`` only):
     #: {"arrivals": [...], "served": [...], "backlog": [...]} per process
     service: Optional[dict] = None
+    #: final app state, {pid: state} — populated when the app exposes
+    #: ``export_state``; lets runtime/service.py carry survivors' state
+    #: across epoch boundaries instead of re-initializing every epoch
+    app_state: Optional[dict] = None
 
     @property
     def update_rate_per_cpu(self) -> float:
@@ -146,16 +175,32 @@ class Simulator:
         self._c_drop = [0] * n
         self._c_laden = [0] * n
         self._c_msgs = [0] * n
+        # drop-attribution counters (DESIGN.md §14): c_drop stays the TOTAL
+        # (capacity + loss + dead), these split out the non-capacity causes
+        self._c_loss = [0] * n
+        self._c_dead = [0] * n
+        self._crashed = [self.faults.is_crashed(pid) for pid in range(n)]
 
         self._touch: List[Dict[int, int]] = [
             {nb: 0 for nb in self.topology[pid]} for pid in range(n)]
         self.ducts: Dict[Tuple[int, int], Duct] = {}
+        # per-out-edge fault info, hoisted so the send loop sees one tuple:
+        # (duct, canonical eid, loss prob f32, flap frac f32, dst crashed)
+        self._out_info: List[Dict[int, tuple]] = [{} for _ in range(n)]
+        self._fault_sends = False
         duct_id = 0
         for src in range(n):
             for dst in self.topology[src]:
-                self.ducts[(src, dst)] = Duct(
+                duct = Duct(
                     cfg.buffer_capacity, self._latency_fn(src, dst, duct_id),
                     name=f"{src}->{dst}")
+                self.ducts[(src, dst)] = duct
+                loss = np.float32(self.faults.loss_prob(src, dst))
+                flap = np.float32(self.faults.flap_frac(src, dst))
+                dead = self._crashed[dst]
+                self._out_info[src][dst] = (duct, duct_id, loss, flap, dead)
+                if loss > 0 or flap > 0 or dead:
+                    self._fault_sends = True
                 duct_id += 1
         # pid -> [(neighbor, incoming duct)] in neighbor order, hoisted out
         # of the hot loop so events never hash (src, dst) tuples
@@ -165,6 +210,13 @@ class Simulator:
             i: [] for i in range(n)}
         self._barrier_arrivals: Dict[int, List[Tuple[int, float]]] = {}
         self._seq_active: Dict[int, int] = {0: n}  # barrier_seq -> live procs
+        # barrier-quarantine state (cfg.barrier_timeout > 0, DESIGN.md §14):
+        # next scheduled arrival per process (+inf for crashed — they never
+        # arrive), the global waiting set, and the sticky quarantine flags
+        self._arr_t = [math.inf if self._crashed[pid]
+                       else self._step_duration(pid, 0) for pid in range(n)]
+        self._waiting: Dict[int, float] = {}
+        self._quar = [False] * n
 
     # ------------------------------------------------------------------
     def _link_base(self, src: int, dst: int) -> float:
@@ -207,6 +259,8 @@ class Simulator:
             attempted_send_count=self._c_att[pid],
             successful_send_count=self._c_ok[pid],
             dropped_send_count=self._c_drop[pid],
+            loss_dropped_send_count=self._c_loss[pid],
+            dead_dropped_send_count=self._c_dead[pid],
             laden_pull_count=self._c_laden[pid],
             message_count=self._c_msgs[pid],
             pull_attempt_count=(self._steps[pid] * self._deg[pid]
@@ -274,10 +328,21 @@ class Simulator:
             item_cost = cfg.per_item_cost
             served = [0] * n
 
+        # crashed processes are never scheduled: they do no compute and take
+        # no snapshots, but the topology keeps their in-ducts alive so
+        # neighbors' sends surface as dead-destination delivery failures
         heap: List[Tuple[float, int, int]] = [
-            (self._step_duration(pid, 0), pid, pid) for pid in range(n)]
+            (self._step_duration(pid, 0), pid, pid) for pid in range(n)
+            if not self._crashed[pid]]
         heapq.heapify(heap)
         seq = n
+
+        fault_sends = self._fault_sends
+        out_info = self._out_info
+        c_loss, c_dead = self._c_loss, self._c_dead
+        quarantined = barriered and cfg.barrier_timeout > 0
+        seed = cfg.seed
+        flap_period = np.float32(self.faults.flap_period)
 
         while heap:
             t, _, pid = heappop(heap)
@@ -314,11 +379,41 @@ class Simulator:
             if comm and outputs:
                 n_ok = 0
                 n_drop = 0
-                for nb, payload in outputs.items():
-                    if ducts[(pid, nb)].try_send(payload, t, ptouch[nb]):
-                        n_ok += 1
-                    else:
-                        n_drop += 1  # counted at the drop site, not derived
+                if fault_sends:
+                    # typed-fault send path: the decision order (dead, then
+                    # flap, then loss, then capacity) and the draw keys
+                    # mirror window_core's vectorized masks bit-for-bit
+                    n_loss = 0
+                    n_dead = 0
+                    info = out_info[pid]
+                    for nb, payload in outputs.items():
+                        duct, eid, loss_p, flap_f, is_dead = info[nb]
+                        if is_dead:
+                            n_dead += 1
+                            continue
+                        if flap_f > 0:
+                            bucket = int(np.float32(t) / flap_period)
+                            if np_hash_uniform(seed, STREAM_FLAP, eid,
+                                               bucket) < flap_f:
+                                n_loss += 1
+                                continue
+                        if loss_p > 0 and np_hash_uniform(
+                                seed, STREAM_LOSS, eid, step) < loss_p:
+                            n_loss += 1
+                            continue
+                        if duct.try_send(payload, t, ptouch[nb]):
+                            n_ok += 1
+                        else:
+                            n_drop += 1
+                    c_loss[pid] += n_loss
+                    c_dead[pid] += n_dead
+                    n_drop += n_loss + n_dead
+                else:
+                    for nb, payload in outputs.items():
+                        if ducts[(pid, nb)].try_send(payload, t, ptouch[nb]):
+                            n_ok += 1
+                        else:
+                            n_drop += 1  # counted at the drop site, not derived
                 c_att[pid] += len(outputs)
                 c_ok[pid] += n_ok
                 c_drop[pid] += n_drop
@@ -334,9 +429,16 @@ class Simulator:
             # --- termination ------------------------------------------------
             if t >= duration:
                 done[pid] = True
-                self._seq_active[self._barrier_seq[pid]] -= 1
-                # release any barrier this process would have joined
-                seq = self._try_release_barriers(heap, seq)
+                if not quarantined:
+                    # cohort ledger only feeds _try_release_barriers; the
+                    # quarantine gate scans arrival times directly and its
+                    # releases never book processes into new sequences here
+                    self._seq_active[self._barrier_seq[pid]] -= 1
+                # release any barrier this process would have joined (a
+                # finishing process can also unblock a quarantine gate it
+                # was holding open mid-step)
+                seq = (self._try_release_quarantine(heap, seq) if quarantined
+                       else self._try_release_barriers(heap, seq))
                 continue
 
             # --- serve queued arrivals (continuing processes only) ----------
@@ -357,14 +459,24 @@ class Simulator:
 
             # --- scheduling / barriers --------------------------------------
             if barriered and self._barrier_due(pid, t):
-                b = self._barrier_seq[pid]
                 self._pending[pid] = pending
-                self._barrier_arrivals.setdefault(b, []).append((pid, t))
-                seq = self._try_release_barriers(heap, seq)
+                if quarantined:
+                    self._waiting[pid] = t
+                    seq = self._try_release_quarantine(heap, seq)
+                else:
+                    b = self._barrier_seq[pid]
+                    self._barrier_arrivals.setdefault(b, []).append((pid, t))
+                    seq = self._try_release_barriers(heap, seq)
             else:
                 d = base_compute * jitter_factor(pid, step) * cfactor[pid]
-                heappush(heap, (t + d + pending, seq, pid))
+                nt = t + d + pending
+                self._arr_t[pid] = nt
+                heappush(heap, (nt, seq, pid))
                 seq += 1
+                # a reschedule can push this process's next arrival past the
+                # quarantine limit — re-evaluate the gate it was holding open
+                if quarantined and self._waiting:
+                    seq = self._try_release_quarantine(heap, seq)
 
         updates = list(steps)
         qos_by_proc: Dict[int, List[QosReport]] = {}
@@ -393,8 +505,79 @@ class Simulator:
             qos_by_process=qos_by_proc,
             dropped=sum(self._c_drop),
             sent=sent,
+            dropped_loss=sum(self._c_loss),
+            dropped_dead=sum(self._c_dead),
             service=service,
+            app_state=(self.app.export_state(self.fragments)
+                       if cfg.carry_app_state
+                       and hasattr(self.app, "export_state") else None),
         )
+
+    # ------------------------------------------------------------------
+    def _try_release_quarantine(self, heap, seq) -> int:
+        """Barrier release under ``cfg.barrier_timeout`` (DESIGN.md §14).
+
+        The cohort front is the latest arrival among non-quarantined
+        waiting processes.  The barrier releases once every process is
+        done, waiting, quarantined, or *unreachable*: its next scheduled
+        arrival lags the front by more than the timeout.  A crashed
+        process's next arrival is +inf, so any finite timeout excludes it
+        — turning a crashed clique member from a full-swarm stall into a
+        QoS-visible degradation.  Quarantined processes still release
+        with the cohort when they do arrive (they ride along), but are
+        excluded from the front until they catch up to within timeout/2
+        (hysteresis, so a marginal straggler doesn't flap in and out).
+
+        ``window_core.close_window`` implements the same rule with the
+        same arithmetic for the vectorized engines.
+        """
+        tau = self.cfg.barrier_timeout
+        done = self._done
+        waiting = self._waiting
+        if not waiting:
+            return seq
+        quar = self._quar
+        arr_t = self._arr_t
+        core = [t for p, t in waiting.items() if not quar[p]]
+        ref = max(core) if core else max(waiting.values())
+        limit = ref + tau
+        for p in range(self.n):
+            if done[p] or quar[p] or p in waiting:
+                continue
+            if arr_t[p] <= limit:
+                return seq          # someone within reach: hold the barrier
+        # quarantine bookkeeping (before the release moves anyone): skipped
+        # processes enter quarantine; waiting quarantined processes that
+        # caught up to within tau/2 of the front are re-admitted
+        readmit = ref - tau / 2
+        for p in range(self.n):
+            if done[p]:
+                continue
+            if p in waiting:
+                if quar[p] and waiting[p] >= readmit:
+                    quar[p] = False
+            elif arr_t[p] > limit:
+                quar[p] = True
+        release = ref + self._barrier_cost()
+        members = sorted(waiting)
+        if release >= self.cfg.duration:
+            for p in members:
+                self._barrier_seq[p] += 1
+                self._last_release[p] = release
+                self._clock[p] = self.cfg.duration
+                self._done[p] = True
+        else:
+            for p in members:
+                self._barrier_seq[p] += 1
+                self._last_release[p] = release
+                d = (self._step_duration(p, self._steps[p])
+                     + self._pending[p])
+                nt = release + d
+                arr_t[p] = nt
+                heapq.heappush(heap, (nt, seq, p))
+                seq += 1
+        waiting.clear()
+        return seq
 
     # ------------------------------------------------------------------
     def _try_release_barriers(self, heap, seq) -> int:

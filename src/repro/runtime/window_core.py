@@ -52,6 +52,7 @@ from repro.kernels.duct_exchange.ops import (
     duct_send,
     duct_window,
 )
+from repro.runtime.faults import STREAM_FLAP, STREAM_LOSS  # noqa: F401
 from repro.runtime.simulator import SimResult
 
 #: modes whose processes stop at a barrier and wait for a global release
@@ -266,6 +267,26 @@ class WindowCore:
             f = jnp.where(u < cfg.stall_prob,
                           f * np.float32(cfg.stall_factor), f)
         return f * cfactor
+
+    def fault_masks(self, seed, t_src, steps_src, eids, loss, flap,
+                    flap_period, dead):
+        """Per-edge typed-fault send masks (DESIGN.md §14).
+
+        ``loss``/``flap`` are per-edge probabilities, ``dead`` marks edges
+        whose destination process is crashed.  Returns ``(loss_kill,
+        dead_kill)`` — disjoint bool masks (dead wins) to strip from the
+        send activity bits and fold into the attribution counters.  The
+        draws are keyed by canonical edge id + sender step count (loss) /
+        sender-time bucket (flap), so they are layout-, scheduler-, and
+        shard-invariant, and ``simulator.run``'s host-side twin makes the
+        identical decisions bit-for-bit on every engine.
+        """
+        lost = (loss > np.float32(0)) & (
+            hash_uniform(seed, STREAM_LOSS, eids, steps_src) < loss)
+        bucket = jnp.floor(t_src / np.float32(flap_period)).astype(jnp.int32)
+        flap_down = (flap > np.float32(0)) & (
+            hash_uniform(seed, STREAM_FLAP, eids, bucket) < flap)
+        return (lost | flap_down) & ~dead, dead
 
     # ------------------------------------------------------------------
     # State builders
@@ -674,7 +695,8 @@ class WindowCore:
     # Phase 3': stage (dense layout)
     # ------------------------------------------------------------------
     def stage_dense(self, carry, u, t, active, edges_out, lat,
-                    *, src, rev, out_slot, live, deg, spec: DenseSpec):
+                    *, src, rev, out_slot, live, deg, spec: DenseSpec,
+                    kill_masks=None):
         """Stage this window's sends on the dense layout: decide
         drop-iff-full NOW against the post-drain rings (exactly what the
         edge-major send attempt sees, so counters land in this window)
@@ -687,6 +709,14 @@ class WindowCore:
         src_c = jnp.clip(src, 0, n - 1)     # sentinel n on dead rows
         s_avail = t[src_c] + lat
         s_act = live & active[src_c]
+        if kill_masks is not None:
+            # typed faults (DESIGN.md §14): a lost / flapped / dead-bound
+            # send still counts as attempted (att_r covers every out-edge
+            # of an active sender) but never reaches the ring, so it folds
+            # into c_drop via att - ok exactly like a capacity drop — the
+            # loss_r/dead_r sums below attribute it
+            loss_kill, dead_kill = kill_masks
+            s_act = s_act & ~(loss_kill | dead_kill)
         s_touch = u["ptouch"][rev]
         s_pay = edges_out[src_c, out_slot]
         s_pos, s_acc = dense_stage(u["q_head"], u["q_size"], s_act,
@@ -694,21 +724,32 @@ class WindowCore:
         # acceptance of receiver p's own sends lives at its out-edge rows
         # rev[rows of p]; dead rows rev to themselves and contribute 0
         acc_out = s_acc[rev].astype(jnp.int32)
-        ok_r = jnp.zeros(spec.n_dst, jnp.int32)
+        cols = [acc_out]
+        if kill_masks is not None:
+            sender_act = (live & active[src_c]).astype(jnp.int32)
+            cols.append((loss_kill.astype(jnp.int32) * sender_act)[rev])
+            cols.append((dead_kill.astype(jnp.int32) * sender_act)[rev])
+        out_cols = jnp.stack(cols, axis=1)
+        sums_r = jnp.zeros((spec.n_dst, out_cols.shape[1]), jnp.int32)
         for b in spec.buckets:
             sl = slice(b.start, b.start + b.nb * b.deg)
-            ok_b = acc_out[sl].reshape(b.nb, b.deg).sum(axis=1)
+            sums_b = out_cols[sl].reshape(b.nb, b.deg, -1).sum(axis=1)
             if b.members is None:
-                ok_r = ok_r + ok_b
+                sums_r = sums_r + sums_b
             else:
-                ok_r = ok_r.at[b.members].add(ok_b, mode="drop")
+                sums_r = sums_r.at[b.members].add(sums_b, mode="drop")
+        ok_r = sums_r[:, 0]
         att_r = jnp.where(active, deg, 0)
-        return dict(q_size=u["q_size"] + s_acc,
-                    c_att=carry["c_att"] + att_r,
-                    c_ok=carry["c_ok"] + ok_r,
-                    c_drop=carry["c_drop"] + att_r - ok_r,
-                    stage_pos=s_pos, stage_acc=s_acc, stage_avail=s_avail,
-                    stage_touch=s_touch, stage_pay=s_pay)
+        out = dict(q_size=u["q_size"] + s_acc,
+                   c_att=carry["c_att"] + att_r,
+                   c_ok=carry["c_ok"] + ok_r,
+                   c_drop=carry["c_drop"] + att_r - ok_r,
+                   stage_pos=s_pos, stage_acc=s_acc, stage_avail=s_avail,
+                   stage_touch=s_touch, stage_pay=s_pay)
+        if kill_masks is not None:
+            out["c_loss"] = carry["c_loss"] + sums_r[:, 1]
+            out["c_dead"] = carry["c_dead"] + sums_r[:, 2]
+        return out
 
     # ------------------------------------------------------------------
     # Phase 4: close window
@@ -806,12 +847,30 @@ class WindowCore:
             pending_saved = jnp.where(due, pending, pending_saved)
             t = jnp.where(active & ~newly_done & ~due,
                           t + d_next + pending, t)
+            quarantined = "quar" in u
+            tau = np.float32(cfg.barrier_timeout)
             if release is not None:
                 if release.staged:
                     # pipelined: apply the decision issued one boundary
                     # earlier (frozen cohort — see PipelinedRelease)
                     release_ready = u["rel_ready"]
                     release_t = u["rel_t"]
+                    if quarantined:
+                        ref = u["rel_ref"]
+                elif quarantined:
+                    # quarantine release (DESIGN.md §14): a non-waiting,
+                    # non-done process's clock is its next barrier arrival,
+                    # so "unreachable" == next arrival lags the cohort
+                    # front (ref) by more than the timeout; crashed clocks
+                    # sit at +inf and any finite tau excludes them
+                    quar0 = u["quar"]
+                    ref = self._quarantine_ref(release, t, waiting, quar0)
+                    stopped = waiting | done
+                    unreachable = ~stopped & (t > ref + tau)
+                    release_ready = (
+                        release.any_waiting(waiting) &
+                        release.all_stopped(stopped | quar0 | unreachable))
+                    release_t = ref + np.float32(self.barrier_cost)
                 else:
                     release_ready = (release.all_stopped(waiting | done) &
                                      release.any_waiting(waiting))
@@ -819,6 +878,17 @@ class WindowCore:
                         jnp.where(waiting, t, -jnp.inf)) +
                         np.float32(self.barrier_cost))
                 rel = release_ready & waiting
+                if quarantined:
+                    # hysteresis, evaluated on the pre-release state: a
+                    # quarantined member that made it to the barrier within
+                    # tau/2 of the front is readmitted; a straggler whose
+                    # next arrival exceeds ref + tau is newly quarantined
+                    quar = u["quar"]
+                    readmit = waiting & quar & (
+                        t >= ref - tau * np.float32(0.5))
+                    newq = ~done & ~waiting & (t > ref + tau)
+                    quar = jnp.where(release_ready,
+                                     (quar & ~readmit) | newq, quar)
                 # horizon snap: a cohort released at or past the horizon is
                 # done at the horizon clock — no engine schedules (and the
                 # event oracle no longer executes) a post-horizon update,
@@ -841,21 +911,43 @@ class WindowCore:
                    pending=pending_saved, snap=snap, snap_idx=snap_idx)
         if served is not None:
             out["served"] = served
+        if barriered and release is not None and quarantined:
+            out["quar"] = quar
         if release is not None and release.staged and barriered:
             # store fresh post-release reductions for the next boundary
-            fresh_ready = (release.all_stopped(waiting | done) &
-                           release.any_waiting(waiting))
-            fresh_t = (release.max_time(jnp.where(waiting, t, -jnp.inf)) +
-                       np.float32(self.barrier_cost))
+            if quarantined:
+                fref = self._quarantine_ref(release, t, waiting, quar)
+                fstopped = waiting | done
+                funreach = ~fstopped & (t > fref + tau)
+                fresh_ready = (
+                    release.any_waiting(waiting) &
+                    release.all_stopped(fstopped | quar | funreach))
+                fresh_t = fref + np.float32(self.barrier_cost)
+                out["rel_ref"] = fref.reshape(u["rel_ref"].shape)
+            else:
+                fresh_ready = (release.all_stopped(waiting | done) &
+                               release.any_waiting(waiting))
+                fresh_t = (release.max_time(
+                    jnp.where(waiting, t, -jnp.inf)) +
+                    np.float32(self.barrier_cost))
             out.update(rel_ready=fresh_ready.reshape(u["rel_ready"].shape),
                        rel_t=fresh_t.reshape(u["rel_t"].shape))
         return out
+
+    def _quarantine_ref(self, release, t, waiting, quar):
+        """Cohort front for the quarantine gate: max waiting clock over the
+        non-quarantined core, falling back to the full waiting set when
+        every waiting member is quarantined (so an all-quarantined cohort
+        still releases rather than stalling)."""
+        core = release.max_time(jnp.where(waiting & ~quar, t, -jnp.inf))
+        full = release.max_time(jnp.where(waiting, t, -jnp.inf))
+        return jnp.where(core == -jnp.inf, full, core)
 
     # ------------------------------------------------------------------
     # QoS assembly
     # ------------------------------------------------------------------
     def assemble(self, carry, r: int, deg: np.ndarray,
-                 quality: float) -> SimResult:
+                 quality: float, app_state=None) -> SimResult:
         """Numpy-vectorized QoS assembly: all report fields for all
         (process, window) samples come from whole-array ops over the
         snapshot deltas — the python loop only constructs the result
@@ -922,6 +1014,11 @@ class WindowCore:
             qos=all_qos,
             qos_by_process=qos_by_proc,
             dropped=int(np.sum(carry["c_drop"][r])),
+            dropped_loss=(int(np.sum(carry["c_loss"][r]))
+                          if "c_loss" in carry else 0),
+            dropped_dead=(int(np.sum(carry["c_dead"][r]))
+                          if "c_dead" in carry else 0),
             sent=int(np.sum(carry["c_att"][r])),
             service=service,
+            app_state=app_state,
         )

@@ -40,7 +40,8 @@ from typing import Optional
 
 from repro.core.modes import AsyncMode
 from repro.runtime.engine import make_engine
-from repro.runtime.faults import FaultModel
+from repro.runtime.faults import (FaultModel, crashed_host, flapping_host,
+                                  lossy_host)
 from repro.runtime.simulator import SimConfig
 from repro.runtime.topologies import make_topology
 from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
@@ -116,6 +117,12 @@ def jittered_cfg(duration: float = 0.05, seed: int = 0, **kw) -> SimConfig:
     return SimConfig(**base)
 
 
+#: dyadic quarantine timeout for crash-under-barrier scenarios: one
+#: latency quantum above the dyadic barrier skew, so only the crashed
+#: clique (+inf arrivals) is ever excluded from a release
+QUARANTINE_TAU = 2.0 ** -10
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One conformance scenario: topology x mode x fault injection.
@@ -127,12 +134,27 @@ class Scenario:
                 so BEST_EFFORT remains exact under dyadic configs
       victim8   process 1 computes 8x slower — only exact under barrier
                 modes, whose releases re-synchronize the victim
+      crash0    every process on host 0 is crashed (dead-destination
+                drops; under barrier modes pair with ``barrier_timeout``
+                or the cohort never releases)
+      lossy25   host 0's links drop each message w.p. 0.25 (hash-drawn
+                per canonical edge id x send count, DESIGN.md §14)
+      flap50    host 0's links are down half of each flap period on the
+                deterministic hash schedule
+
+    Loss and flap kill decisions are clock-free hash draws, so they stay
+    exact wherever the underlying (topology, mode) cell is exact; cells
+    where best-effort clock skew would reorder *send counts* (cliques
+    flap, anything on smallworld) are pinned under barrier modes only —
+    the same windowed-time approximation that keeps victim8 off
+    best-effort.
     """
     name: str
     topology: str
     mode: AsyncMode = AsyncMode.BEST_EFFORT
     faults: str = "none"
     n: int = 16
+    barrier_timeout: float = 0.0
 
     def seed(self) -> int:
         return case_seed(self.topology)
@@ -141,7 +163,8 @@ class Scenario:
         return gc_app(self.n, self.topology, seed=self.seed())
 
     def config(self) -> SimConfig:
-        return dyadic_cfg(mode=self.mode, seed=self.seed())
+        return dyadic_cfg(mode=self.mode, seed=self.seed(),
+                          barrier_timeout=self.barrier_timeout)
 
     def fault_model(self) -> Optional[FaultModel]:
         if self.faults == "none":
@@ -151,6 +174,13 @@ class Scenario:
                 compute_slowdown={p: 2.0 for p in range(self.n)})
         if self.faults == "victim8":
             return FaultModel(compute_slowdown={1: 8.0})
+        topo = make_topology(self.topology, self.n)
+        if self.faults == "crash0":
+            return crashed_host(topo, 0)
+        if self.faults == "lossy25":
+            return lossy_host(topo, 0, 0.25)
+        if self.faults == "flap50":
+            return flapping_host(topo, 0, 0.5)
         raise ValueError(f"unknown fault tag {self.faults!r}")
 
 
@@ -172,6 +202,35 @@ EXACT_SCENARIOS = (
     Scenario("ring-no-comm", "ring", mode=AsyncMode.NO_COMM),
     Scenario("ring-rolling-barrier", "ring", mode=AsyncMode.ROLLING_BARRIER),
     Scenario("torus-fixed-barrier", "torus", mode=AsyncMode.FIXED_BARRIER),
+    # crash / lossy / flap (DESIGN.md §14) across all four topologies.
+    # Best-effort cells are limited to (topology, fault) pairs whose send
+    # counts are skew-invariant; the rest ride barrier modes, and every
+    # crash-under-barrier cell quarantines (a zero timeout never releases)
+    Scenario("ring-best-effort-lossy", "ring", faults="lossy25"),
+    Scenario("torus-best-effort-lossy", "torus", faults="lossy25"),
+    Scenario("cliques-best-effort-lossy", "cliques", faults="lossy25"),
+    Scenario("smallworld-barrier-lossy", "smallworld",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="lossy25"),
+    Scenario("ring-best-effort-flap", "ring", faults="flap50"),
+    Scenario("torus-barrier-flap", "torus",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="flap50"),
+    Scenario("cliques-barrier-flap", "cliques",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="flap50"),
+    Scenario("smallworld-barrier-flap", "smallworld",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="flap50"),
+    Scenario("torus-best-effort-crash", "torus", faults="crash0"),
+    Scenario("ring-barrier-crash-quarantine", "ring",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="crash0",
+             barrier_timeout=QUARANTINE_TAU),
+    Scenario("cliques-rolling-crash-quarantine", "cliques",
+             mode=AsyncMode.ROLLING_BARRIER, faults="crash0",
+             barrier_timeout=QUARANTINE_TAU),
+    Scenario("torus-fixed-crash-quarantine", "torus",
+             mode=AsyncMode.FIXED_BARRIER, faults="crash0",
+             barrier_timeout=QUARANTINE_TAU),
+    Scenario("smallworld-barrier-crash-quarantine", "smallworld",
+             mode=AsyncMode.BARRIER_EVERY_STEP, faults="crash0",
+             barrier_timeout=QUARANTINE_TAU),
 )
 
 #: scenario name -> Scenario, for subprocess scripts that receive names

@@ -662,6 +662,133 @@ def test_shadow_buffer_properties_seeded(seed, n, d, C, max_pops, steps):
     run_shadow_sequence(seed, n, d, C, max_pops, steps)
 
 
+def run_fault_mask_sequence(seed: int, n: int, d: int, C: int,
+                            max_pops: int, steps: int):
+    """Typed-fault send kills (``WindowCore.fault_masks``, DESIGN.md §14)
+    composed with the edge-major phases, under the mirror-queue oracle
+    with full drop-attribution books:
+
+      determinism    the masks are pure counter hashes — the same
+                     (seed, clock, step count, edge id) inputs reproduce
+                     them bitwise on a second call
+      disjointness   loss_kill and dead_kill never overlap (dead wins);
+                     clean live edges (loss == flap == 0) are never
+                     loss-killed
+      totality       dead edges kill every attempt; loss == 1 edges kill
+                     every attempt that isn't already dead
+      conservation   attempted == delivered + in-flight +
+                     capacity_dropped + loss_dropped + dead_dropped,
+                     per edge, every step — killed sends never enter a
+                     ring, so they can neither deliver nor occupy slots
+    """
+    rng = np.random.default_rng(seed)
+    core = _make_core(n, C, max_pops)
+    E = n * d
+    dst = (np.arange(E) // d).astype(np.int32)
+    halo_key = (dst * 4 + (np.arange(E) % d) % 4).astype(np.int32)
+    src = ((np.arange(E) * 7 + 3) % n).astype(np.int32)
+    eids = jnp.arange(E, dtype=jnp.int32)
+    # per-edge fault assignment: clean / lossy / certain-loss / flapping /
+    # dead edges all present (modulo tiny E) so every branch is exercised
+    loss_e = rng.choice(np.float32([0.0, 0.35, 1.0]), E,
+                        p=[0.5, 0.3, 0.2]).astype(np.float32)
+    flap_e = np.where(rng.random(E) < 0.3, np.float32(0.5),
+                      np.float32(0.0))
+    dead_e = rng.random(E) < 0.25
+    flap_period = 2.0
+    fseed = seed ^ 0x5EED
+
+    carry = dict(core.edge_rings(E))
+    carry.update(halo=jnp.zeros((n, 4, 1), jnp.int32),
+                 c_msgs=jnp.zeros(n, jnp.int32),
+                 c_laden=jnp.zeros(n, jnp.int32),
+                 c_touch=jnp.zeros(n, jnp.int32))
+    mirror = [collections.deque() for _ in range(E)]
+    att_tot = np.zeros(E, np.int64)
+    acc_tot = np.zeros(E, np.int64)
+    cap_tot = np.zeros(E, np.int64)
+    loss_tot = np.zeros(E, np.int64)
+    dead_tot = np.zeros(E, np.int64)
+    drain_tot = np.zeros(E, np.int64)
+    steps_n = np.zeros(n, np.int32)
+    now = np.zeros(n, np.float32)
+
+    for _ in range(steps):
+        now = (now + rng.uniform(0.5, 1.5, n)).astype(np.float32)
+        ract = rng.random(n) < 0.8
+        upd, _ = core.drain(
+            carry, jnp.asarray(now)[jnp.asarray(dst)],
+            jnp.asarray(ract)[jnp.asarray(dst)],
+            halo_key=jnp.asarray(halo_key), n_halo=n * 4,
+            dst=jnp.asarray(dst), n_dst=n)
+        u = dict(carry)
+        u.update(upd)
+        for e in range(E):
+            p = dst[e]
+            expect = 0
+            if ract[p]:
+                for avail, _tch in list(mirror[e])[:max_pops]:
+                    if avail <= now[p]:
+                        expect += 1
+                    else:
+                        break
+            for _ in range(expect):
+                mirror[e].popleft()
+            drain_tot[e] += expect
+            assert int(np.asarray(u["q_size"])[e]) == len(mirror[e]), e
+
+        sact = rng.random(E) < 0.8
+        t_src = jnp.asarray(now[src])
+        st_src = jnp.asarray(steps_n[src])
+        l_k, d_k = core.fault_masks(
+            fseed, t_src, st_src, eids, jnp.asarray(loss_e),
+            jnp.asarray(flap_e), flap_period, jnp.asarray(dead_e))
+        l2, d2 = core.fault_masks(
+            fseed, t_src, st_src, eids, jnp.asarray(loss_e),
+            jnp.asarray(flap_e), flap_period, jnp.asarray(dead_e))
+        l_k, d_k = np.asarray(l_k), np.asarray(d_k)
+        np.testing.assert_array_equal(l_k, np.asarray(l2))
+        np.testing.assert_array_equal(d_k, np.asarray(d2))
+        assert not (l_k & d_k).any()
+        np.testing.assert_array_equal(d_k, dead_e)
+        clean = (loss_e == 0) & (flap_e == 0) & ~dead_e
+        assert not l_k[clean].any()
+        assert l_k[(loss_e == 1.0) & ~dead_e].all()
+
+        kill = l_k | d_k
+        send_act = sact & ~kill
+        lat = rng.uniform(0.0, 4.0, E).astype(np.float32)
+        touch = rng.integers(1, 100, E).astype(np.int32)
+        pay = rng.integers(0, 99, (E, 1)).astype(np.int32)
+        sp = core.send_edge(u, jnp.asarray(now)[jnp.asarray(src)],
+                            jnp.asarray(send_act), jnp.asarray(lat),
+                            jnp.asarray(touch), jnp.asarray(pay),
+                            jnp.asarray(src), n)
+        acc = np.asarray(sp.accepted)
+        u.update(sp.rings)
+        for e in range(E):
+            room = len(mirror[e]) < C
+            assert bool(acc[e]) == bool(send_act[e] and room), e
+            if acc[e]:
+                mirror[e].append((now[src[e]] + lat[e], touch[e]))
+        att_tot += sact
+        acc_tot += acc
+        cap_tot += send_act & ~acc
+        loss_tot += sact & l_k
+        dead_tot += sact & d_k
+        sizes = np.array([len(q) for q in mirror])
+        assert np.all(acc_tot == drain_tot + sizes)
+        assert np.all(
+            att_tot == drain_tot + sizes + cap_tot + loss_tot + dead_tot)
+        steps_n += 1
+        carry = u
+
+
+@pytest.mark.parametrize("seed,n,d,C,max_pops,steps", CORE_EDGE_CASES)
+def test_fault_mask_properties_seeded(seed, n, d, C, max_pops, steps):
+    run_fault_mask_sequence(seed, n, d, C, max_pops, steps)
+
+
 if HAVE_HYPOTHESIS:
     @given(
         seed=hyp_st.integers(0, 2**31 - 1),
@@ -698,6 +825,19 @@ if HAVE_HYPOTHESIS:
     def test_shadow_buffer_properties_hypothesis(seed, n, d, C, max_pops,
                                                  steps):
         run_shadow_sequence(seed, n, d, C, max_pops, steps)
+
+    @given(
+        seed=hyp_st.integers(0, 2**31 - 1),
+        n=hyp_st.integers(1, 3),
+        d=hyp_st.integers(1, 4),
+        C=hyp_st.integers(1, 4),
+        max_pops=hyp_st.integers(1, 3),
+        steps=hyp_st.integers(2, 12),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_fault_mask_properties_hypothesis(seed, n, d, C, max_pops,
+                                              steps):
+        run_fault_mask_sequence(seed, n, d, C, max_pops, steps)
 
 
 # ---------------------------------------------------------------------------

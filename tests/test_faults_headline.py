@@ -17,7 +17,7 @@ import pytest
 pytest.importorskip("jax")  # the graphcolor fragments import jax
 
 from repro.core.qos import median_of_process_medians
-from repro.runtime.faults import faulty_host
+from repro.runtime.faults import crashed_host, faulty_host
 from repro.runtime.simulator import SimConfig, Simulator
 from repro.runtime.topologies import make_topology
 from repro.apps.graphcolor import GraphColorApp, GraphColorConfig
@@ -82,3 +82,62 @@ def test_faulty_clique_degrades(headline_runs):
     assert all(u > 0 for u in faulty.updates)
     # and the victims did fall far behind the population median
     assert max(faulty.updates[p] for p in victims) < 0.2 * float(np.median(faulty.updates))
+
+
+# ---------------------------------------------------------------------------
+# The same C4 claim under the crash fault kind (DESIGN.md §14): a crashed
+# host is the harsher regime — its processes stop dead, their neighbors
+# keep sending into dead ducts — and the median must STILL hold.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def crash_runs():
+    topo = make_topology("torus", N)
+    host = topo.n_nodes // 2
+    victims = sorted(set(topo.host_pids(host)))
+    clique = set()
+    for p in victims:
+        clique.update(topo.clique_of(p))
+
+    def run(faults):
+        app = GraphColorApp(GraphColorConfig(n_processes=N, nodes_per_process=1), topology=topo)
+        cfg = SimConfig(
+            duration=0.05,
+            snapshot_warmup=0.05 / 6,
+            snapshot_interval=0.05 / 12,
+            base_latency=550e-6,
+        )
+        return Simulator(app, cfg, faults).run()
+
+    fault_free = run(None)
+    crashed = run(crashed_host(topo, host))
+    return fault_free, crashed, victims, sorted(clique)
+
+
+def test_crash_non_faulty_medians_hold(crash_runs):
+    fault_free, crashed, _victims, clique = crash_runs
+    rest = [p for p in range(N) if p not in clique]
+    for metric in ("simstep_period", "simstep_latency", "delivery_failure_rate"):
+        base = _med(fault_free, range(N), metric)
+        held = _med(crashed, rest, metric)
+        assert held == pytest.approx(base, rel=REST_RTOL), metric
+
+
+def test_crashed_clique_degrades(crash_runs):
+    fault_free, crashed, victims, clique = crash_runs
+    rest = [p for p in range(N) if p not in clique]
+    survivors = [p for p in clique if p not in victims]
+    # crashed processes make zero progress and attribution says why: every
+    # drop beyond the fault-free capacity baseline is a dead-destination kill
+    assert all(crashed.updates[p] == 0 for p in victims)
+    assert crashed.dropped_dead > 0
+    assert crashed.dropped >= crashed.dropped_dead
+    assert crashed.dropped_loss == 0
+    # the crashed host's clique keeps sending into dead ducts: its
+    # survivors' failure rate degrades well past the rest's
+    surv_fail = _med(crashed, survivors, "delivery_failure_rate")
+    rest_fail = _med(crashed, rest, "delivery_failure_rate")
+    assert surv_fail > 1.3 * max(rest_fail, 1e-9)
+    assert surv_fail > 1.3 * _med(fault_free, survivors,
+                                  "delivery_failure_rate")
+    # the rest of the population never stalls
+    assert all(crashed.updates[p] > 0 for p in rest)

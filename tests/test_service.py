@@ -343,3 +343,93 @@ def test_run_service_epochs_and_slo():
                for v in verdicts)
     ts = [r["t_start"] for r in out["qos_timeseries"]]
     assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# App-state carry across service epochs
+# ---------------------------------------------------------------------------
+def _carry_timeline(cfg):
+    return FaultTimeline((
+        TimelineEvent(t=cfg.duration / 3, kind="leave", pid=5),
+        TimelineEvent(t=2 * cfg.duration / 3, kind="join", pid=5),
+    ))
+
+
+def _carry_builder(captured):
+    def build(topology, s, init_state=None):
+        captured.append(init_state)
+        return GraphColorApp(
+            GraphColorConfig(n_processes=topology.n, nodes_per_process=1,
+                             seed=s), topology=topology,
+            initial_state=init_state)
+    return build
+
+
+@pytest.mark.parametrize("engine", ["event", "jax"])
+def test_app_state_carries_across_epochs(engine):
+    """Survivors of a membership change resume from their previous
+    epoch's final state; a departed-then-rejoined pid re-initializes
+    fresh.  Checked functionally on both engine families: the state the
+    epoch-1 builder receives is bit-identical to a standalone epoch-0
+    run's export, re-keyed through the patch pid map."""
+    if engine == "jax":
+        pytest.importorskip("jax")
+    from repro.runtime.engine import run_replicates
+
+    topo = make_topology("torus", 16)
+    cfg = _arrival_cfg()
+    tl = _carry_timeline(cfg)
+    captured = []
+    run = RunConfig(engine=engine, replicates=2)
+    out = run_service(run, _carry_builder(captured), cfg, topo, tl)
+    assert [e["n_procs"] for e in out["epochs"]] == [16, 15, 16]
+
+    # the event path builds one app per replicate, jax one per epoch
+    per_epoch = len(captured) // 3
+    e1, e2 = captured[per_epoch], captured[2 * per_epoch]
+    assert captured[0] is None
+    ep1_seeds = run.seeds(cfg.seed + 7919)
+    ep2_seeds = run.seeds(cfg.seed + 2 * 7919)
+    # epoch 1: every surviving patched pid carried, keyed by replicate seed
+    assert sorted(e1) == sorted(ep1_seeds)
+    for st in e1.values():
+        assert sorted(st) == list(range(15))
+    # epoch 2: rejoined pid 5 is NOT carried — it re-initializes fresh
+    assert sorted(e2) == sorted(ep2_seeds)
+    for st in e2.values():
+        assert sorted(st) == sorted(set(range(16)) - {5})
+
+    # functional carry: epoch-1 initial state == epoch-0 final state
+    ep0_cfg = dataclasses.replace(
+        cfg, duration=cfg.duration / 3,
+        snapshot_warmup=min(cfg.snapshot_warmup, cfg.duration / 3 / 6),
+        seed=cfg.seed, carry_app_state=True)
+    res0 = run_replicates(
+        run, lambda s: GraphColorApp(
+            GraphColorConfig(n_processes=16, nodes_per_process=1, seed=s),
+            topology=topo), ep0_cfg)
+    _, pid_map = patch_topology(topo, {5})
+    for i, s in enumerate(ep1_seeds):
+        want = res0[i].app_state
+        got = e1[s]
+        assert want is not None
+        for orig, patched in pid_map.items():
+            np.testing.assert_array_equal(got[patched]["colors"],
+                                          want[orig]["colors"])
+            np.testing.assert_array_equal(got[patched]["probs"],
+                                          want[orig]["probs"])
+
+
+def test_service_carry_vectorized_layout_parity():
+    """With state carried across epochs, the vectorized layouts must stay
+    a pure implementation detail: edge-major and bucketed-dense service
+    runs agree on the entire output dict, bit for bit."""
+    pytest.importorskip("jax")
+    topo = make_topology("torus", 16)
+    cfg = _arrival_cfg()
+    tl = _carry_timeline(cfg)
+    outs = {}
+    for layout in ("edge", "dense"):
+        run = RunConfig(engine="jax", layout=layout, replicates=2)
+        outs[layout] = run_service(run, _carry_builder([]), cfg, topo, tl)
+    assert outs["edge"] == outs["dense"]
